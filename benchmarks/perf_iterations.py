@@ -1,0 +1,85 @@
+"""§Perf hillclimb driver: re-lower a chosen (arch x shape) pair under a
+named optimization variant and diff the roofline terms vs the baseline
+artifact.
+
+Variants are the hypothesis list of EXPERIMENTS.md §Perf; each maps to
+dasha-config / arch-config overrides applied to the SAME lowering path
+as the baseline sweep, so before/after numbers are apples-to-apples.
+
+    PYTHONPATH=src python -m benchmarks.perf_iterations \
+        --arch llama3-405b --shape train_4k --variant dense_psum
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+# ruff: noqa: E402
+import argparse
+import json
+
+VARIANTS = {
+    # paper-faithful baseline re-run (sanity)
+    "baseline": {},
+    # H-agg: dense psum aggregation instead of sparse all-gather
+    "dense_psum": {"dasha": {"aggregation": "dense_psum"}},
+    # H-K: 4x stronger compression (K/D = 1/256, omega = 255)
+    "ratio_256": {"dasha": {"compression_ratio": 1.0 / 256}},
+    # H-K2: 4x weaker compression (K/D = 1/16, omega = 15)
+    "ratio_16": {"dasha": {"compression_ratio": 1.0 / 16}},
+    # H-full: identity compressor (uncompressed upper bound)
+    "uncompressed": {"dasha": {"compression_ratio": None}},
+    # H-pallas: fused control-variate kernel in the node update
+    "pallas": {"dasha": {"use_pallas": True}},
+    # H-remat: disable layer remat (memory<->compute trade)
+    "no_remat": {"arch": {"remat": False}},
+    # H-block: larger compression block (1 KiB lanes)
+    "block_1024": {"dasha": {"block_size": 1024}},
+    # H-pod: coarse node granularity (multi-pod only)
+    "pod_client": {"dasha": {"data_axes": ("pod",)}},
+    # H-fsdp: replicate params over data (federated-faithful memory
+    # layout; removes the per-node-grad FSDP reshard at a params-sized
+    # HBM cost)
+    "no_fsdp": {"fsdp": False},
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", required=True, choices=sorted(VARIANTS))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="results/perf")
+    args = ap.parse_args()
+
+    from benchmarks.roofline import roofline_terms
+    from repro.launch.dryrun import lower_pair
+
+    ov = VARIANTS[args.variant]
+    rec = lower_pair(args.arch, args.shape, multi_pod=args.multi_pod,
+                     dasha_overrides=ov.get("dasha"),
+                     arch_overrides=ov.get("arch"),
+                     fsdp=ov.get("fsdp", True))
+    rec["variant"] = args.variant
+    if rec.get("status") == "ok":
+        chips = 512 if args.multi_pod else 256
+        rec["roofline"] = roofline_terms(rec, chips)
+    os.makedirs(args.out, exist_ok=True)
+    mesh_tag = "2x16x16" if args.multi_pod else "16x16"
+    path = os.path.join(
+        args.out, f"{args.variant}__{args.arch}__{args.shape}__{mesh_tag}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    r = rec.get("roofline", {})
+    print(f"{args.arch} x {args.shape} [{args.variant}] -> "
+          f"compute={r.get('compute_s', float('nan')):.4f}s "
+          f"memory={r.get('memory_s', float('nan')):.4f}s "
+          f"collective={r.get('collective_s', float('nan')):.4f}s "
+          f"dominant={r.get('dominant')} "
+          f"(compile {rec.get('compile_s')}s)")
+
+
+if __name__ == "__main__":
+    main()

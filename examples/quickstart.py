@@ -1,0 +1,44 @@
+"""Quickstart: DASHA-PP on a 100-node federated logistic regression in
+~40 lines (the paper's §A setting, shrunk to run in seconds on CPU).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (LogisticSigmoidProblem, RandK, SNice, dasha_pp_page,
+                        make_synthetic_classification, theory)
+
+# --- a federated problem: n nodes, each holding its own data shard ----
+n_nodes, m_per_node, d = 50, 24, 120
+feats, labels = make_synthetic_classification(
+    jax.random.key(0), n_nodes, m_per_node, d)
+problem = LogisticSigmoidProblem(feats, labels)
+
+# --- DASHA-PP-PAGE: compression + partial participation + VR ----------
+compressor = RandK(k=d // 20)                  # each node uploads 5% of d
+sampler = SNice(n=n_nodes, s=10)               # 20% of nodes per round
+L, L_hat, L_max, L_sigma = problem.smoothness()
+consts = theory.ProblemConstants(L=L, L_hat=L_hat, L_max=L_max,
+                                 L_sigma=L_sigma, n=n_nodes,
+                                 m=m_per_node, d=d)
+hp = theory.dasha_pp_page(consts, compressor.omega(d), sampler.p_a,
+                          sampler.p_aa, batch_size=2)
+algo = dasha_pp_page(problem, compressor, sampler,
+                     gamma=hp.gamma * 512,     # theory gamma, finetuned over {2^i}
+                     a=hp.a, b=hp.b, p_page=hp.p_page, batch_size=2)
+
+# --- run ---------------------------------------------------------------
+state, metrics = jax.jit(
+    lambda key: algo.run(key, jnp.zeros(d), num_rounds=1500))(
+        jax.random.key(1))
+
+g = np.asarray(metrics.grad_norm_sq)
+bits = float(np.sum(np.asarray(metrics.bits_sent))) / n_nodes / 1e6
+print(f"rounds:            1500")
+print(f"||grad f||^2:      {g[0]:.3e} -> {g[-1]:.3e}")
+print(f"uplink per node:   {bits:.2f} Mbit "
+      f"(vs {1500 * 32 * d * sampler.p_a / 1e6:.2f} Mbit uncompressed)")
+assert g[-1] < 1e-2 * g[0], "did not converge"
+print("OK: compressed, partially-participating, variance-reduced training")

@@ -1,0 +1,50 @@
+"""Serving example: batched greedy decoding with KV-cache ring buffers
+through the DecodeServer (continuous-batching inner loop).
+
+    PYTHONPATH=src python examples/serve_decode.py [--arch xlstm-350m]
+
+Uses the reduced smoke config of the chosen architecture so it runs on
+CPU; the same serve_step is what the decode dry-run shapes lower on the
+production mesh.
+"""
+import argparse
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--new-tokens", type=int, default=12)
+    args = ap.parse_args()
+
+    import jax
+    import numpy as np
+    from repro.models import Model, get_smoke_config
+    from repro.serving.decode import DecodeServer, Request
+
+    cfg = get_smoke_config(args.arch)
+    if not cfg.supports_decode:
+        raise SystemExit(f"{args.arch} is encoder-only: no decode")
+    model = Model(cfg)
+    params = model.init_params(jax.random.key(0))
+    server = DecodeServer(model, params, batch_size=args.batch,
+                          max_seq_len=64)
+
+    rng = np.random.default_rng(0)
+    requests = [
+        Request(uid=i, prompt=rng.integers(1, cfg.vocab_size, 5).tolist(),
+                max_new_tokens=args.new_tokens)
+        for i in range(args.batch * 2)]
+    t0 = time.time()
+    done = server.run(requests)
+    dt = time.time() - t0
+    total = sum(len(r.generated) for r in done)
+    for r in done[:4]:
+        print(f"req {r.uid}: prompt={r.prompt} -> {r.generated}")
+    print(f"\n{total} tokens across {len(done)} requests in {dt:.2f}s "
+          f"({total/dt:.1f} tok/s on CPU, batch={args.batch})")
+
+
+if __name__ == "__main__":
+    main()

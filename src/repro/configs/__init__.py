@@ -1,0 +1,12 @@
+"""Per-architecture configs (one file per assigned architecture).
+
+Each module exposes ``CONFIG: ArchConfig`` with the exact assigned
+hyperparameters (source cited in ``source``) and inherits a reduced
+``.smoke()`` variant for CPU tests.
+"""
+from repro.models.registry import (ARCH_IDS, INPUT_SHAPES, InputShape,
+                                   get_config, get_smoke_config,
+                                   pair_supported)
+
+__all__ = ["ARCH_IDS", "INPUT_SHAPES", "InputShape", "get_config",
+           "get_smoke_config", "pair_supported"]

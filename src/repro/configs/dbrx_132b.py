@@ -1,0 +1,20 @@
+"""dbrx-132b [moe]: 40L d_model=6144 48H (GQA kv=8) d_ff=10752
+vocab=100352, MoE 16 experts top-4 (fine-grained)
+[hf:databricks/dbrx-base]."""
+from repro.models.common import ArchConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="dbrx-132b",
+    arch_type="moe",
+    num_layers=40,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    d_ff=10752,
+    vocab_size=100352,
+    head_dim=128,
+    rope_theta=500_000.0,
+    long_context_window=4096,     # long_500k via SWA variant
+    moe=MoEConfig(num_experts=16, experts_per_token=4, d_expert=10752),
+    source="hf:databricks/dbrx-base",
+)

@@ -1,0 +1,21 @@
+"""hubert-xlarge [audio]: 48L d_model=1280 16H (kv=16 = MHA) d_ff=5120
+vocab=504 — encoder-only transformer backbone; the mel-spectrogram +
+conv feature extractor frontend is a stub per the assignment carve-out:
+input_specs() provides frame embeddings (B, T, d_model)
+[arXiv:2106.07447]."""
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="hubert-xlarge",
+    arch_type="audio",
+    num_layers=48,
+    d_model=1280,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=5120,
+    vocab_size=504,
+    head_dim=80,
+    is_encoder=True,
+    frontend="audio",
+    source="arXiv:2106.07447",
+)

@@ -1,0 +1,21 @@
+"""hymba-1.5b [hybrid]: 32L d_model=1600 25H (GQA kv=5) d_ff=5504
+vocab=32001, ssm_state=16 — parallel attention + mamba heads fused per
+layer; sliding-window attention (most layers in the paper use SWA),
+making long_500k native [arXiv:2411.13676]."""
+from repro.models.common import ArchConfig, SSMConfig
+
+CONFIG = ArchConfig(
+    name="hymba-1.5b",
+    arch_type="hybrid",
+    num_layers=32,
+    d_model=1600,
+    num_heads=25,
+    num_kv_heads=5,
+    d_ff=5504,
+    vocab_size=32001,
+    head_dim=64,
+    attention_window=1024,
+    ssm=SSMConfig(state_dim=16, expand=2),
+    scan_layers=True,
+    source="arXiv:2411.13676",
+)

@@ -1,0 +1,18 @@
+"""llama3-405b [dense]: 126L d_model=16384 128H (GQA kv=8) d_ff=53248
+vocab=128256 — GQA, 128k vocab [arXiv:2407.21783]."""
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llama3-405b",
+    arch_type="dense",
+    num_layers=126,
+    d_model=16384,
+    num_heads=128,
+    num_kv_heads=8,
+    d_ff=53248,
+    vocab_size=128256,
+    head_dim=128,
+    rope_theta=500_000.0,
+    long_context_window=4096,     # long_500k via SWA variant
+    source="arXiv:2407.21783",
+)

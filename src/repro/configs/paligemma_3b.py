@@ -1,0 +1,23 @@
+"""paligemma-3b [vlm]: 18L d_model=2048 8H (GQA kv=1 = MQA) d_ff=16384
+vocab=257216 — SigLIP vision tower + projector are a stub providing
+patch embeddings (B, 256, d_model); the gemma decoder (this config) is
+real.  Prefix-LM attention: full over the image prefix, causal over
+text [arXiv:2407.07726]."""
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="paligemma-3b",
+    arch_type="vlm",
+    num_layers=18,
+    d_model=2048,
+    num_heads=8,
+    num_kv_heads=1,
+    d_ff=16384,
+    vocab_size=257216,
+    head_dim=256,
+    frontend="vision",
+    frontend_tokens=256,
+    tie_embeddings=True,
+    long_context_window=4096,     # long_500k via SWA variant
+    source="arXiv:2407.07726",
+)

@@ -1,0 +1,18 @@
+"""xlstm-350m [ssm]: 24L d_model=1024 4H d_ff=0 vocab=50304 — sLSTM +
+mLSTM blocks (every 4th block sLSTM, rest mLSTM; blocks carry their own
+up/down projections, hence d_ff=0) [arXiv:2405.04517]."""
+from repro.models.common import ArchConfig, XLSTMConfig
+
+CONFIG = ArchConfig(
+    name="xlstm-350m",
+    arch_type="ssm",
+    num_layers=24,
+    d_model=1024,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=0,
+    vocab_size=50304,
+    xlstm=XLSTMConfig(slstm_every=4),
+    scan_layers=False,            # mixed block types -> unrolled
+    source="arXiv:2405.04517",
+)

@@ -1,0 +1,48 @@
+"""repro.core — the paper's contribution: the DASHA-PP method family.
+
+Layout:
+    compressors.py    unbiased/biased communication compressors (Def. 1)
+    participation.py  Assumption-8 participation samplers
+    problems.py       distributed problems (paper §A experiments)
+    theory.py         theorem-exact hyperparameters
+    dasha_pp.py       Algorithm 1 (+ Algs. 2-5) and DASHA baselines
+    marina.py         MARINA baseline
+    frecon.py         FRECON baseline
+    sharded.py        SPMD production runtime (shard_map over the mesh)
+    sync_mvr.py       DASHA-PP-SYNC-MVR (appendix G)
+"""
+from repro.core.compressors import (Composed, Compressor, Identity,
+                                    NaturalCompression, RandK,
+                                    RandomDithering, TopK, make_compressor,
+                                    randk_for_ratio)
+from repro.core.dasha_pp import (DashaPP, DashaPPConfig, DashaPPState,
+                                 StepMetrics, dasha, dasha_mvr, dasha_page,
+                                 dasha_pp, dasha_pp_finite_mvr, dasha_pp_mvr,
+                                 dasha_pp_page)
+from repro.core.frecon import Frecon, FreconConfig
+from repro.core.marina import Marina, MarinaConfig
+from repro.core.participation import (FullParticipation, Independent,
+                                      ParticipationSampler, SNice,
+                                      make_sampler)
+from repro.core.problems import (DistributedProblem, LogisticSigmoidProblem,
+                                 NonconvexSoftmaxProblem, QuadraticProblem,
+                                 make_synthetic_classification,
+                                 sample_batch_indices)
+from repro.core.sync_mvr import DashaPPSyncMVR, SyncMVRConfig, dasha_pp_sync_mvr
+from repro.core import theory
+
+__all__ = [
+    "Compressor", "Identity", "RandK", "TopK", "NaturalCompression",
+    "RandomDithering", "Composed", "make_compressor", "randk_for_ratio",
+    "ParticipationSampler", "SNice", "Independent", "FullParticipation",
+    "make_sampler",
+    "DistributedProblem", "LogisticSigmoidProblem", "NonconvexSoftmaxProblem",
+    "QuadraticProblem", "make_synthetic_classification",
+    "sample_batch_indices",
+    "DashaPP", "DashaPPConfig", "DashaPPState", "StepMetrics",
+    "dasha", "dasha_mvr", "dasha_page", "dasha_pp", "dasha_pp_page",
+    "dasha_pp_finite_mvr", "dasha_pp_mvr",
+    "Marina", "MarinaConfig", "Frecon", "FreconConfig",
+    "DashaPPSyncMVR", "SyncMVRConfig", "dasha_pp_sync_mvr",
+    "theory",
+]

@@ -1,0 +1,285 @@
+"""Unbiased (and biased, for baselines) communication compressors.
+
+Implements Definition 1 of the paper: a stochastic mapping
+``C: R^d -> R^d`` with ``E[C(x)] = x`` and
+``E[||C(x) - x||^2] <= omega * ||x||^2``.
+
+Every compressor is a pure function of ``(key, x)`` so that Assumption 7
+(independence across nodes) is realized by folding the node index into
+the PRNG key.  Compressors operate on **flat 1-D vectors**; pytrees are
+handled by :mod:`repro.core.flatten`.
+
+Each compressor exposes:
+
+* ``omega(d)``            – the variance parameter of Definition 1,
+* ``compress(key, x)``    – dense d-vector -> dense d-vector (zeros kept),
+* ``compress_sparse(key, x)`` – -> (values, indices) when a sparse wire
+  format exists (RandK/TopK); used by the sharded runtime to send
+  ``O(K)`` instead of ``O(d)`` bytes,
+* ``wire_bits(d)``        – bits transmitted per message, used by the
+  communication-complexity benchmarks (Tables 1-2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+Array = jax.Array
+
+_FLOAT_BITS = 32
+
+
+def _index_bits(d: int) -> float:
+    """Bits per transmitted coordinate index: ceil(log2 d)."""
+    import math
+
+    return float(max(1, math.ceil(math.log2(max(d, 2)))))
+
+
+class Compressor:
+    """Base interface (see module docstring)."""
+
+    name: str = "base"
+
+    def omega(self, d: int) -> float:
+        raise NotImplementedError
+
+    def compress(self, key: Array, x: Array) -> Array:
+        raise NotImplementedError
+
+    def wire_bits(self, d: int) -> float:
+        raise NotImplementedError
+
+    # Sparse wire format is optional.
+    def compress_sparse(self, key: Array, x: Array) -> Tuple[Array, Array]:
+        raise NotImplementedError(f"{self.name} has no sparse wire format")
+
+    def __call__(self, key: Array, x: Array) -> Array:
+        return self.compress(key, x)
+
+
+@dataclasses.dataclass(frozen=True)
+class Identity(Compressor):
+    """No compression: C(x) = x, omega = 0."""
+
+    name: str = "identity"
+
+    def omega(self, d: int) -> float:
+        return 0.0
+
+    def compress(self, key: Array, x: Array) -> Array:
+        del key
+        return x
+
+    def wire_bits(self, d: int) -> float:
+        return d * _FLOAT_BITS
+
+
+@dataclasses.dataclass(frozen=True)
+class RandK(Compressor):
+    """Definition 5: keep K uniformly-random coordinates (w/o replacement),
+    scaled by d/K.  ``C in U(d/K - 1)`` (Theorem 6)."""
+
+    k: int
+    name: str = "randk"
+
+    def omega(self, d: int) -> float:
+        return d / self.k - 1.0
+
+    def _indices(self, key: Array, d: int) -> Array:
+        # Without replacement.  For K << d a permutation is wasteful but
+        # d here is a per-shard flat size (<= a few M) and permutation is
+        # O(d) memory — acceptable and exactly uniform.
+        return jax.random.permutation(key, d)[: self.k]
+
+    def compress(self, key: Array, x: Array) -> Array:
+        d = x.shape[-1]
+        k = min(self.k, d)
+        if k == d:
+            return x
+        idx = self._indices(key, d)
+        scale = d / k
+        out = jnp.zeros_like(x)
+        return out.at[idx].set(x[idx] * scale)
+
+    def compress_sparse(self, key: Array, x: Array) -> Tuple[Array, Array]:
+        d = x.shape[-1]
+        k = min(self.k, d)
+        idx = self._indices(key, d)
+        return x[idx] * (d / k), idx
+
+    def wire_bits(self, d: int) -> float:
+        k = min(self.k, d)
+        return k * (_FLOAT_BITS + _index_bits(d))
+
+
+@dataclasses.dataclass(frozen=True)
+class TopK(Compressor):
+    """Greedy Top-K by magnitude.  *Biased* (contractive) — included as a
+    baseline only; not admissible for DASHA-PP's unbiasedness analysis.
+    Satisfies ||C(x)-x||^2 <= (1 - k/d)||x||^2."""
+
+    k: int
+    name: str = "topk"
+
+    def omega(self, d: int) -> float:  # contraction factor, not Def.1 omega
+        return 1.0 - self.k / d
+
+    def compress(self, key: Array, x: Array) -> Array:
+        del key
+        d = x.shape[-1]
+        k = min(self.k, d)
+        _, idx = jax.lax.top_k(jnp.abs(x), k)
+        out = jnp.zeros_like(x)
+        return out.at[idx].set(x[idx])
+
+    def compress_sparse(self, key: Array, x: Array) -> Tuple[Array, Array]:
+        del key
+        d = x.shape[-1]
+        k = min(self.k, d)
+        _, idx = jax.lax.top_k(jnp.abs(x), k)
+        return x[idx], idx
+
+    def wire_bits(self, d: int) -> float:
+        k = min(self.k, d)
+        return k * (_FLOAT_BITS + _index_bits(d))
+
+
+@dataclasses.dataclass(frozen=True)
+class NaturalCompression(Compressor):
+    """Natural compression (Horvath et al., 2019a): stochastic rounding of
+    the mantissa to a power of two.  ``omega = 1/8``; sends exponent+sign
+    (~9 bits/coord)."""
+
+    name: str = "natural"
+
+    def omega(self, d: int) -> float:
+        return 0.125
+
+    def compress(self, key: Array, x: Array) -> Array:
+        ax = jnp.abs(x)
+        safe = jnp.where(ax > 0, ax, 1.0)
+        e = jnp.floor(jnp.log2(safe))
+        lo = jnp.exp2(e)
+        # p(up) chosen for unbiasedness: x = p*2^{e+1} + (1-p)*2^e
+        p_up = (safe - lo) / lo
+        u = jax.random.uniform(key, x.shape)
+        mag = jnp.where(u < p_up, 2.0 * lo, lo)
+        out = jnp.sign(x) * mag
+        return jnp.where(ax > 0, out, 0.0).astype(x.dtype)
+
+    def wire_bits(self, d: int) -> float:
+        return d * 9.0
+
+
+@dataclasses.dataclass(frozen=True)
+class RandomDithering(Compressor):
+    """QSGD-style random dithering with ``s`` levels (Alistarh et al. 2017).
+
+    C(x) = ||x||_2 * sign(x) * xi(x, s) with xi the stochastically rounded
+    level.  omega <= min(d/s^2, sqrt(d)/s)."""
+
+    s: int = 4
+    name: str = "dithering"
+
+    def omega(self, d: int) -> float:
+        return min(d / self.s**2, jnp.sqrt(d).item() / self.s)
+
+    def compress(self, key: Array, x: Array) -> Array:
+        norm = jnp.linalg.norm(x)
+        safe_norm = jnp.where(norm > 0, norm, 1.0)
+        level = jnp.abs(x) / safe_norm * self.s
+        floor = jnp.floor(level)
+        p_up = level - floor
+        u = jax.random.uniform(key, x.shape)
+        q = floor + (u < p_up)
+        out = norm * jnp.sign(x) * q / self.s
+        return jnp.where(norm > 0, out, 0.0).astype(x.dtype)
+
+    def wire_bits(self, d: int) -> float:
+        import math
+
+        return _FLOAT_BITS + d * (1 + math.ceil(math.log2(self.s + 1)))
+
+
+@dataclasses.dataclass(frozen=True)
+class Composed(Compressor):
+    """C2 ∘ C1 with independent randomness.
+
+    If C1 in U(w1) and C2 in U(w2) then C2∘C1 in U(w1 + w2 + w1*w2).
+    Used beyond-paper: RandK + Natural to cut value bytes 32->9."""
+
+    inner: Compressor
+    outer: Compressor
+    name: str = "composed"
+
+    def omega(self, d: int) -> float:
+        w1, w2 = self.inner.omega(d), self.outer.omega(d)
+        return w1 + w2 + w1 * w2
+
+    def compress(self, key: Array, x: Array) -> Array:
+        k1, k2 = jax.random.split(key)
+        return self.outer.compress(k2, self.inner.compress(k1, x))
+
+    def compress_sparse(self, key: Array, x: Array) -> Tuple[Array, Array]:
+        k1, k2 = jax.random.split(key)
+        vals, idx = self.inner.compress_sparse(k1, x)
+        return self.outer.compress(k2, vals), idx
+
+    def wire_bits(self, d: int) -> float:
+        if isinstance(self.inner, (RandK, TopK)):
+            k = min(self.inner.k, d)
+            return k * _index_bits(d) + self.outer.wire_bits(k)
+        return self.outer.wire_bits(d)
+
+
+@dataclasses.dataclass(frozen=True)
+class PartialParticipationCompressor(Compressor):
+    """The C^{p_a} construction of paper Section 5, eq. after (6):
+
+        C^{p_a}(x) = (1/p_a) C(x)  w.p. p_a,   0  w.p. 1 - p_a.
+
+    If C in U(w) then C^{p_a} in U((w+1)/p_a - 1) (paper footnote 3).
+    Only valid for the *gradient setting* DASHA (single control variate)."""
+
+    inner: Compressor
+    p_a: float
+    name: str = "pp_wrapper"
+
+    def omega(self, d: int) -> float:
+        return (self.inner.omega(d) + 1.0) / self.p_a - 1.0
+
+    def compress(self, key: Array, x: Array) -> Array:
+        k1, k2 = jax.random.split(key)
+        participate = jax.random.bernoulli(k1, self.p_a)
+        return jnp.where(participate, self.inner.compress(k2, x) / self.p_a, 0.0)
+
+    def wire_bits(self, d: int) -> float:
+        return self.p_a * self.inner.wire_bits(d)
+
+
+def randk_for_ratio(d: int, ratio: float) -> RandK:
+    """RandK with K = ceil(ratio * d), clipped to [1, d]."""
+    import math
+
+    return RandK(k=max(1, min(d, math.ceil(ratio * d))))
+
+
+_REGISTRY = {
+    "identity": lambda d, **kw: Identity(),
+    "randk": lambda d, **kw: RandK(k=kw.get("k", max(1, d // 100))),
+    "topk": lambda d, **kw: TopK(k=kw.get("k", max(1, d // 100))),
+    "natural": lambda d, **kw: NaturalCompression(),
+    "dithering": lambda d, **kw: RandomDithering(s=kw.get("s", 4)),
+}
+
+
+def make_compressor(name: str, d: int, **kwargs) -> Compressor:
+    if name not in _REGISTRY:
+        raise ValueError(f"unknown compressor {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name](d, **kwargs)

@@ -1,0 +1,272 @@
+"""DASHA-PP (paper Algorithm 1) and its sub-algorithms (Algs. 2-5).
+
+One generic engine implements Algorithm 1; the four ``k_i`` rules plug in:
+
+* ``gradient``    — Alg. 2 (DASHA-PP)
+* ``page``        — Alg. 3 (DASHA-PP-PAGE, finite-sum)
+* ``finite_mvr``  — Alg. 4 (DASHA-PP-FINITE-MVR, finite-sum)
+* ``mvr``         — Alg. 5 (DASHA-PP-MVR, stochastic)
+
+Baselines DASHA / DASHA-MVR (Algs. 6-7) are the exact ``p_a = 1``
+specialization and are exposed as constructors.
+
+The reference implementation here simulates all ``n`` nodes in-process
+with ``vmap`` (paper §A does the same with multiprocessing); the
+SPMD/sharded production version lives in :mod:`repro.core.sharded`.
+
+Every step is jit-compatible; all randomness flows from an explicit key.
+Per Assumption 7, node compressors are independent: node ``i`` uses
+``fold_in(round_key, i)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compressors import Compressor
+from repro.core.participation import (FullParticipation, ParticipationSampler)
+from repro.core.problems import DistributedProblem, sample_batch_indices
+
+Array = jax.Array
+
+
+class DashaPPState(NamedTuple):
+    x: Array            # (d,)   model point x^t
+    g: Array            # (d,)   server estimator g^t
+    g_i: Array          # (n, d) node estimators
+    h_i: Array          # (n, d) node gradient trackers
+    h_ij: Optional[Array]  # (n, m, d) component trackers (finite_mvr) or None
+    step: Array         # ()
+
+
+class StepMetrics(NamedTuple):
+    loss: Array
+    grad_norm_sq: Array        # ||∇f(x^t)||^2, the paper's plotted quantity
+    bits_sent: Array           # total uplink bits this round (all nodes)
+    grad_oracle_calls: Array   # (stochastic) gradient evaluations this round
+    participants: Array
+    x_norm: Array              # ||x^t|| — detects escape to flat tails
+
+
+@dataclasses.dataclass(frozen=True)
+class DashaPPConfig:
+    variant: str                      # gradient | page | finite_mvr | mvr
+    gamma: float
+    a: float                          # compressor momentum
+    b: float                          # VR momentum
+    p_page: float = 1.0               # page only
+    batch_size: int = 1               # page / finite_mvr / mvr
+    replace: bool = True              # batch sampling w/ replacement (Alg.3)
+
+    def __post_init__(self):
+        if self.variant not in ("gradient", "page", "finite_mvr", "mvr"):
+            raise ValueError(f"unknown variant {self.variant!r}")
+
+
+class DashaPP:
+    """Engine for Algorithm 1.  Construct, then ``state = init(key, x0)``
+    and ``state, metrics = step(key, state)`` (both jit-able)."""
+
+    def __init__(self, problem: DistributedProblem, compressor: Compressor,
+                 sampler: ParticipationSampler, config: DashaPPConfig):
+        if sampler.n != problem.n:
+            raise ValueError("sampler.n != problem.n")
+        self.problem = problem
+        self.compressor = compressor
+        self.sampler = sampler
+        self.cfg = config
+
+    # ------------------------------------------------------------------
+    def init(self, key: Array, x0: Array,
+             b_init: Optional[int] = None) -> DashaPPState:
+        """Line 2: g_i^0 = h_i^0 = ∇f_i(x^0) (gradient/finite settings) or a
+        B_init-sample estimate (Corollary 3, stochastic setting)."""
+        p = self.problem
+        if self.cfg.variant == "mvr" and b_init is not None:
+            idx = sample_batch_indices(key, p.n, p.m, b_init, replace=True)
+            h0 = p.batch_grad(x0, idx)
+        else:
+            h0 = p.grad(x0)
+        h_ij = None
+        if self.cfg.variant == "finite_mvr":
+            # (n, m, d) component trackers: h_ij^0 = ∇f_ij(x^0)
+            all_idx = jnp.broadcast_to(jnp.arange(p.m)[None, :], (p.n, p.m))
+            h_ij = p.component_grads(x0, all_idx)
+        return DashaPPState(
+            x=x0, g=jnp.mean(h0, axis=0), g_i=h0, h_i=h0, h_ij=h_ij,
+            step=jnp.zeros((), jnp.int32))
+
+    # ------------------------------------------------------------------
+    def _k_gradient(self, key, x_new, x_old, state):
+        p, b = self.problem, self.cfg.b
+        gn, go = p.grad(x_new), p.grad(x_old)
+        k = gn - go - b * (state.h_i - go)
+        calls = jnp.asarray(2 * p.m * p.n)  # full local grads at two points
+        return k, None, calls
+
+    def _k_page(self, key, x_new, x_old, state):
+        p, cfg = self.problem, self.cfg
+        k_coin, k_batch = jax.random.split(key)
+        # One global coin (paper: "with probability p_page on all
+        # participating nodes" — the switch is shared).
+        coin = jax.random.bernoulli(k_coin, cfg.p_page)
+        idx = sample_batch_indices(k_batch, p.n, p.m, cfg.batch_size,
+                                   replace=cfg.replace)
+        gn, go = p.grad(x_new), p.grad(x_old)
+        k_full = gn - go - (cfg.b / cfg.p_page) * (state.h_i - go)
+        bn = p.batch_grad(x_new, idx)
+        bo = p.batch_grad(x_old, idx)
+        k_mini = bn - bo
+        k = jnp.where(coin, k_full, k_mini)
+        calls = jnp.where(coin, 2 * p.m * p.n, 2 * cfg.batch_size * p.n)
+        return k, None, calls
+
+    def _k_finite_mvr(self, key, x_new, x_old, state):
+        p, cfg = self.problem, self.cfg
+        B, m = cfg.batch_size, p.m
+        idx = sample_batch_indices(key, p.n, m, B, replace=False)  # Alg.4: w/o repl.
+        gn = p.component_grads(x_new, idx)            # (n, B, d)
+        go = p.component_grads(x_old, idx)
+        h_sel = jnp.take_along_axis(state.h_ij, idx[..., None], axis=1)
+        k_sel = (m / B) * (gn - go - cfg.b * (h_sel - go))   # (n, B, d)
+        # Scatter back to (n, m, d); untouched components are zero.
+        k_ij = jnp.zeros_like(state.h_ij)
+        k_ij = jax.vmap(lambda kz, ii, kv: kz.at[ii].set(kv))(k_ij, idx, k_sel)
+        k = jnp.mean(k_ij, axis=1)                    # (n, d)
+        calls = jnp.asarray(2 * B * p.n)
+        return k, k_ij, calls
+
+    def _k_mvr(self, key, x_new, x_old, state):
+        p, cfg = self.problem, self.cfg
+        B = cfg.batch_size
+        idx = sample_batch_indices(key, p.n, p.m, B, replace=True)
+        bn = p.batch_grad(x_new, idx)   # same sample at both points (Alg.5)
+        bo = p.batch_grad(x_old, idx)
+        k = bn - bo - cfg.b * (state.h_i - bo)
+        calls = jnp.asarray(2 * B * p.n)
+        return k, None, calls
+
+    # ------------------------------------------------------------------
+    def step(self, key: Array, state: DashaPPState
+             ) -> Tuple[DashaPPState, StepMetrics]:
+        p, cfg, C = self.problem, self.cfg, self.compressor
+        pa = self.sampler.p_a
+        k_part, k_oracle, k_comp = jax.random.split(key, 3)
+
+        # Lines 4-5: x^{t+1} = x^t - gamma * g^t; broadcast.
+        x_new = state.x - cfg.gamma * state.g
+
+        # Line 9: k_i^{t+1} per variant (computed for every node; only
+        # participating nodes *use* it — see masking note in DESIGN.md §3).
+        k_fn = getattr(self, f"_k_{cfg.variant}")
+        k_i, k_ij, calls = k_fn(k_oracle, x_new, state.x, state)
+
+        # Lines 7-8: participation mask.
+        mask = self.sampler.sample(k_part)             # (n,) bool
+        maskf = mask[:, None].astype(state.x.dtype)
+
+        # Line 10: h_i^{t+1} = h_i^t + k_i/p_a (participating only).
+        h_new = state.h_i + maskf * (k_i / pa)
+        h_ij_new = None
+        if cfg.variant == "finite_mvr":
+            h_ij_new = state.h_ij + maskf[:, :, None] * (k_ij / pa)
+
+        # Line 11: m_i = C_i(k_i/p_a - (a/p_a)(g_i - h_i^t)).
+        payload = k_i / pa - (cfg.a / pa) * (state.g_i - state.h_i)
+        node_keys = jax.vmap(lambda i: jax.random.fold_in(k_comp, i))(
+            jnp.arange(p.n))
+        m_i = jax.vmap(C.compress)(node_keys, payload)
+        m_i = maskf * m_i
+
+        # Lines 12, 19.
+        g_i_new = state.g_i + m_i
+        g_new = state.g + jnp.mean(m_i, axis=0)
+
+        n_part = jnp.sum(mask)
+        metrics = StepMetrics(
+            loss=p.loss(state.x),
+            grad_norm_sq=jnp.sum(p.full_grad(state.x) ** 2),
+            bits_sent=n_part * C.wire_bits(p.d),
+            grad_oracle_calls=calls,
+            participants=n_part,
+            x_norm=jnp.linalg.norm(state.x),
+        )
+        new_state = DashaPPState(x=x_new, g=g_new, g_i=g_i_new, h_i=h_new,
+                                 h_ij=h_ij_new, step=state.step + 1)
+        return new_state, metrics
+
+    # ------------------------------------------------------------------
+    def run(self, key: Array, x0: Array, num_rounds: int,
+            b_init: Optional[int] = None) -> Tuple[DashaPPState, StepMetrics]:
+        """jit-compiled lax.scan over ``num_rounds`` rounds; returns the final
+        state and stacked per-round metrics."""
+        init_key, run_key = jax.random.split(key)
+        state = self.init(init_key, x0, b_init=b_init)
+
+        def body(carry, i):
+            st = carry
+            st, met = self.step(jax.random.fold_in(run_key, i), st)
+            return st, met
+
+        return jax.lax.scan(body, state, jnp.arange(num_rounds))
+
+
+# ----------------------------------------------------------------------
+# Named constructors (the paper's method zoo)
+# ----------------------------------------------------------------------
+
+def dasha_pp(problem, compressor, sampler, *, gamma, a, b) -> DashaPP:
+    """DASHA-PP, gradient setting (Alg. 1 + Alg. 2, Theorem 2)."""
+    return DashaPP(problem, compressor, sampler,
+                   DashaPPConfig("gradient", gamma=gamma, a=a, b=b))
+
+
+def dasha_pp_page(problem, compressor, sampler, *, gamma, a, b, p_page,
+                  batch_size) -> DashaPP:
+    """DASHA-PP-PAGE (Alg. 1 + Alg. 3, Theorem 3)."""
+    return DashaPP(problem, compressor, sampler,
+                   DashaPPConfig("page", gamma=gamma, a=a, b=b,
+                                 p_page=p_page, batch_size=batch_size))
+
+
+def dasha_pp_finite_mvr(problem, compressor, sampler, *, gamma, a, b,
+                        batch_size) -> DashaPP:
+    """DASHA-PP-FINITE-MVR (Alg. 1 + Alg. 4, Theorem 7)."""
+    return DashaPP(problem, compressor, sampler,
+                   DashaPPConfig("finite_mvr", gamma=gamma, a=a, b=b,
+                                 batch_size=batch_size))
+
+
+def dasha_pp_mvr(problem, compressor, sampler, *, gamma, a, b,
+                 batch_size) -> DashaPP:
+    """DASHA-PP-MVR (Alg. 1 + Alg. 5, Theorem 4)."""
+    return DashaPP(problem, compressor, sampler,
+                   DashaPPConfig("mvr", gamma=gamma, a=a, b=b,
+                                 batch_size=batch_size))
+
+
+def dasha(problem, compressor, *, gamma, a) -> DashaPP:
+    """DASHA (Alg. 6) == DASHA-PP with p_a = 1 and b = 1 (so h_i^{t+1}
+    tracks ∇f_i(x^{t+1}) exactly and line 11 reduces to Alg. 6 line 7)."""
+    sampler = FullParticipation(n=problem.n)
+    return DashaPP(problem, compressor, sampler,
+                   DashaPPConfig("gradient", gamma=gamma, a=a, b=1.0))
+
+
+def dasha_mvr(problem, compressor, *, gamma, a, b, batch_size) -> DashaPP:
+    """DASHA-MVR (Alg. 7) == DASHA-PP-MVR with p_a = 1."""
+    sampler = FullParticipation(n=problem.n)
+    return DashaPP(problem, compressor, sampler,
+                   DashaPPConfig("mvr", gamma=gamma, a=a, b=b,
+                                 batch_size=batch_size))
+
+
+def dasha_page(problem, compressor, *, gamma, a, b, p_page, batch_size) -> DashaPP:
+    """DASHA-PAGE == DASHA-PP-PAGE with p_a = 1."""
+    sampler = FullParticipation(n=problem.n)
+    return DashaPP(problem, compressor, sampler,
+                   DashaPPConfig("page", gamma=gamma, a=a, b=b,
+                                 p_page=p_page, batch_size=batch_size))

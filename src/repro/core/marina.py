@@ -1,0 +1,112 @@
+"""MARINA baseline (Gorbunov et al., 2021) with optional partial
+participation, as compared against in paper Figs. 2-5.
+
+MARINA alternates: with probability ``p`` a *synchronization* round where
+every node sends its full, uncompressed gradient (this is exactly the
+limitation DASHA-PP removes — MARINA cannot support PP on sync rounds,
+paper Table 1 note (a)); otherwise nodes send compressed gradient
+differences.
+
+Partial-participation adaptation used in the paper's experimental
+comparison: on non-sync rounds only the sampled nodes contribute, with
+the unbiased 1/p_a scaling; sync rounds still require all nodes.
+
+The stochastic variant replaces full local gradients by minibatch
+estimates (no local variance reduction -> converges to a noise
+neighbourhood; this is the qualitative gap in Figs. 4-5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compressors import Compressor
+from repro.core.dasha_pp import StepMetrics
+from repro.core.participation import FullParticipation, ParticipationSampler
+from repro.core.problems import DistributedProblem, sample_batch_indices
+
+Array = jax.Array
+
+
+class MarinaState(NamedTuple):
+    x: Array        # (d,)
+    g: Array        # (d,) server estimator
+    step: Array
+
+
+@dataclasses.dataclass(frozen=True)
+class MarinaConfig:
+    gamma: float
+    p_sync: float                 # probability of a full-gradient round
+    batch_size: Optional[int] = None   # None => exact local gradients
+
+
+class Marina:
+    def __init__(self, problem: DistributedProblem, compressor: Compressor,
+                 sampler: Optional[ParticipationSampler], config: MarinaConfig):
+        self.problem = problem
+        self.compressor = compressor
+        self.sampler = sampler or FullParticipation(n=problem.n)
+        self.cfg = config
+
+    def init(self, key: Array, x0: Array) -> MarinaState:
+        del key
+        g0 = self.problem.full_grad(x0)
+        return MarinaState(x=x0, g=g0, step=jnp.zeros((), jnp.int32))
+
+    def _local_grad(self, key: Array, x: Array) -> Tuple[Array, Array]:
+        p = self.problem
+        if self.cfg.batch_size is None:
+            return p.grad(x), jnp.asarray(p.m * p.n)
+        idx = sample_batch_indices(key, p.n, p.m, self.cfg.batch_size)
+        return p.batch_grad(x, idx), jnp.asarray(self.cfg.batch_size * p.n)
+
+    def step(self, key: Array, state: MarinaState
+             ) -> Tuple[MarinaState, StepMetrics]:
+        p, cfg, C = self.problem, self.cfg, self.compressor
+        k_coin, k_part, k_g1, k_g2, k_comp = jax.random.split(key, 5)
+        x_new = state.x - cfg.gamma * state.g
+
+        sync = jax.random.bernoulli(k_coin, cfg.p_sync)
+        gn, calls_n = self._local_grad(k_g1, x_new)      # (n, d)
+        go, calls_o = self._local_grad(k_g2, state.x)
+
+        # Sync round: g^{t+1} = mean_i ∇f_i(x^{t+1}) EXACT (VR-MARINA:
+        # minibatches only on compressed-difference rounds), uncompressed,
+        # all nodes — MARINA's full-participation requirement.
+        g_sync = jnp.mean(p.grad(x_new), axis=0)
+        calls_n = jnp.where(sync, p.m * p.n, calls_n)
+
+        # Compressed round: sampled nodes send C_i(diff), 1/p_a scaled.
+        mask = self.sampler.sample(k_part).astype(state.x.dtype)[:, None]
+        node_keys = jax.vmap(lambda i: jax.random.fold_in(k_comp, i))(
+            jnp.arange(p.n))
+        comp = jax.vmap(C.compress)(node_keys, gn - go)
+        g_comp = state.g + jnp.mean(mask * comp, axis=0) / self.sampler.p_a
+
+        g_new = jnp.where(sync, g_sync, g_comp)
+        n_part = jnp.where(sync, p.n, jnp.sum(mask))
+        bits = jnp.where(sync, p.n * 32.0 * p.d, jnp.sum(mask) * C.wire_bits(p.d))
+
+        metrics = StepMetrics(
+            loss=p.loss(state.x),
+            grad_norm_sq=jnp.sum(p.full_grad(state.x) ** 2),
+            bits_sent=bits,
+            grad_oracle_calls=calls_n + calls_o,
+            participants=n_part,
+            x_norm=jnp.linalg.norm(state.x),
+        )
+        return MarinaState(x=x_new, g=g_new, step=state.step + 1), metrics
+
+    def run(self, key: Array, x0: Array, num_rounds: int):
+        init_key, run_key = jax.random.split(key)
+        state = self.init(init_key, x0)
+
+        def body(st, i):
+            st, met = self.step(jax.random.fold_in(run_key, i), st)
+            return st, met
+
+        return jax.lax.scan(body, state, jnp.arange(num_rounds))

@@ -1,0 +1,123 @@
+"""Partial-participation samplers (paper Section 2.2, Assumption 8).
+
+A sampler draws, per communication round, a boolean participation mask of
+shape ``(n,)`` over nodes with
+
+    Prob(i participates)            = p_a      for all i,
+    Prob(i and j both participate)  = p_aa     for all i != j,
+    p_aa <= p_a**2,
+
+independently across rounds.  The two standard strategies of the paper:
+
+* **s-nice**: the server picks ``s`` nodes uniformly without replacement.
+  ``p_a = s/n``, ``p_aa = s(s-1)/(n(n-1))``.
+* **independent**: each node participates independently with prob p_a.
+  ``p_aa = p_a**2``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class ParticipationSampler:
+    n: int
+
+    @property
+    def p_a(self) -> float:
+        raise NotImplementedError
+
+    @property
+    def p_aa(self) -> float:
+        raise NotImplementedError
+
+    def sample(self, key: Array) -> Array:
+        """-> bool mask of shape (n,)."""
+        raise NotImplementedError
+
+    @property
+    def one_pa(self) -> float:
+        """The paper's 𝟙_{p_a} := sqrt(1 - p_aa / p_a) in [0, 1]."""
+        return float(jnp.sqrt(1.0 - self.p_aa / self.p_a))
+
+
+@dataclasses.dataclass(frozen=True)
+class SNice(ParticipationSampler):
+    """Uniformly choose exactly ``s`` of ``n`` nodes without replacement."""
+
+    n: int
+    s: int
+
+    def __post_init__(self):
+        if not (1 <= self.s <= self.n):
+            raise ValueError(f"need 1 <= s <= n, got s={self.s}, n={self.n}")
+
+    @property
+    def p_a(self) -> float:
+        return self.s / self.n
+
+    @property
+    def p_aa(self) -> float:
+        if self.n == 1:
+            return 1.0
+        return self.s * (self.s - 1) / (self.n * (self.n - 1))
+
+    def sample(self, key: Array) -> Array:
+        perm = jax.random.permutation(key, self.n)
+        return perm < self.s
+
+
+@dataclasses.dataclass(frozen=True)
+class Independent(ParticipationSampler):
+    """Each node participates independently with probability p."""
+
+    n: int
+    p: float
+
+    def __post_init__(self):
+        if not (0.0 < self.p <= 1.0):
+            raise ValueError(f"need 0 < p <= 1, got {self.p}")
+
+    @property
+    def p_a(self) -> float:
+        return self.p
+
+    @property
+    def p_aa(self) -> float:
+        return self.p * self.p
+
+    def sample(self, key: Array) -> Array:
+        return jax.random.bernoulli(key, self.p, (self.n,))
+
+
+@dataclasses.dataclass(frozen=True)
+class FullParticipation(ParticipationSampler):
+    """p_a = p_aa = 1: every node every round (the DASHA setting)."""
+
+    n: int
+
+    @property
+    def p_a(self) -> float:
+        return 1.0
+
+    @property
+    def p_aa(self) -> float:
+        return 1.0
+
+    def sample(self, key: Array) -> Array:
+        del key
+        return jnp.ones((self.n,), dtype=bool)
+
+
+def make_sampler(name: str, n: int, **kwargs) -> ParticipationSampler:
+    if name == "s_nice":
+        return SNice(n=n, s=kwargs["s"])
+    if name == "independent":
+        return Independent(n=n, p=kwargs["p"])
+    if name == "full":
+        return FullParticipation(n=n)
+    raise ValueError(f"unknown sampler {name!r}")

@@ -1,0 +1,234 @@
+"""Distributed problems for the paper-scale experiments (Section A).
+
+A :class:`DistributedProblem` holds per-node data and exposes the three
+oracle interfaces the DASHA-PP variants need:
+
+* ``grad(x) -> (n, d)``                       full local gradients,
+* ``component_grads(x, idx) -> (n, B, d)``    finite-sum component grads,
+* ``stochastic_grad_pair(key, x1, x0, B)``    same-sample grads at two
+  points (Assumption 6 mean-squared smoothness usage in MVR variants).
+
+Two concrete problems mirror the paper's experiments:
+
+* :class:`LogisticSigmoidProblem` — eq. (11): 1/m Σ (1 - sigmoid(y a^T x))^2,
+  a smooth **nonconvex** binary-classification loss.
+* :class:`NonconvexSoftmaxProblem` — eq. (12): two-class softmax CE with a
+  nonconvex regularizer λ Σ x_k^2 / (1 + x_k^2).
+
+Datasets are synthetic sparse "libsvm-like" features split across n nodes
+(the container is offline; the paper's claims we validate are *relative
+rate* claims, invariant to the dataset; see DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+def make_synthetic_classification(key: Array, n_nodes: int, m_per_node: int,
+                                  d: int, heterogeneity: float = 1.0,
+                                  density: float = 0.2) -> Tuple[Array, Array]:
+    """Sparse features A: (n, m, d), labels y in {-1, +1}: (n, m).
+
+    ``heterogeneity`` scales per-node shifts of the generating hyperplane,
+    controlling how different the f_i are (the paper targets the generic
+    heterogeneous regime).
+    """
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    feats = jax.random.normal(k1, (n_nodes, m_per_node, d))
+    mask = jax.random.bernoulli(k2, density, (n_nodes, m_per_node, d))
+    feats = feats * mask / jnp.sqrt(density)
+    w_true = jax.random.normal(k3, (d,))
+    w_shift = heterogeneity * jax.random.normal(k4, (n_nodes, d)) / jnp.sqrt(d)
+    logits = jnp.einsum("nmd,nd->nm", feats, w_true[None, :] + w_shift)
+    flips = jax.random.bernoulli(k5, 0.05, (n_nodes, m_per_node))
+    y = jnp.where(flips, -jnp.sign(logits), jnp.sign(logits))
+    y = jnp.where(y == 0, 1.0, y)
+    return feats, y
+
+
+class DistributedProblem:
+    """n-node finite-sum problem; all oracles are jit/vmap friendly."""
+
+    n: int
+    m: int
+    d: int
+
+    def loss(self, x: Array) -> Array:
+        raise NotImplementedError
+
+    def node_loss(self, x: Array) -> Array:
+        """-> (n,) local losses."""
+        raise NotImplementedError
+
+    def grad(self, x: Array) -> Array:
+        """-> (n, d) full local gradients."""
+        raise NotImplementedError
+
+    def full_grad(self, x: Array) -> Array:
+        return jnp.mean(self.grad(x), axis=0)
+
+    def component_grads(self, x: Array, idx: Array) -> Array:
+        """idx: (n, B) component indices -> (n, B, d)."""
+        raise NotImplementedError
+
+    def batch_grad(self, x: Array, idx: Array) -> Array:
+        return jnp.mean(self.component_grads(x, idx), axis=1)
+
+    # ---- constants for theory.py ------------------------------------
+    def smoothness(self) -> "tuple[float, float, float, float]":
+        """(L, L_hat, L_max, L_sigma) estimates from the data."""
+        raise NotImplementedError
+
+
+@dataclasses.dataclass
+class LogisticSigmoidProblem(DistributedProblem):
+    """Paper eq. (11): f_ij(x) = (1 - 1/(1+exp(y a^T x)))^2 = sigmoid(-y a^T x)^2."""
+
+    feats: Array  # (n, m, d)
+    labels: Array  # (n, m)
+
+    def __post_init__(self):
+        self.n, self.m, self.d = self.feats.shape
+
+    def _component_loss(self, x: Array) -> Array:
+        z = jnp.einsum("nmd,d->nm", self.feats, x) * self.labels
+        return jax.nn.sigmoid(-z) ** 2
+
+    def loss(self, x: Array) -> Array:
+        return jnp.mean(self._component_loss(x))
+
+    def node_loss(self, x: Array) -> Array:
+        return jnp.mean(self._component_loss(x), axis=1)
+
+    def _component_grad_all(self, x: Array) -> Array:
+        """-> (n, m, d) gradients of every component."""
+        z = jnp.einsum("nmd,d->nm", self.feats, x) * self.labels
+        s = jax.nn.sigmoid(-z)
+        coef = -2.0 * s**2 * (1.0 - s) * self.labels   # d/dz sigmoid(-z)^2 * y
+        return coef[..., None] * self.feats
+
+    def grad(self, x: Array) -> Array:
+        return jnp.mean(self._component_grad_all(x), axis=1)
+
+    def component_grads(self, x: Array, idx: Array) -> Array:
+        g_all = self._component_grad_all(x)  # (n, m, d)
+        return jnp.take_along_axis(g_all, idx[..., None], axis=1)
+
+    def smoothness(self):
+        # |(sigmoid(-z)^2)''| <= ~0.3; row smoothness <= 0.3 ||a||^2.
+        row_sq = jnp.sum(self.feats**2, axis=-1)          # (n, m)
+        L_ij = 0.31 * row_sq
+        L_i = jnp.mean(L_ij, axis=1)
+        L = float(jnp.mean(L_i))
+        L_hat = float(jnp.sqrt(jnp.mean(L_i**2)))
+        L_max = float(jnp.max(L_ij))
+        return L, L_hat, L_max, L_max
+
+
+@dataclasses.dataclass
+class NonconvexSoftmaxProblem(DistributedProblem):
+    """Paper eq. (12) reduced to a single weight vector per class pair:
+    binary softmax CE + nonconvex regularizer lam * sum x^2/(1+x^2)."""
+
+    feats: Array   # (n, m, d)
+    labels: Array  # (n, m) in {-1, +1}
+    lam: float = 1e-3
+
+    def __post_init__(self):
+        self.n, self.m, self.d = self.feats.shape
+
+    def _component_loss(self, x: Array) -> Array:
+        z = jnp.einsum("nmd,d->nm", self.feats, x) * self.labels
+        ce = jnp.log1p(jnp.exp(-z))
+        reg = self.lam * jnp.sum(x**2 / (1.0 + x**2))
+        return ce + reg
+
+    def loss(self, x: Array) -> Array:
+        return jnp.mean(self._component_loss(x))
+
+    def node_loss(self, x: Array) -> Array:
+        return jnp.mean(self._component_loss(x), axis=1)
+
+    def _component_grad_all(self, x: Array) -> Array:
+        z = jnp.einsum("nmd,d->nm", self.feats, x) * self.labels
+        coef = -jax.nn.sigmoid(-z) * self.labels
+        g_data = coef[..., None] * self.feats
+        g_reg = self.lam * 2.0 * x / (1.0 + x**2) ** 2
+        return g_data + g_reg[None, None, :]
+
+    def grad(self, x: Array) -> Array:
+        return jnp.mean(self._component_grad_all(x), axis=1)
+
+    def component_grads(self, x: Array, idx: Array) -> Array:
+        g_all = self._component_grad_all(x)
+        return jnp.take_along_axis(g_all, idx[..., None], axis=1)
+
+    def smoothness(self):
+        row_sq = jnp.sum(self.feats**2, axis=-1)
+        L_ij = 0.25 * row_sq + 2.0 * self.lam
+        L_i = jnp.mean(L_ij, axis=1)
+        L = float(jnp.mean(L_i))
+        L_hat = float(jnp.sqrt(jnp.mean(L_i**2)))
+        L_max = float(jnp.max(L_ij))
+        return L, L_hat, L_max, L_max
+
+
+@dataclasses.dataclass
+class QuadraticProblem(DistributedProblem):
+    """f_i(x) = 0.5 x^T A_i x - b_i^T x with PSD A_i — a sanity/test problem
+    with analytically known constants and minimizer."""
+
+    A: Array  # (n, d, d)
+    b: Array  # (n, d)
+
+    def __post_init__(self):
+        self.n, self.d = self.b.shape
+        self.m = 1
+
+    @classmethod
+    def random(cls, key: Array, n: int, d: int, cond: float = 10.0):
+        k1, k2 = jax.random.split(key)
+        mats = jax.random.normal(k1, (n, d, d)) / jnp.sqrt(d)
+        A = jnp.einsum("nij,nkj->nik", mats, mats) + jnp.eye(d) / cond
+        b = jax.random.normal(k2, (n, d))
+        return cls(A=A, b=b)
+
+    def loss(self, x: Array) -> Array:
+        return jnp.mean(self.node_loss(x))
+
+    def node_loss(self, x: Array) -> Array:
+        quad = 0.5 * jnp.einsum("d,nde,e->n", x, self.A, x)
+        return quad - self.b @ x
+
+    def grad(self, x: Array) -> Array:
+        return jnp.einsum("nde,e->nd", self.A, x) - self.b
+
+    def component_grads(self, x: Array, idx: Array) -> Array:
+        return self.grad(x)[:, None, :] * jnp.ones_like(idx[..., None])
+
+    def minimizer(self) -> Array:
+        return jnp.linalg.solve(jnp.mean(self.A, 0), jnp.mean(self.b, 0))
+
+    def smoothness(self):
+        eigs = jnp.linalg.eigvalsh(self.A)
+        L_i = eigs[:, -1]
+        L = float(jnp.linalg.eigvalsh(jnp.mean(self.A, 0))[-1])
+        L_hat = float(jnp.sqrt(jnp.mean(L_i**2)))
+        L_max = float(jnp.max(L_i))
+        return L, L_hat, L_max, L_max
+
+
+def sample_batch_indices(key: Array, n: int, m: int, B: int,
+                         replace: bool = True) -> Array:
+    """(n, B) per-node component indices."""
+    keys = jax.random.split(key, n)
+    if replace:
+        return jax.vmap(lambda k: jax.random.randint(k, (B,), 0, m))(keys)
+    return jax.vmap(lambda k: jax.random.permutation(k, m)[:B])(keys)

@@ -1,0 +1,354 @@
+"""SPMD production runtime for DASHA-PP on TPU meshes.
+
+Mapping (DESIGN.md §3, §5): one *node* of the paper = one slice of the
+``data`` mesh axes (``("data",)`` single-pod, ``("pod", "data")``
+multi-pod).  The parameter server is an abstraction realized by
+collectives over those axes.
+
+Pieces:
+
+* :func:`per_node_value_and_grads` — per-node gradients (no cross-node
+  mean!) via ``vmap(value_and_grad)`` over an explicit node dimension of
+  the batch; runs under GSPMD so the ``model`` axis (tensor/expert
+  parallelism) needs no manual collectives.
+* :class:`ShardedDasha` — the Algorithm-1 node/server update as a
+  ``shard_map`` over the data axes.  Per-node control variates ``h_i,
+  g_i`` are param-shaped arrays with a leading node dimension sharded
+  over the data axes (each device stores only its own node's variates:
+  no replication).
+* Aggregation modes:
+    - ``dense_psum``       — uncompressed baseline: ``psum`` of dense
+      messages over the data axes (bytes ∝ d).
+    - ``sparse_allgather`` — RandK/BlockRandK wire format: all-gather of
+      ``(values, block indices)`` (bytes ∝ n·K ≪ n·d) + local
+      scatter-add.  This is the paper's communication saving made
+      visible to the roofline.
+* **BlockRandK** (TPU adaptation, DESIGN.md §3): RandK at (128,)-block
+  granularity — blocks partition coordinates, so choosing ``K/bs`` of
+  ``D/bs`` blocks uniformly without replacement and scaling by ``D/K``
+  is unbiased with exactly the Definition-1 bound ``omega = D/K - 1``
+  (blocks are super-coordinates).  Avoids a full-length sort/gather per
+  step and keeps lane-aligned memory access.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Callable, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+Array = jax.Array
+PyTree = Any
+
+
+# ----------------------------------------------------------------------
+# Per-node gradients
+# ----------------------------------------------------------------------
+
+def per_node_value_and_grads(loss_fn: Callable, params: PyTree,
+                             batch: PyTree, *args) -> Tuple[Array, PyTree]:
+    """``loss_fn(params, node_batch, *args) -> scalar``; ``batch`` leaves
+    carry a leading node dimension.  Returns ``(losses (n,), grads)`` with
+    grad leaves shaped ``(n, *param_shape)`` — the *unreduced* per-node
+    gradients the DASHA-PP update consumes."""
+    vg = jax.value_and_grad(loss_fn)
+    in_axes = (None, 0) + tuple(None for _ in args)
+    return jax.vmap(vg, in_axes=in_axes)(params, batch, *args)
+
+
+# ----------------------------------------------------------------------
+# Config / state
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardedDashaConfig:
+    gamma: float
+    a: float                       # compressor momentum (Alg.1 line 11)
+    b: float                       # VR momentum (Algs. 2/5 share one formula)
+    p_a: float = 1.0
+    sampler: str = "independent"   # independent | s_nice | full
+    compression_ratio: Optional[float] = 0.01   # K/D; None => identity
+    block_size: int = 128          # BlockRandK block (TPU lane width)
+    aggregation: str = "sparse_allgather"       # or dense_psum
+    data_axes: Tuple[str, ...] = ("data",)
+    use_pallas: bool = False       # fuse the control-variate update kernel
+
+    @property
+    def compressed(self) -> bool:
+        return (self.compression_ratio is not None
+                and self.aggregation == "sparse_allgather")
+
+
+class ShardedDashaState(NamedTuple):
+    g: PyTree      # server estimator, sharded like params
+    g_i: PyTree    # per-node estimators, leading node dim over data axes
+    h_i: PyTree    # per-node gradient trackers, same layout
+    step: Array
+
+
+def _num_nodes(mesh: Mesh, data_axes: Sequence[str]) -> int:
+    return int(math.prod(mesh.shape[a] for a in data_axes))
+
+
+def node_spec(param_spec: P, data_axes: Sequence[str]) -> P:
+    """Spec for a per-node array: prepend the (tuple of) node axes and
+    strip them from the param dims (a per-node array cannot FSDP over the
+    axis that indexes nodes)."""
+    lead = data_axes[0] if len(data_axes) == 1 else tuple(data_axes)
+
+    def strip(entry):
+        if entry is None:
+            return None
+        if isinstance(entry, str):
+            return None if entry in data_axes else entry
+        kept = tuple(a for a in entry if a not in data_axes)
+        return kept if kept else None
+
+    return P(lead, *(strip(e) for e in param_spec))
+
+
+def estimator_spec(param_spec: P, data_axes: Sequence[str]) -> P:
+    """Spec for the server estimator g: like params but never sharded over
+    the node axes (every node must see the full (model-sharded) g)."""
+
+    def strip(entry):
+        if entry is None:
+            return None
+        if isinstance(entry, str):
+            return None if entry in data_axes else entry
+        kept = tuple(a for a in entry if a not in data_axes)
+        return kept if kept else None
+
+    return P(*(strip(e) for e in param_spec))
+
+
+# ----------------------------------------------------------------------
+# BlockRandK helpers (operate on a flat local vector inside shard_map)
+# ----------------------------------------------------------------------
+
+def _pad_to(x: Array, mult: int) -> Array:
+    pad = (-x.shape[0]) % mult
+    return jnp.pad(x, (0, pad)) if pad else x
+
+
+def block_randk_select(key: Array, flat: Array, k_blocks: int,
+                       block_size: int) -> Tuple[Array, Array]:
+    """Choose ``k_blocks`` of the ``nb`` blocks u.a.r. without replacement.
+    Returns (values (k_blocks, block_size) scaled by nb/k_blocks,
+    block_idx (k_blocks,))."""
+    padded = _pad_to(flat, block_size)
+    nb = padded.shape[0] // block_size
+    blocks = padded.reshape(nb, block_size)
+    idx = jax.random.permutation(key, nb)[:k_blocks]
+    scale = nb / k_blocks
+    return blocks[idx] * scale, idx
+
+
+def block_scatter_add(base_flat: Array, vals: Array, block_idx: Array,
+                      block_size: int) -> Array:
+    """base += scatter(vals at block_idx); shapes per block_randk_select.
+    ``vals``/``block_idx`` may carry a leading nodes dim."""
+    padded = _pad_to(base_flat, block_size)
+    nb = padded.shape[0] // block_size
+    blocks = padded.reshape(nb, block_size)
+    vals2 = vals.reshape(-1, block_size)
+    idx2 = block_idx.reshape(-1)
+    blocks = blocks.at[idx2].add(vals2)
+    return blocks.reshape(-1)[: base_flat.shape[0]]
+
+
+def block_randk_dense(key: Array, flat: Array, k_blocks: int,
+                      block_size: int) -> Array:
+    """Dense output of BlockRandK (used by the dense_psum + compressed
+    combination and by tests as the oracle wire-format-free form)."""
+    vals, idx = block_randk_select(key, flat, k_blocks, block_size)
+    return block_scatter_add(jnp.zeros_like(flat), vals, idx, block_size)
+
+
+# ----------------------------------------------------------------------
+# The sharded DASHA-PP engine
+# ----------------------------------------------------------------------
+
+class ShardedDasha:
+    """Algorithm 1 over a mesh.  Usage::
+
+        engine = ShardedDasha(mesh, param_specs, cfg)
+        state  = engine.init(grads_like)       # under jit, sharded
+        params_new = engine.server_step(params, state)   # x - gamma g
+        state = engine.node_update(gn, go, state, key)   # lines 7-19
+    """
+
+    def __init__(self, mesh: Mesh, param_specs: PyTree,
+                 cfg: ShardedDashaConfig):
+        self.mesh = mesh
+        self.param_specs = param_specs
+        self.cfg = cfg
+        self.n_nodes = _num_nodes(mesh, cfg.data_axes)
+
+    # -- state ----------------------------------------------------------
+    def init(self, grads0: PyTree) -> ShardedDashaState:
+        """Paper line 2 / Theorem 2: g_i^0 = h_i^0 = ∇f_i(x^0); the server
+        holds g^0 = mean_i g_i^0.  ``grads0`` = per-node grads (n, *shape)."""
+        g0 = jax.tree.map(lambda g: jnp.mean(g, axis=0), grads0)
+        return ShardedDashaState(
+            g=g0, g_i=grads0, h_i=grads0,
+            step=jnp.zeros((), jnp.int32))
+
+    def init_zero(self, params: PyTree) -> ShardedDashaState:
+        """Zero-initialized variant (g_i^0 = h_i^0 = 0) — admissible for
+        MVR (Theorem 4 allows any h^0; adds a transient O(||∇f(x^0)||²/bT)
+        term).  Cheaper when an extra init pass is undesirable."""
+        zeros_node = jax.tree.map(
+            lambda p: jnp.zeros((self.n_nodes,) + p.shape, p.dtype), params)
+        zeros = jax.tree.map(lambda p: jnp.zeros_like(p), params)
+        return ShardedDashaState(g=zeros, g_i=zeros_node, h_i=zeros_node,
+                                 step=jnp.zeros((), jnp.int32))
+
+    # -- server ----------------------------------------------------------
+    def server_step(self, params: PyTree, state: ShardedDashaState) -> PyTree:
+        """Line 5: x^{t+1} = x^t - gamma * g^t (g is replicated over data)."""
+        return jax.tree.map(
+            lambda p, g: (p - self.cfg.gamma * g.astype(p.dtype)),
+            params, state.g)
+
+    # -- participation ----------------------------------------------------
+    def _participates(self, key: Array, node_idx: Array) -> Array:
+        cfg = self.cfg
+        if cfg.sampler == "full" or cfg.p_a >= 1.0:
+            return jnp.ones((), bool)
+        if cfg.sampler == "independent":
+            return jax.random.bernoulli(jax.random.fold_in(key, node_idx),
+                                        cfg.p_a)
+        if cfg.sampler == "s_nice":
+            s = max(1, round(cfg.p_a * self.n_nodes))
+            perm = jax.random.permutation(key, self.n_nodes)
+            return perm[node_idx] < s
+        raise ValueError(f"unknown sampler {self.cfg.sampler!r}")
+
+    # -- node + aggregation ------------------------------------------------
+    def node_update(self, grads_new: PyTree, grads_old: PyTree,
+                    state: ShardedDashaState, key: Array
+                    ) -> ShardedDashaState:
+        """Lines 7-19 of Algorithm 1 as a shard_map over the data axes.
+
+        ``grads_new/old`` leaves: (n_nodes, *param_shape) — per-node
+        (stochastic) gradients at x^{t+1} and x^t with the same sample
+        (Alg. 5 / Alg. 2 share the k_i formula ``gn - go - b (h - go)``).
+        """
+        cfg = self.cfg
+        data_axes = cfg.data_axes
+        lead = data_axes[0] if len(data_axes) == 1 else tuple(data_axes)
+
+        node_specs = jax.tree.map(lambda s: node_spec(s, data_axes),
+                                  self.param_specs,
+                                  is_leaf=lambda x: isinstance(x, P))
+        est_specs = jax.tree.map(lambda s: estimator_spec(s, data_axes),
+                                 self.param_specs,
+                                 is_leaf=lambda x: isinstance(x, P))
+        in_specs = (node_specs, node_specs, node_specs, node_specs,
+                    est_specs, P(), P())
+        out_specs = (node_specs, node_specs, est_specs)
+
+        def update(gn, go, h_i, g_i, g, key, step):
+            # Inside shard_map: leaves of gn/go/h_i/g_i are (1, *local);
+            # g leaves are (*local) replicated over data axes.
+            node_idx = jax.lax.axis_index(data_axes) if len(data_axes) > 1 \
+                else jax.lax.axis_index(data_axes[0])
+            step_key = jax.random.fold_in(key, step)
+            part = self._participates(step_key, node_idx)
+            partf = part.astype(jnp.float32)
+            pa = cfg.p_a
+
+            leaves_gn, treedef = jax.tree.flatten(gn)
+            leaves_go = jax.tree.leaves(go)
+            leaves_h = jax.tree.leaves(h_i)
+            leaves_gi = jax.tree.leaves(g_i)
+            leaves_g = jax.tree.leaves(g)
+
+            new_h, new_gi, new_g = [], [], []
+            for li, (tn, to, th, tgi, tg) in enumerate(zip(
+                    leaves_gn, leaves_go, leaves_h, leaves_gi, leaves_g)):
+                fn = tn[0].reshape(-1).astype(jnp.float32)
+                fo = to[0].reshape(-1).astype(jnp.float32)
+                fh = th[0].reshape(-1).astype(jnp.float32)
+                fgi = tgi[0].reshape(-1).astype(jnp.float32)
+                fg = tg.reshape(-1).astype(jnp.float32)
+
+                if cfg.use_pallas:
+                    from repro.kernels.ops import dasha_update_op
+                    k_vec, fh_new, payload = dasha_update_op(
+                        fn, fo, fh, fgi, b=cfg.b, a=cfg.a, pa=pa,
+                        participates=partf)
+                else:
+                    # Alg.2/5: k = gn - go - b (h - go)
+                    k_vec = fn - fo - cfg.b * (fh - fo)
+                    # line 10: h += k/pa if participating
+                    fh_new = fh + partf * (k_vec / pa)
+                    # line 11 payload: k/pa - (a/pa)(g_i - h_old)
+                    payload = k_vec / pa - (cfg.a / pa) * (fgi - fh)
+
+                lkey = jax.random.fold_in(
+                    jax.random.fold_in(step_key, 7919 + li), node_idx)
+
+                if cfg.compression_ratio is None:
+                    m_i = partf * payload
+                    total = jax.lax.psum(m_i, data_axes)
+                    delta = total / self.n_nodes
+                    fgi_new = fgi + m_i
+                elif cfg.aggregation == "dense_psum":
+                    bs = min(cfg.block_size, fn.shape[0])
+                    nb = -(-fn.shape[0] // bs)
+                    kb = max(1, math.ceil(cfg.compression_ratio * nb))
+                    m_i = partf * block_randk_dense(lkey, payload, kb, bs)
+                    total = jax.lax.psum(m_i, data_axes)
+                    delta = total / self.n_nodes
+                    fgi_new = fgi + m_i
+                else:  # sparse_allgather — the communication saving
+                    bs = min(cfg.block_size, fn.shape[0])
+                    nb = -(-fn.shape[0] // bs)
+                    kb = max(1, math.ceil(cfg.compression_ratio * nb))
+                    vals, bidx = block_randk_select(lkey, payload, kb, bs)
+                    vals = partf * vals
+                    # wire: (n·kb·bs values + n·kb indices) over data axes
+                    all_vals = jax.lax.all_gather(vals, data_axes,
+                                                  tiled=False)
+                    all_idx = jax.lax.all_gather(bidx, data_axes,
+                                                 tiled=False)
+                    delta = block_scatter_add(
+                        jnp.zeros_like(fg),
+                        all_vals.reshape(-1, bs), all_idx.reshape(-1),
+                        bs) / self.n_nodes
+                    fgi_new = block_scatter_add(fgi, vals, bidx, bs)
+
+                fg_new = fg + delta
+                new_h.append(fh_new.astype(th.dtype).reshape(th.shape))
+                new_gi.append(fgi_new.astype(tgi.dtype).reshape(tgi.shape))
+                new_g.append(fg_new.astype(tg.dtype).reshape(tg.shape))
+
+            return (jax.tree.unflatten(treedef, new_h),
+                    jax.tree.unflatten(treedef, new_gi),
+                    jax.tree.unflatten(treedef, new_g))
+
+        h_new, gi_new, g_new = jax.shard_map(
+            update, mesh=self.mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=False,
+        )(grads_new, grads_old, state.h_i, state.g_i, state.g, key,
+          state.step)
+
+        return ShardedDashaState(g=g_new, g_i=gi_new, h_i=h_new,
+                                 step=state.step + 1)
+
+    # -- wire accounting ---------------------------------------------------
+    def uplink_bits_per_round(self, d_total: int) -> float:
+        """Expected uplink bits per node per round (Tables 1-2 metric)."""
+        cfg = self.cfg
+        if cfg.compression_ratio is None:
+            return cfg.p_a * d_total * 32.0
+        nb = -(-d_total // cfg.block_size)
+        kb = max(1, math.ceil(cfg.compression_ratio * nb))
+        return cfg.p_a * kb * (cfg.block_size * 32.0 + 32.0)

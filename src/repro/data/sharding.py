@@ -1,0 +1,24 @@
+"""Batch placement helpers: node-major batches onto the mesh."""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+def batch_specs(batch: Any, data_axes: Sequence[str]) -> Any:
+    """Leading node dim over the data axes, rest replicated/model-free."""
+    lead = data_axes[0] if len(data_axes) == 1 else tuple(data_axes)
+
+    def spec(leaf):
+        return P(lead, *([None] * (leaf.ndim - 1)))
+
+    return jax.tree.map(spec, batch)
+
+
+def place_batch(batch: Any, mesh: Mesh, data_axes: Sequence[str]) -> Any:
+    specs = batch_specs(batch, data_axes)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)), batch, specs)

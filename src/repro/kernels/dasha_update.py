@@ -1,0 +1,91 @@
+"""Fused DASHA control-variate update as a Pallas TPU kernel.
+
+Why a kernel (DESIGN.md §6): the per-node update is a chain of five
+elementwise passes over grad-sized vectors
+
+    k       = gn - go - b (h - go)
+    h_new   = h + part * k / pa
+    payload = k / pa - (a/pa)(g_i - h)
+
+with arithmetic intensity ~O(1) — pure HBM-bandwidth-bound.  Unfused,
+XLA may materialize k and intermediate diffs; the fused kernel streams
+the four inputs once and writes the three outputs once: 7 HBM transfers
+of D instead of ~11+, a ~1.6x memory-roofline win on the optimizer phase
+(validated against the HLO bytes in benchmarks/bench_kernels.py).
+
+Tiling: inputs are reshaped to (rows, 128) lanes; the grid walks row
+tiles of ``block_rows`` (default 512 rows = 256 KB/operand in VMEM ->
+4 inputs + 3 outputs ~ 1.75 MB, comfortably inside ~16 MB VMEM).
+
+``b, a, pa`` are compile-time constants (algorithm hyperparameters);
+``participates`` is a runtime scalar streamed via a (1, 1) operand.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+LANES = 128
+DEFAULT_BLOCK_ROWS = 512
+
+
+def _kernel(part_ref, gn_ref, go_ref, h_ref, gi_ref,
+            k_ref, h_new_ref, payload_ref, *, b: float, a: float,
+            pa: float):
+    part = part_ref[0, 0]
+    gn = gn_ref[...]
+    go = go_ref[...]
+    h = h_ref[...]
+    gi = gi_ref[...]
+    k = gn - go - b * (h - go)
+    inv_pa = 1.0 / pa
+    k_ref[...] = k
+    h_new_ref[...] = h + part * (k * inv_pa)
+    payload_ref[...] = k * inv_pa - (a * inv_pa) * (gi - h)
+
+
+@functools.partial(jax.jit, static_argnames=("b", "a", "pa", "block_rows",
+                                             "interpret"))
+def dasha_update_pallas(gn: Array, go: Array, h: Array, gi: Array,
+                        participates: Array, *, b: float, a: float,
+                        pa: float,
+                        block_rows: int = DEFAULT_BLOCK_ROWS,
+                        interpret: bool = True
+                        ) -> Tuple[Array, Array, Array]:
+    """Inputs are flat (D,) float32 vectors; returns (k, h_new, payload).
+
+    ``interpret=True`` executes the kernel body in Python on CPU (this
+    container); on TPU pass ``interpret=False``.
+    """
+    (d,) = gn.shape
+    rows = -(-d // LANES)
+    rows_pad = -(-rows // block_rows) * block_rows
+    pad = rows_pad * LANES - d
+
+    def prep(x):
+        return jnp.pad(x, (0, pad)).reshape(rows_pad, LANES)
+
+    gn2, go2, h2, gi2 = map(prep, (gn, go, h, gi))
+    part = jnp.reshape(participates.astype(jnp.float32), (1, 1))
+    grid = (rows_pad // block_rows,)
+
+    tile = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
+    scalar = pl.BlockSpec((1, 1), lambda i: (0, 0))
+
+    k2, hn2, pay2 = pl.pallas_call(
+        functools.partial(_kernel, b=b, a=a, pa=pa),
+        grid=grid,
+        in_specs=[scalar, tile, tile, tile, tile],
+        out_specs=[tile, tile, tile],
+        out_shape=[jax.ShapeDtypeStruct((rows_pad, LANES), jnp.float32)] * 3,
+        interpret=interpret,
+    )(part, gn2, go2, h2, gi2)
+
+    unprep = lambda x: x.reshape(-1)[:d]
+    return unprep(k2), unprep(hn2), unprep(pay2)

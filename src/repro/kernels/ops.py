@@ -1,0 +1,55 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On this CPU container the kernels run in interpret mode (the body
+executes in Python, numerics identical); on TPU set
+``REPRO_PALLAS_INTERPRET=0`` or pass ``interpret=False``.
+"""
+from __future__ import annotations
+
+import os
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.dasha_update import dasha_update_pallas
+from repro.kernels.randk import block_gather_pallas, block_scatter_pallas
+
+Array = jax.Array
+
+
+def _interpret_default() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+def dasha_update_op(gn: Array, go: Array, h: Array, gi: Array, *,
+                    b: float, a: float, pa: float, participates: Array,
+                    interpret: bool | None = None
+                    ) -> Tuple[Array, Array, Array]:
+    """Fused (k, h_new, payload); see kernels/dasha_update.py."""
+    interp = _interpret_default() if interpret is None else interpret
+    part = jnp.asarray(participates, jnp.float32)
+    return dasha_update_pallas(
+        gn.astype(jnp.float32), go.astype(jnp.float32),
+        h.astype(jnp.float32), gi.astype(jnp.float32), part,
+        b=float(b), a=float(a), pa=float(pa), interpret=interp)
+
+
+def block_gather_op(x_blocks: Array, block_idx: Array, *, scale: float,
+                    interpret: bool | None = None) -> Array:
+    interp = _interpret_default() if interpret is None else interpret
+    return block_gather_pallas(
+        x_blocks.astype(jnp.float32), block_idx.astype(jnp.int32),
+        k_blocks=int(block_idx.shape[0]), scale=float(scale),
+        interpret=interp)
+
+
+def block_scatter_op(base_blocks: Array, vals: Array, block_idx: Array,
+                     interpret: bool | None = None) -> Array:
+    interp = _interpret_default() if interpret is None else interpret
+    return block_scatter_pallas(
+        base_blocks.astype(jnp.float32), vals.astype(jnp.float32),
+        block_idx.astype(jnp.int32), interpret=interp)

@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose ground truth)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def dasha_update_ref(gn: Array, go: Array, h: Array, g_i: Array, *,
+                     b: float, a: float, pa: float, participates: Array
+                     ) -> Tuple[Array, Array, Array]:
+    """The per-node control-variate chain (Alg. 1 lines 9-11, k-rule of
+    Algs. 2/5):
+
+        k       = gn - go - b (h - go)
+        h_new   = h + participates * k / pa
+        payload = k / pa - (a / pa) (g_i - h)
+    """
+    k = gn - go - b * (h - go)
+    h_new = h + participates * (k / pa)
+    payload = k / pa - (a / pa) * (g_i - h)
+    return k, h_new, payload
+
+
+def block_gather_ref(x_blocks: Array, block_idx: Array, scale: float
+                     ) -> Array:
+    """RandK block gather: x_blocks (nb, bs), block_idx (kb,) ->
+    (kb, bs) scaled by ``scale`` (= nb / kb for unbiasedness)."""
+    return x_blocks[block_idx] * scale
+
+
+def block_scatter_add_ref(base_blocks: Array, vals: Array, block_idx: Array
+                          ) -> Array:
+    """base_blocks (nb, bs) += vals (kb, bs) at rows block_idx."""
+    return base_blocks.at[block_idx].add(vals)

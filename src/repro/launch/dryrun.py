@@ -1,0 +1,282 @@
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) combination with ShapeDtypeStruct inputs (no allocation), and
+record memory / cost / collective statistics for the roofline.
+
+MUST set the placeholder device count before ANY other import — jax
+locks the device count on first init.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+# ruff: noqa: E402
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sharded import ShardedDashaConfig
+from repro.launch.mesh import data_axes_of, make_production_mesh, num_nodes
+from repro.launch.specs import (decode_state_specs, prefill_input_specs,
+                                to_shardings, train_input_specs)
+from repro.models import Model, count_params, param_specs_like
+from repro.models.registry import (ARCH_IDS, INPUT_SHAPES, get_config,
+                                   pair_supported)
+from repro.training.optim import paper_server
+from repro.training.trainer import Trainer, TrainerConfig
+
+# Architectures whose DASHA control variates exceed single-pod HBM with
+# node = data-slice; on the multi-pod mesh they use node = pod
+# ("pod-as-client", DESIGN.md §5) so variates shard over (data, model).
+BIG_ARCHS = {"dbrx-132b", "qwen1.5-110b", "llama3-405b", "yi-34b"}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(pred|bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64|c64|c128)\[([0-9,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-device collective payload bytes by op type, from the optimized
+    (SPMD-partitioned) HLO: for each collective instruction we count its
+    output shape bytes (ring all-gather/reduce-scatter move ~(n-1)/n of
+    this per link; we report the raw payload and apply link factors in
+    the roofline)."""
+    out: Dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        eq = s.find(" = ")
+        if eq < 0:
+            continue
+        matched = None
+        for c in _COLLECTIVES:
+            # "<name> = <shape> <op>(" — async ops appear as "<op>-start(";
+            # "-done" carries no payload of its own.
+            for suffix in ("(", "-start("):
+                i = s.find(" " + c + suffix, eq)
+                if i > 0:
+                    matched = (c, s[eq + 3:i])
+                    break
+            if matched:
+                break
+        if matched:
+            c, shape_txt = matched
+            out[c] += _shape_bytes(shape_txt)
+            out["count"] += 1
+    return out
+
+
+def _dasha_config_for(arch_id: str, mesh, n_params: int) -> ShardedDashaConfig:
+    """Baseline (paper-faithful) DASHA-PP-MVR configuration per DESIGN.md:
+    independent participation p_a = 0.5, BlockRandK with K/D = 1/64
+    (omega = 63), theory momenta a = p_a/(2w+1), b = p_a/(2-p_a)."""
+    axes = data_axes_of(mesh)
+    if arch_id in BIG_ARCHS and "pod" in mesh.shape:
+        axes = ("pod",)           # pod-as-client for the biggest models
+    p_a = 0.5
+    omega = 63.0
+    return ShardedDashaConfig(
+        gamma=1e-3,
+        a=p_a / (2 * omega + 1),
+        b=p_a / (2 - p_a),
+        p_a=p_a,
+        sampler="independent",
+        compression_ratio=1.0 / 64,
+        block_size=128,
+        aggregation="sparse_allgather",
+        data_axes=axes,
+    )
+
+
+def lower_pair(arch_id: str, shape_name: str, *, multi_pod: bool,
+               dasha_overrides: Optional[dict] = None,
+               arch_overrides: Optional[dict] = None,
+               fsdp: bool = True) -> Dict[str, Any]:
+    shape = INPUT_SHAPES[shape_name]
+    cfg = get_config(arch_id)
+    if shape.name == "long_500k":
+        cfg = cfg.for_long_context()
+    if arch_overrides:
+        cfg = cfg.with_overrides(**arch_overrides)
+    ok, reason = pair_supported(cfg, shape)
+    rec: Dict[str, Any] = {
+        "arch": arch_id, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": shape.kind,
+    }
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = Model(cfg)
+    params_shape = jax.eval_shape(model.init_params, jax.random.key(0))
+    n_params = count_params(params_shape)
+    rec["params"] = n_params
+    pspecs = param_specs_like(params_shape, mesh,
+                              fsdp_axis="data" if fsdp else None)
+
+    t0 = time.time()
+    if shape.kind == "train":
+        dcfg = _dasha_config_for(arch_id, mesh, n_params)
+        if dasha_overrides:
+            import dataclasses as _dc
+            dcfg = _dc.replace(dcfg, **dasha_overrides)
+        trainer = Trainer(model, mesh, TrainerConfig(
+            dasha=dcfg, server=paper_server(gamma=dcfg.gamma),
+            fsdp=fsdp))
+        batch_sds, _ = train_input_specs(cfg, shape, mesh)
+        state_sds = jax.eval_shape(trainer._init_abstract, jax.random.key(0))
+        key_sds = jax.eval_shape(lambda: jax.random.key(0))
+        step_jit = trainer.jit_train_step(batch_sds)
+        lowered = step_jit.lower(state_sds, batch_sds, key_sds)
+        rec["dasha"] = {
+            "data_axes": list(dcfg.data_axes),
+            "p_a": dcfg.p_a,
+            "ratio": dcfg.compression_ratio,
+            "aggregation": dcfg.aggregation,
+            "uplink_bits_per_node_round":
+                trainer.engine.uplink_bits_per_round(n_params),
+        }
+    elif shape.kind == "prefill":
+        batch_sds, bspecs = prefill_input_specs(cfg, shape, mesh)
+        # production prefill: last-token logits + per-layer caches out
+        fwd = jax.jit(
+            model.prefill,
+            in_shardings=(to_shardings(pspecs, mesh),
+                          to_shardings(bspecs, mesh)),
+        )
+        lowered = fwd.lower(params_shape, batch_sds)
+    else:  # decode
+        B = shape.global_batch
+        state_shape = jax.eval_shape(
+            lambda: model.init_decode_state(B, shape.seq_len))
+        sspecs = decode_state_specs(state_shape, mesh,
+                                    num_layers=cfg.num_layers)
+        tok_sds = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        n = num_nodes(mesh)
+        tspec = jax.tree.map(
+            lambda _: jax.sharding.PartitionSpec(
+                data_axes_of(mesh)[0] if len(data_axes_of(mesh)) == 1
+                else tuple(data_axes_of(mesh)), None)
+            if B % n == 0 else jax.sharding.PartitionSpec(None, None),
+            tok_sds)
+        step = jax.jit(
+            model.serve_step,
+            in_shardings=(to_shardings(pspecs, mesh),
+                          to_shardings(tspec, mesh),
+                          to_shardings(sspecs, mesh)),
+            # donate the decode state: in-place cache update instead of a
+            # full cache copy per token (§Perf iteration Q2)
+            donate_argnums=(2,),
+        )
+        lowered = step.lower(params_shape, tok_sds, state_shape)
+    rec["lower_s"] = round(time.time() - t0, 2)
+
+    t1 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t1, 2)
+
+    cost = compiled.cost_analysis()
+    mem = compiled.memory_analysis()
+    rec["flops_per_device"] = float(cost.get("flops", 0.0))
+    rec["bytes_per_device"] = float(cost.get("bytes accessed", 0.0))
+    rec["memory"] = {
+        "argument_bytes": mem.argument_size_in_bytes,
+        "output_bytes": mem.output_size_in_bytes,
+        "temp_bytes": mem.temp_size_in_bytes,
+        "alias_bytes": mem.alias_size_in_bytes,
+        "code_bytes": mem.generated_code_size_in_bytes,
+    }
+    hlo = compiled.as_text()
+    rec["collectives"] = collective_bytes(hlo)
+    rec["status"] = "ok"
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, help="single arch id (default all)")
+    ap.add_argument("--shape", default=None, help="single input shape")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--dasha-ratio", type=float, default=None)
+    ap.add_argument("--dasha-aggregation", default=None)
+    ap.add_argument("--dasha-pallas", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    archs = [args.arch] if args.arch else list(ARCH_IDS)
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    overrides = {}
+    if args.dasha_ratio is not None:
+        overrides["compression_ratio"] = args.dasha_ratio
+    if args.dasha_aggregation:
+        overrides["aggregation"] = args.dasha_aggregation
+    if args.dasha_pallas:
+        overrides["use_pallas"] = True
+
+    n_fail = 0
+    for arch in archs:
+        for shp in shapes:
+            for mp in meshes:
+                mesh_tag = "2x16x16" if mp else "16x16"
+                name = f"{args.tag}__{arch}__{shp}__{mesh_tag}.json"
+                path = os.path.join(args.out, name)
+                print(f"=== {arch} x {shp} x {mesh_tag} ===", flush=True)
+                try:
+                    rec = lower_pair(arch, shp, multi_pod=mp,
+                                     dasha_overrides=overrides or None)
+                except Exception as e:  # noqa: BLE001
+                    traceback.print_exc()
+                    rec = {"arch": arch, "shape": shp, "mesh": mesh_tag,
+                           "status": "error", "error": repr(e)}
+                    n_fail += 1
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                status = rec.get("status")
+                if status == "ok":
+                    print(f"  ok: compile={rec['compile_s']}s "
+                          f"flops/dev={rec['flops_per_device']:.3e} "
+                          f"coll={rec['collectives']}", flush=True)
+                    mem = rec["memory"]
+                    print(f"  memory/device: args={mem['argument_bytes']/2**30:.2f}GiB "
+                          f"temp={mem['temp_bytes']/2**30:.2f}GiB", flush=True)
+                elif status == "skipped":
+                    print(f"  skipped: {rec['reason']}", flush=True)
+    if n_fail:
+        raise SystemExit(f"{n_fail} pair(s) failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Production meshes.
+
+Defined as FUNCTIONS (not module-level constants) so importing this
+module never touches jax device state — required because the dry-run
+must set XLA_FLAGS before any jax initialization.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16x16 = 256 chips per pod (v5e); 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def data_axes_of(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def num_nodes(mesh: Mesh) -> int:
+    n = 1
+    for a in data_axes_of(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def make_host_mesh(data: int = 2, model: int = 2) -> Mesh:
+    """Small mesh for CPU tests/examples (requires
+    XLA_FLAGS=--xla_force_host_platform_device_count>=data*model)."""
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)

@@ -1,0 +1,57 @@
+"""Serving entrypoint:
+
+    python -m repro.launch.serve --arch granite-3-2b [--smoke] \
+        [--batch 8] [--max-seq 256] [--requests 16]
+
+``--smoke`` (CPU) uses the reduced config on a host mesh; on TPU the
+production mesh and full config are used, with decode-state shardings
+from launch/specs.decode_state_specs.
+"""
+import argparse
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    if args.smoke and "xla_force_host_platform_device_count" not in \
+            os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                                   + os.environ.get("XLA_FLAGS", ""))
+
+    import jax
+    import numpy as np
+    from repro.models import Model, get_config, get_smoke_config
+    from repro.serving.decode import DecodeServer, Request
+
+    cfg = (get_smoke_config(args.arch) if args.smoke
+           else get_config(args.arch))
+    if not cfg.supports_decode:
+        raise SystemExit(f"{args.arch} is encoder-only: no decode serving")
+    model = Model(cfg)
+    params = model.init_params(jax.random.key(0))
+    server = DecodeServer(model, params, batch_size=args.batch,
+                          max_seq_len=args.max_seq)
+    rng = np.random.default_rng(0)
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(1, cfg.vocab_size, 4).tolist(),
+                    max_new_tokens=args.new_tokens)
+            for i in range(args.requests)]
+    import time
+    t0 = time.time()
+    done = server.run(reqs)
+    dt = time.time() - t0
+    tot = sum(len(r.generated) for r in done)
+    print(f"served {len(done)} requests, {tot} tokens, "
+          f"{tot/dt:.1f} tok/s (batch={args.batch})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""Production training entrypoint:
+
+    python -m repro.launch.train --arch granite-3-2b --shape train_4k \
+        [--multi-pod] [--steps N] [--smoke]
+
+On real TPU hardware this builds the production mesh and runs the full
+config; ``--smoke`` (the CPU path) shrinks to the reduced config on a
+host mesh — same code path end to end.
+"""
+import argparse
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--p-a", type=float, default=0.5)
+    ap.add_argument("--ratio", type=float, default=1 / 64)
+    ap.add_argument("--aggregation", default="sparse_allgather")
+    ap.add_argument("--server", choices=["paper", "adamw"], default="paper")
+    ap.add_argument("--gamma", type=float, default=1e-3)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--log", default=None)
+    args = ap.parse_args()
+
+    if args.smoke and "xla_force_host_platform_device_count" not in \
+            os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                                   + os.environ.get("XLA_FLAGS", ""))
+
+    import jax
+    from repro.core.sharded import ShardedDashaConfig
+    from repro.data.synthetic import DataConfig, make_batch
+    from repro.launch.mesh import (data_axes_of, make_host_mesh,
+                                   make_production_mesh, num_nodes)
+    from repro.models import Model, get_config, get_smoke_config
+    from repro.models.registry import INPUT_SHAPES
+    from repro.training.loop import train
+    from repro.training.metrics import MetricsLogger
+    from repro.training.optim import adamw_server, paper_server
+    from repro.training.trainer import Trainer, TrainerConfig
+
+    if args.smoke:
+        mesh = make_host_mesh(data=4, model=2)
+        cfg = get_smoke_config(args.arch).with_overrides(dtype="float32")
+        seq, gbatch = 64, 8
+    else:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+        cfg = get_config(args.arch)
+        shp = INPUT_SHAPES[args.shape]
+        seq, gbatch = shp.seq_len, shp.global_batch
+
+    model = Model(cfg)
+    axes = data_axes_of(mesh)
+    n = num_nodes(mesh)
+    omega = 1.0 / args.ratio - 1.0
+    dcfg = ShardedDashaConfig(
+        gamma=args.gamma,
+        a=args.p_a / (2 * omega + 1),
+        b=args.p_a / (2 - args.p_a),
+        p_a=args.p_a, sampler="independent",
+        compression_ratio=args.ratio,
+        aggregation=args.aggregation, data_axes=axes)
+    server = (paper_server(args.gamma) if args.server == "paper"
+              else adamw_server(lr=3e-4))
+    trainer = Trainer(model, mesh, TrainerConfig(dasha=dcfg, server=server))
+    state = trainer.init(jax.random.key(0))
+
+    data = DataConfig(seq_len=seq, global_batch=gbatch, num_nodes=n,
+                      vocab_size=cfg.vocab_size)
+
+    def batches():
+        i = 0
+        while True:
+            yield make_batch(cfg, data, i, dtype=cfg.dtype)
+            i += 1
+
+    with jax.set_mesh(mesh):
+        train(trainer, state, batches(), num_steps=args.steps,
+              logger=MetricsLogger(args.log, print_every=10),
+              checkpoint_dir=args.ckpt,
+              checkpoint_every=50 if args.ckpt else 0)
+
+
+if __name__ == "__main__":
+    main()

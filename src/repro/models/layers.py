@@ -1,0 +1,281 @@
+"""Core neural layers: RMSNorm, RoPE, GQA attention (causal /
+bidirectional / sliding-window / KV-cache decode), gated MLP.
+
+Pure functional JAX; parameters are plain dicts of arrays.  All matmul
+layouts are (in_features, out_features) so the model axis shards the
+output dim (Megatron column-parallel) or input dim (row-parallel) via
+GSPMD propagation from the param specs.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# ----------------------------------------------------------------------
+# init helpers
+# ----------------------------------------------------------------------
+
+def dense_init(key: Array, d_in: int, d_out: int, dtype) -> Array:
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+def embed_init(key: Array, vocab: int, d: int, dtype) -> Array:
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+# ----------------------------------------------------------------------
+# RMSNorm
+# ----------------------------------------------------------------------
+
+def rmsnorm(x: Array, scale: Array, eps: float = 1e-5) -> Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(dt)
+
+
+# ----------------------------------------------------------------------
+# RoPE
+# ----------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (..., T, H, hd); positions: (..., T)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,T,1,hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# Attention
+# ----------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: Array          # (B, S, kvH, hd) — S = cache capacity
+    v: Array
+    # positions currently written are derived from the decode position
+
+
+def attention_weights_mask(q_pos: Array, k_pos: Array, causal: bool,
+                           window: Optional[int],
+                           full_prefix: int = 0) -> Array:
+    """(..., Tq, Tk) boolean mask. True = attend.  ``full_prefix`` marks
+    the first positions as bidirectionally attendable (PaliGemma-style
+    prefix-LM)."""
+    m = jnp.ones((q_pos.shape[-1], k_pos.shape[-1]), bool)
+    if causal:
+        c = q_pos[:, None] >= k_pos[None, :]
+        if window is not None:
+            c &= q_pos[:, None] - k_pos[None, :] < window
+        if full_prefix:
+            c |= k_pos[None, :] < full_prefix
+        m &= c
+    elif window is not None:
+        m &= jnp.abs(q_pos[:, None] - k_pos[None, :]) < window
+    m &= k_pos[None, :] >= 0          # negative k_pos marks empty cache slots
+    return m
+
+
+def blockwise_gqa_attention(q: Array, k: Array, v: Array,
+                            q_pos: Array, k_pos: Array, *,
+                            causal: bool, window: Optional[int],
+                            full_prefix: int = 0,
+                            q_block: int = 512, k_block: int = 1024
+                            ) -> Array:
+    """Flash-style attention: online-softmax scan over key blocks so the
+    (Tq, Tk) score matrix is never materialized (a 32k prefill otherwise
+    needs O(T^2) temp — observed 0.5 TB/device in the dry-run).
+
+    q: (B, Tq, H, hd); k/v: (B, Tk, kvH, hd).  Positions drive the
+    causal/window/prefix mask exactly like
+    :func:`attention_weights_mask`.
+    """
+    B, Tq, H, hd = q.shape
+    Tk, kvH = k.shape[1], k.shape[2]
+    G = H // kvH
+    qb = min(q_block, Tq)
+    kb = min(k_block, Tk)
+    pq, pk = (-Tq) % qb, (-Tk) % kb
+
+    qf = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    kf = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    vf = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    qp = jnp.pad(q_pos, (0, pq), constant_values=-1)
+    kp = jnp.pad(k_pos, (0, pk), constant_values=-(1 << 30))
+    nq, nk = qf.shape[1] // qb, kf.shape[1] // kb
+
+    qf = qf.reshape(B, nq, qb, kvH, G, hd).astype(jnp.float32)
+    kf = kf.reshape(B, nk, kb, kvH, hd).astype(jnp.float32)
+    vf = vf.reshape(B, nk, kb, kvH, hd).astype(jnp.float32)
+    qp = qp.reshape(nq, qb)
+    kp = kp.reshape(nk, kb)
+    scale = 1.0 / math.sqrt(hd)
+
+    def q_step(_, qi):
+        qblk, qpos = qi                       # (B,qb,kvH,G,hd), (qb,)
+
+        @jax.checkpoint
+        def k_step(carry, ki):
+            acc, m, l = carry
+            kblk, vblk, kpos = ki
+            s = jnp.einsum("bqkgh,bskh->bkgqs", qblk, kblk) * scale
+            mask = jnp.ones((qb, kb), bool)
+            if causal:
+                cm = qpos[:, None] >= kpos[None, :]
+                if window is not None:
+                    cm &= qpos[:, None] - kpos[None, :] < window
+                if full_prefix:
+                    cm |= kpos[None, :] < full_prefix
+                mask &= cm
+            mask &= kpos[None, :] >= 0
+            mask &= qpos[:, None] >= 0
+            s = jnp.where(mask[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            corr = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bskh->bkgqh", p, vblk)
+            return (acc_new, m_new, l_new), None
+
+        acc0 = jnp.zeros((B, kvH, G, qb, hd), jnp.float32)
+        m0 = jnp.full((B, kvH, G, qb), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, kvH, G, qb), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(
+            k_step, (acc0, m0, l0),
+            (kf.transpose(1, 0, 2, 3, 4), vf.transpose(1, 0, 2, 3, 4), kp))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]     # (B,kvH,G,qb,hd)
+        return None, out.transpose(0, 3, 1, 2, 4)        # (B,qb,kvH,G,hd)
+
+    _, outs = jax.lax.scan(q_step, None,
+                           (qf.transpose(1, 0, 2, 3, 4, 5), qp))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, nq * qb, H, hd)
+    return out[:, :Tq].astype(v.dtype)
+
+
+def gqa_attention(q: Array, k: Array, v: Array, mask: Array) -> Array:
+    """q: (B, Tq, H, hd); k/v: (B, Tk, kvH, hd); mask: (Tq, Tk) or
+    (B, Tq, Tk).  Grouped-query: H = G * kvH."""
+    B, Tq, H, hd = q.shape
+    kvH = k.shape[2]
+    G = H // kvH
+    q = q.reshape(B, Tq, kvH, G, hd)
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", q, k).astype(jnp.float32)
+    logits = logits / math.sqrt(hd)
+    if mask.ndim == 2:
+        mask_b = mask[None, None, None]
+    else:
+        mask_b = mask[:, None, None]
+    logits = jnp.where(mask_b, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
+    return out.reshape(B, Tq, H, hd)
+
+
+def init_attention(key: Array, cfg) -> dict:
+    hd = cfg.hd
+    ks = jax.random.split(key, 5)
+    p = {
+        "wq": dense_init(ks[0], cfg.d_model, cfg.num_heads * hd, cfg.param_dtype),
+        "wk": dense_init(ks[1], cfg.d_model, cfg.num_kv_heads * hd, cfg.param_dtype),
+        "wv": dense_init(ks[2], cfg.d_model, cfg.num_kv_heads * hd, cfg.param_dtype),
+        "wo": dense_init(ks[3], cfg.num_heads * hd, cfg.d_model, cfg.param_dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.num_heads * hd,), cfg.param_dtype)
+        p["bk"] = jnp.zeros((cfg.num_kv_heads * hd,), cfg.param_dtype)
+        p["bv"] = jnp.zeros((cfg.num_kv_heads * hd,), cfg.param_dtype)
+    return p
+
+
+def attention_block(p: dict, x: Array, positions: Array, cfg,
+                    cache: Optional[KVCache] = None,
+                    cache_pos: Optional[Array] = None,
+                    causal: bool = True,
+                    full_prefix: int = 0,
+                    ) -> Tuple[Array, Optional[KVCache]]:
+    """Full attention sub-block (pre-norm residual handled by caller).
+
+    Training/prefill: ``cache=None`` — self-attention over x.
+    Decode: ``cache`` given, x is (B, 1, D), ``cache_pos`` the absolute
+    position; the KV pair is written at ``cache_pos % S`` (ring buffer,
+    S = window for SWA else seq_len).
+    """
+    B, T, D = x.shape
+    hd = cfg.hd
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, T, cfg.num_heads, hd)
+    k = k.reshape(B, T, cfg.num_kv_heads, hd)
+    v = v.reshape(B, T, cfg.num_kv_heads, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    if cache is None:
+        k_pos = positions[0] if positions.ndim > 1 else positions
+        q_pos = k_pos
+        if T > 1024:
+            # flash-style blockwise path: O(block^2) memory
+            out = blockwise_gqa_attention(
+                q, k, v, q_pos, k_pos, causal=causal,
+                window=cfg.attention_window, full_prefix=full_prefix)
+        else:
+            mask = attention_weights_mask(q_pos, k_pos, causal,
+                                          cfg.attention_window,
+                                          full_prefix=full_prefix)
+            out = gqa_attention(q, k, v, mask)
+        new_cache = KVCache(k=k, v=v)
+    else:
+        S = cache.k.shape[1]
+        slot = (cache_pos % S).astype(jnp.int32)
+        k_new = cache.k.at[:, slot].set(k[:, 0].astype(cache.k.dtype))
+        v_new = cache.v.at[:, slot].set(v[:, 0].astype(cache.v.dtype))
+        # absolute positions of cache slots given ring layout
+        slots = jnp.arange(S)
+        wraps = (cache_pos // S).astype(jnp.int32)
+        abs_pos = jnp.where(slots <= slot, wraps * S + slots,
+                            (wraps - 1) * S + slots)
+        q_pos = cache_pos[None].astype(jnp.int32)
+        mask = attention_weights_mask(q_pos, abs_pos, causal,
+                                      cfg.attention_window)
+        out = gqa_attention(q, k_new, v_new, mask)
+        new_cache = KVCache(k=k_new, v=v_new)
+
+    out = out.reshape(B, T, cfg.num_heads * hd)
+    return out @ p["wo"], new_cache
+
+
+# ----------------------------------------------------------------------
+# Gated MLP (SwiGLU / GeGLU)
+# ----------------------------------------------------------------------
+
+def init_mlp(key: Array, d_model: int, d_ff: int, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], d_model, d_ff, dtype),
+        "w_up": dense_init(ks[1], d_model, d_ff, dtype),
+        "w_down": dense_init(ks[2], d_ff, d_model, dtype),
+    }
+
+
+def mlp_block(p: dict, x: Array, activation: str = "silu") -> Array:
+    act = jax.nn.silu if activation == "silu" else jax.nn.gelu
+    return (act(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]

@@ -1,0 +1,116 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+KV are compressed through a low-rank latent ``c_kv = x W_dkv`` (rank
+``kv_lora_rank``); per-head K(nope)/V are up-projected from the latent,
+and a single shared rope-carrying key ``k_rope`` is computed directly
+from x.  The decode cache stores only ``(c_kv, k_rope)`` —
+``kv_lora_rank + qk_rope_head_dim`` floats per token instead of
+``2 * kvH * hd`` — MLA's cache saving, which the decode rooflines show.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (apply_rope, attention_weights_mask,
+                                 blockwise_gqa_attention, dense_init)
+
+Array = jax.Array
+
+
+def v_pad_to_match(v: Array, q: Array) -> Array:
+    """Zero-pad v's head_dim to q's (blockwise core assumes equal dims)."""
+    pad = q.shape[-1] - v.shape[-1]
+    if pad <= 0:
+        return v
+    return jnp.pad(v, ((0, 0),) * (v.ndim - 1) + ((0, pad),))
+
+
+class MLACache(NamedTuple):
+    c_kv: Array     # (B, S, r)
+    k_rope: Array   # (B, S, rope_hd)
+
+
+def init_mla(key: Array, cfg) -> dict:
+    a = cfg.mla
+    dt = cfg.param_dtype
+    H = cfg.num_heads
+    ks = jax.random.split(key, 6)
+    qk_hd = a.qk_nope_head_dim + a.qk_rope_head_dim
+    return {
+        "w_q": dense_init(ks[0], cfg.d_model, H * qk_hd, dt),
+        "w_dkv": dense_init(ks[1], cfg.d_model, a.kv_lora_rank, dt),
+        "w_uk": dense_init(ks[2], a.kv_lora_rank, H * a.qk_nope_head_dim, dt),
+        "w_uv": dense_init(ks[3], a.kv_lora_rank, H * a.v_head_dim, dt),
+        "w_kr": dense_init(ks[4], cfg.d_model, a.qk_rope_head_dim, dt),
+        "w_o": dense_init(ks[5], H * a.v_head_dim, cfg.d_model, dt),
+    }
+
+
+def mla_block(p: dict, x: Array, positions: Array, cfg,
+              cache: Optional[MLACache] = None,
+              cache_pos: Optional[Array] = None,
+              ) -> Tuple[Array, Optional[MLACache]]:
+    a = cfg.mla
+    B, T, D = x.shape
+    H = cfg.num_heads
+    qk_hd = a.qk_nope_head_dim + a.qk_rope_head_dim
+
+    q = (x @ p["w_q"]).reshape(B, T, H, qk_hd)
+    q_nope, q_rope = jnp.split(q, [a.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    c_kv = x @ p["w_dkv"]                              # (B, T, r)
+    k_rope = (x @ p["w_kr"])[:, :, None, :]            # (B, T, 1, rope_hd)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)[:, :, 0]
+
+    if cache is None:
+        kv_lat, kr = c_kv, k_rope
+        k_pos = positions[0] if positions.ndim > 1 else positions
+        q_pos = k_pos
+        # prefill/training produce the latent cache for decode handoff
+        new_cache = MLACache(c_kv=c_kv, k_rope=k_rope)
+    else:
+        S = cache.c_kv.shape[1]
+        slot = (cache_pos % S).astype(jnp.int32)
+        kv_lat = cache.c_kv.at[:, slot].set(c_kv[:, 0].astype(cache.c_kv.dtype))
+        kr = cache.k_rope.at[:, slot].set(k_rope[:, 0].astype(cache.k_rope.dtype))
+        slots = jnp.arange(S)
+        wraps = (cache_pos // S).astype(jnp.int32)
+        k_pos = jnp.where(slots <= slot, wraps * S + slots,
+                          (wraps - 1) * S + slots)
+        q_pos = cache_pos[None].astype(jnp.int32)
+        new_cache = MLACache(c_kv=kv_lat, k_rope=kr)
+
+    k_nope = jnp.einsum("bsr,rx->bsx", kv_lat, p["w_uk"]).reshape(
+        kv_lat.shape[0], kv_lat.shape[1], H, a.qk_nope_head_dim)
+    v = jnp.einsum("bsr,rx->bsx", kv_lat, p["w_uv"]).reshape(
+        kv_lat.shape[0], kv_lat.shape[1], H, a.v_head_dim)
+
+    if cache is None and T > 1024:
+        # flash-style path for long prefill/train: fold the shared rope
+        # key into per-head keys and reuse the blockwise GQA core.
+        q_cat = jnp.concatenate([q_nope, q_rope], axis=-1)
+        kr_b = jnp.broadcast_to(kr[:, :, None, :],
+                                k_nope.shape[:3] + (a.qk_rope_head_dim,))
+        k_cat = jnp.concatenate([k_nope, kr_b], axis=-1)
+        # blockwise core scales by 1/sqrt(qk_hd) internally via head_dim
+        out = blockwise_gqa_attention(
+            q_cat, k_cat, v_pad_to_match(v, q_cat), q_pos, k_pos,
+            causal=True, window=cfg.attention_window)
+        out = out[..., :a.v_head_dim]
+    else:
+        mask = attention_weights_mask(q_pos, k_pos, causal=True,
+                                      window=cfg.attention_window)
+        scale = 1.0 / math.sqrt(qk_hd)
+        logits = (jnp.einsum("bqhx,bshx->bhqs", q_nope, k_nope)
+                  + jnp.einsum("bqhx,bsx->bhqs", q_rope, kr)).astype(jnp.float32)
+        logits = logits * scale
+        logits = jnp.where(mask[None, None], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+        out = jnp.einsum("bhqs,bshx->bqhx", probs, v)
+    out = out.reshape(B, T, H * a.v_head_dim)
+    return out @ p["w_o"], new_cache

@@ -1,0 +1,418 @@
+"""Model assembly: embeddings -> blocks (scan or unrolled) -> head.
+
+One :class:`Model` class covers all six arch families via block
+composition:
+
+* ``dense``   — GQA attention + gated MLP (granite, yi, qwen, llama3)
+* ``moe``     — GQA attention + MoE FFN (dbrx); ``mla`` sub-config swaps
+  the attention for Multi-head Latent Attention (deepseek-v2-lite)
+* ``ssm``     — xLSTM: mLSTM blocks with every k-th an sLSTM (xlstm-350m)
+* ``hybrid``  — parallel attention + Mamba heads per layer (hymba)
+* ``audio``   — bidirectional encoder over stub frame embeddings (hubert)
+* ``vlm``     — stub patch embeddings prefixed to a gemma-style decoder
+  with full attention over the prefix (paligemma)
+
+Training entry: ``loss(params, batch)``; decode entry:
+``serve_step(params, token, state)`` (one new token against the cache).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ssm as ssm_lib
+from repro.models.common import ArchConfig
+from repro.models.layers import (KVCache, attention_block, embed_init,
+                                 init_attention, init_mlp, mlp_block,
+                                 rmsnorm)
+from repro.models.mla import MLACache, init_mla, mla_block
+from repro.models.moe import init_moe, moe_block
+
+Array = jax.Array
+
+
+class DecodeState(NamedTuple):
+    """Per-layer decode state; leaves stacked over layers for scanned
+    models, tuples for unrolled (xLSTM)."""
+    caches: Any
+    position: Array       # scalar int32 — next absolute position
+
+
+# ======================================================================
+# Blocks
+# ======================================================================
+
+def _block_init(key: Array, cfg: ArchConfig, kind: str) -> dict:
+    ks = jax.random.split(key, 8)
+    dt = cfg.param_dtype
+    D = cfg.d_model
+    p = {"ln1": jnp.ones((D,), dt)}
+    if kind in ("dense", "encoder", "vlm"):
+        p["attn"] = init_attention(ks[0], cfg)
+        p["ln2"] = jnp.ones((D,), dt)
+        p["mlp"] = init_mlp(ks[1], D, cfg.d_ff, dt)
+    elif kind == "moe":
+        if cfg.mla is not None:
+            p["attn"] = init_mla(ks[0], cfg)
+        else:
+            p["attn"] = init_attention(ks[0], cfg)
+        p["ln2"] = jnp.ones((D,), dt)
+        p["moe"] = init_moe(ks[1], cfg)
+    elif kind == "hybrid":
+        p["attn"] = init_attention(ks[0], cfg)
+        p["mamba"] = ssm_lib.init_mamba(ks[1], cfg)
+        p["ln_attn"] = jnp.ones((D,), dt)
+        p["ln_mamba"] = jnp.ones((D,), dt)
+        p["ln2"] = jnp.ones((D,), dt)
+        p["mlp"] = init_mlp(ks[2], D, cfg.d_ff, dt)
+    elif kind == "mlstm":
+        p["mix"] = ssm_lib.init_mlstm(ks[0], cfg)
+    elif kind == "slstm":
+        p["mix"] = ssm_lib.init_slstm(ks[0], cfg)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def _block_apply(p: dict, x: Array, positions: Array, cfg: ArchConfig,
+                 kind: str, cache=None, cache_pos=None, prefix_len: int = 0
+                 ) -> Tuple[Array, Any, Array]:
+    """-> (x_out, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    causal = not cfg.is_encoder
+    if kind in ("dense", "encoder", "vlm"):
+        h, new_cache = attention_block(p["attn"], rmsnorm(x, p["ln1"], cfg.rms_eps),
+                                       positions, cfg, cache=cache,
+                                       cache_pos=cache_pos, causal=causal,
+                                       full_prefix=prefix_len)
+        x = x + h
+        x = x + mlp_block(p["mlp"], rmsnorm(x, p["ln2"], cfg.rms_eps),
+                          activation="gelu" if kind == "vlm" else "silu")
+    elif kind == "moe":
+        xn = rmsnorm(x, p["ln1"], cfg.rms_eps)
+        if cfg.mla is not None:
+            h, new_cache = mla_block(p["attn"], xn, positions, cfg,
+                                     cache=cache, cache_pos=cache_pos)
+        else:
+            h, new_cache = attention_block(p["attn"], xn, positions, cfg,
+                                           cache=cache, cache_pos=cache_pos,
+                                           causal=True)
+        x = x + h
+        mo, aux = moe_block(p["moe"], rmsnorm(x, p["ln2"], cfg.rms_eps), cfg)
+        x = x + mo
+    elif kind == "hybrid":
+        xn = rmsnorm(x, p["ln1"], cfg.rms_eps)
+        a_cache = m_state = None
+        if cache is not None:
+            a_cache, m_state = cache
+        h_attn, a_new = attention_block(p["attn"], xn, positions, cfg,
+                                        cache=a_cache, cache_pos=cache_pos,
+                                        causal=True)
+        h_mamba, m_new = ssm_lib.mamba_forward(p["mamba"], xn, cfg,
+                                               state=m_state)
+        # parallel-head fusion (arXiv:2411.13676): mean of normalized outputs
+        fused = 0.5 * (rmsnorm(h_attn, p["ln_attn"], cfg.rms_eps)
+                       + rmsnorm(h_mamba, p["ln_mamba"], cfg.rms_eps))
+        x = x + fused
+        x = x + mlp_block(p["mlp"], rmsnorm(x, p["ln2"], cfg.rms_eps))
+        new_cache = (a_new, m_new)
+    elif kind == "mlstm":
+        xn = rmsnorm(x, p["ln1"], cfg.rms_eps)
+        h, new_cache = ssm_lib.mlstm_forward(p["mix"], xn, cfg, state=cache)
+        x = x + h
+    elif kind == "slstm":
+        xn = rmsnorm(x, p["ln1"], cfg.rms_eps)
+        h, new_cache = ssm_lib.slstm_forward(p["mix"], xn, cfg, state=cache)
+        x = x + h
+    else:
+        raise ValueError(kind)
+    return x, new_cache, aux
+
+
+def _pad_cache_capacity(caches: Any, extra: int) -> Any:
+    """Grow the sequence axis of attention caches by ``extra`` empty
+    slots (SSM states are O(1) and untouched).  Works for stacked
+    (L, B, S, ...) and unstacked (B, S, ...) layouts: the seq axis sits
+    at -3 for KVCache and -2 for MLACache leaves."""
+
+    def pad_axis(x, axis):
+        widths = [(0, 0)] * x.ndim
+        widths[axis] = (0, extra)
+        return jnp.pad(x, widths)
+
+    def rec(c):
+        if isinstance(c, KVCache):
+            return KVCache(k=pad_axis(c.k, -3), v=pad_axis(c.v, -3))
+        if isinstance(c, MLACache):
+            return MLACache(c_kv=pad_axis(c.c_kv, -2),
+                            k_rope=pad_axis(c.k_rope, -2))
+        if isinstance(c, tuple) and not hasattr(c, "_fields"):
+            return tuple(rec(e) for e in c)
+        return c
+
+    return rec(caches)
+
+
+# ======================================================================
+# Model
+# ======================================================================
+
+def _layer_kinds(cfg: ArchConfig) -> Tuple[str, ...]:
+    if cfg.arch_type == "dense":
+        return ("dense",) * cfg.num_layers
+    if cfg.arch_type == "moe":
+        return ("moe",) * cfg.num_layers
+    if cfg.arch_type == "hybrid":
+        return ("hybrid",) * cfg.num_layers
+    if cfg.arch_type == "audio":
+        return ("encoder",) * cfg.num_layers
+    if cfg.arch_type == "vlm":
+        return ("vlm",) * cfg.num_layers
+    if cfg.arch_type == "ssm":  # xLSTM mix
+        k = cfg.xlstm.slstm_every
+        return tuple("slstm" if (i + 1) % k == 0 else "mlstm"
+                     for i in range(cfg.num_layers))
+    raise ValueError(cfg.arch_type)
+
+
+class Model:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.kinds = _layer_kinds(cfg)
+        self.uniform = len(set(self.kinds)) == 1
+        self.scan = cfg.scan_layers and self.uniform
+
+    # -- params ----------------------------------------------------------
+    def init_params(self, key: Array) -> dict:
+        cfg = self.cfg
+        k_embed, k_layers, k_head = jax.random.split(key, 3)
+        params: dict = {"final_norm": jnp.ones((cfg.d_model,), cfg.param_dtype)}
+        # vocab padded to a multiple of 256 so embed/head shard over the
+        # model axis (common.ArchConfig.padded_vocab)
+        if cfg.frontend != "audio":
+            params["embed"] = embed_init(k_embed, cfg.padded_vocab,
+                                         cfg.d_model, cfg.param_dtype)
+        else:
+            params["embed_norm"] = jnp.ones((cfg.d_model,), cfg.param_dtype)
+        if not cfg.tie_embeddings or cfg.frontend == "audio":
+            params["lm_head"] = embed_init(k_head, cfg.padded_vocab,
+                                           cfg.d_model, cfg.param_dtype).T
+
+        layer_keys = jax.random.split(k_layers, cfg.num_layers)
+        if self.uniform:
+            kind = self.kinds[0]
+            if self.scan:
+                params["layers"] = jax.vmap(
+                    lambda k: _block_init(k, cfg, kind))(layer_keys)
+            else:
+                stacked = [_block_init(k, cfg, kind) for k in layer_keys]
+                params["layers"] = jax.tree.map(
+                    lambda *xs: jnp.stack(xs), *stacked)
+        else:
+            params["layers"] = tuple(
+                _block_init(k, cfg, kind)
+                for k, kind in zip(layer_keys, self.kinds))
+        return params
+
+    # -- embedding -------------------------------------------------------
+    def _embed(self, params: dict, batch: dict) -> Tuple[Array, Array]:
+        """-> (x (B, T, D), positions (T,))."""
+        cfg = self.cfg
+        if cfg.frontend == "audio":
+            x = rmsnorm(batch["embeds"], params["embed_norm"], cfg.rms_eps)
+        elif cfg.frontend == "vision":
+            tok = params["embed"][batch["tokens"]]
+            x = jnp.concatenate([batch["embeds"].astype(tok.dtype), tok], axis=1)
+        else:
+            x = params["embed"][batch["tokens"]]
+        if cfg.frontend != "vlm":
+            x = x * jnp.sqrt(jnp.asarray(cfg.d_model, x.dtype))
+        positions = jnp.arange(x.shape[1])
+        return x, positions
+
+    # -- forward ----------------------------------------------------------
+    def forward(self, params: dict, batch: dict, *,
+                collect_caches: bool = False, last_token_only: bool = False):
+        """Training/prefill forward.  -> (logits (B, T, V_pad), aux_loss)
+        [+ per-layer caches if ``collect_caches``]."""
+        cfg = self.cfg
+        x, positions = self._embed(params, batch)
+        prefix_len = (batch["embeds"].shape[1]
+                      if cfg.frontend == "vision" else 0)
+
+        if self.scan:
+            kind = self.kinds[0]
+
+            def body(carry, layer_p):
+                h, aux = carry
+                h, c, a = _block_apply(layer_p, h, positions, cfg, kind,
+                                       prefix_len=prefix_len)
+                return (h, aux + a), (c if collect_caches else None)
+
+            body_fn = jax.checkpoint(body) if cfg.remat else body
+            (x, aux), caches = jax.lax.scan(
+                body_fn, (x, jnp.zeros((), jnp.float32)), params["layers"])
+        else:
+            aux = jnp.zeros((), jnp.float32)
+            cache_list = []
+            layers = params["layers"]
+            for i, kind in enumerate(self.kinds):
+                lp = (layers[i] if isinstance(layers, tuple)
+                      else jax.tree.map(lambda t: t[i], layers))
+                apply = functools.partial(_block_apply, kind=kind,
+                                          prefix_len=prefix_len)
+                if cfg.remat:
+                    apply = jax.checkpoint(apply, static_argnums=(3,))
+                x, c, a = apply(lp, x, positions, cfg)
+                cache_list.append(c)
+                aux = aux + a
+            caches = tuple(cache_list) if collect_caches else None
+
+        x = rmsnorm(x, params["final_norm"], cfg.rms_eps)
+        if last_token_only:
+            x = x[:, -1:]
+        head = (params["embed"].T if self.cfg.tie_embeddings
+                and "lm_head" not in params else params["lm_head"])
+        logits = x @ head
+        if collect_caches:
+            return logits, aux, caches
+        return logits, aux
+
+    def prefill(self, params: dict, batch: dict, extra_capacity: int = 0
+                ) -> Tuple[Array, "DecodeState"]:
+        """Inference prefill: run the full prompt once, return the
+        last-position logits (B, vocab) and a DecodeState holding the
+        per-layer KV caches / recurrent states for subsequent decode.
+        Cache capacity is prompt length + ``extra_capacity`` (ring
+        semantics evict the oldest tokens once exhausted)."""
+        cfg = self.cfg
+        logits, _, caches = self.forward(params, batch, collect_caches=True,
+                                         last_token_only=True)
+        if extra_capacity:
+            caches = _pad_cache_capacity(caches, extra_capacity)
+        if cfg.frontend == "vision":
+            T = batch["embeds"].shape[1] + batch["tokens"].shape[1]
+        elif cfg.frontend == "audio":
+            T = batch["embeds"].shape[1]
+        else:
+            T = batch["tokens"].shape[1]
+        return (logits[:, 0, :cfg.vocab_size],
+                DecodeState(caches=caches,
+                            position=jnp.asarray(T, jnp.int32)))
+
+    # -- loss --------------------------------------------------------------
+    def loss(self, params: dict, batch: dict) -> Array:
+        """Next-token CE (decoder), frame CE (audio encoder), or text CE
+        on the suffix (VLM)."""
+        cfg = self.cfg
+        logits, aux = self.forward(params, batch)
+        if cfg.frontend == "audio":
+            targets = batch["targets"]
+            mask = jnp.ones_like(targets, jnp.float32)
+        elif cfg.frontend == "vision":
+            ptoks = batch["embeds"].shape[1]
+            logits = logits[:, ptoks:-1]
+            targets = batch["tokens"][:, 1:]
+            mask = (targets >= 0).astype(jnp.float32)
+        else:
+            logits = logits[:, :-1]
+            targets = batch["tokens"][:, 1:]
+            mask = (targets >= 0).astype(jnp.float32)
+        logits = logits.astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(
+            logits, jnp.maximum(targets, 0)[..., None], axis=-1)[..., 0]
+        ce = jnp.sum((lse - tgt) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        return ce + aux
+
+    # -- decode -------------------------------------------------------------
+    def cache_capacity(self, seq_len: int) -> int:
+        w = self.cfg.attention_window
+        return min(seq_len, w) if w else seq_len
+
+    def _layer_cache(self, kind: str, batch: int, seq_len: int,
+                     dtype) -> Any:
+        cfg = self.cfg
+        S = self.cache_capacity(seq_len)
+        if kind in ("dense", "vlm", "hybrid"):
+            kv = KVCache(
+                k=jnp.zeros((batch, S, cfg.num_kv_heads, cfg.hd), dtype),
+                v=jnp.zeros((batch, S, cfg.num_kv_heads, cfg.hd), dtype))
+            if kind == "hybrid":
+                return (kv, ssm_lib.mamba_init_state(cfg, batch, dtype=dtype))
+            return kv
+        if kind == "moe":
+            if cfg.mla is not None:
+                a = cfg.mla
+                return MLACache(
+                    c_kv=jnp.zeros((batch, S, a.kv_lora_rank), dtype),
+                    k_rope=jnp.zeros((batch, S, a.qk_rope_head_dim), dtype))
+            return KVCache(
+                k=jnp.zeros((batch, S, cfg.num_kv_heads, cfg.hd), dtype),
+                v=jnp.zeros((batch, S, cfg.num_kv_heads, cfg.hd), dtype))
+        if kind == "mlstm":
+            return ssm_lib.mlstm_init_state(cfg, batch)
+        if kind == "slstm":
+            return ssm_lib.slstm_init_state(cfg, batch)
+        raise ValueError(kind)
+
+    def init_decode_state(self, batch: int, seq_len: int,
+                          position: Optional[int] = None) -> DecodeState:
+        """Empty caches sized for ``seq_len`` context.  ``position`` is the
+        absolute next position (defaults to seq_len: the dry-run scenario
+        'cache already holds seq_len tokens')."""
+        cfg = self.cfg
+        dtype = cfg.param_dtype
+        pos = seq_len if position is None else position
+        if self.scan:
+            single = self._layer_cache(self.kinds[0], batch, seq_len, dtype)
+            caches = jax.tree.map(
+                lambda t: jnp.broadcast_to(
+                    t[None], (cfg.num_layers,) + t.shape).copy(), single)
+        else:
+            caches = tuple(self._layer_cache(k, batch, seq_len, dtype)
+                           for k in self.kinds)
+        return DecodeState(caches=caches,
+                           position=jnp.asarray(pos, jnp.int32))
+
+    def serve_step(self, params: dict, tokens: Array, state: DecodeState
+                   ) -> Tuple[Array, DecodeState]:
+        """One decode step.  tokens: (B, 1) int32 -> logits (B, V)."""
+        cfg = self.cfg
+        x = params["embed"][tokens]
+        x = x * jnp.sqrt(jnp.asarray(cfg.d_model, x.dtype))
+        pos = state.position
+        positions = pos[None].astype(jnp.int32)   # (1,)
+
+        if self.scan:
+            kind = self.kinds[0]
+
+            def body(h, xs):
+                layer_p, cache = xs
+                h, new_cache, _ = _block_apply(layer_p, h, positions, cfg,
+                                               kind, cache=cache,
+                                               cache_pos=pos)
+                return h, new_cache
+
+            x, new_caches = jax.lax.scan(body, x,
+                                         (params["layers"], state.caches))
+        else:
+            new_caches = []
+            layers = params["layers"]
+            for i, kind in enumerate(self.kinds):
+                lp = (layers[i] if isinstance(layers, tuple)
+                      else jax.tree.map(lambda t: t[i], layers))
+                x, nc, _ = _block_apply(lp, x, positions, cfg, kind,
+                                        cache=state.caches[i], cache_pos=pos)
+                new_caches.append(nc)
+            new_caches = tuple(new_caches)
+
+        x = rmsnorm(x, params["final_norm"], cfg.rms_eps)
+        head = (params["embed"].T if cfg.tie_embeddings
+                and "lm_head" not in params else params["lm_head"])
+        logits = (x @ head)[:, 0, :cfg.vocab_size]
+        return logits, DecodeState(caches=new_caches, position=pos + 1)

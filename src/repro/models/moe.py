@@ -1,0 +1,115 @@
+"""Mixture-of-Experts layer: top-k router + sort-based capacity dispatch.
+
+Expert-parallel under GSPMD: expert-stacked weights (E, d, f) carry a
+``P('model', ...)`` (or ``P(None, 'model', ...)``) sharding so the grouped
+matmul runs expert-parallel and the dispatch/combine scatter becomes the
+all-to-all the roofline measures.
+
+Dispatch algorithm (dropless-up-to-capacity, MaxText-style):
+  1. router logits -> top-k (expert_id, weight) per token,
+  2. flatten the (token, k) choices, sort by expert_id,
+  3. rank each choice within its expert via a cumsum over the sorted
+     one-hot; drop ranks >= capacity,
+  4. scatter tokens into an (E, C, D) buffer, grouped-matmul the experts,
+  5. combine back with the router weights (scatter-add to tokens).
+
+Aux load-balance loss follows Shazeer et al. / Switch:
+``E * sum_e f_e * p_e`` with f = fraction of tokens routed, p = mean
+router prob.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+Array = jax.Array
+
+
+def init_moe(key: Array, cfg) -> dict:
+    m = cfg.moe
+    ks = jax.random.split(key, 7)
+    dt = cfg.param_dtype
+    E, D, F = m.num_experts, cfg.d_model, m.d_expert
+    p = {
+        "router": dense_init(ks[0], D, E, jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (E, D, F)) / math.sqrt(D)).astype(dt),
+        "w_up": (jax.random.normal(ks[2], (E, D, F)) / math.sqrt(D)).astype(dt),
+        "w_down": (jax.random.normal(ks[3], (E, F, D)) / math.sqrt(F)).astype(dt),
+    }
+    if m.num_shared_experts:
+        Fs = m.d_expert * m.num_shared_experts
+        p["shared"] = {
+            "w_gate": dense_init(ks[4], D, Fs, dt),
+            "w_up": dense_init(ks[5], D, Fs, dt),
+            "w_down": dense_init(ks[6], Fs, D, dt),
+        }
+    return p
+
+
+def _capacity(n_tokens: int, cfg) -> int:
+    m = cfg.moe
+    c = int(math.ceil(n_tokens * m.experts_per_token / m.num_experts
+                      * m.capacity_factor))
+    return max(8, -(-c // 8) * 8)   # pad to multiple of 8 (sublane)
+
+
+def moe_block(p: dict, x: Array, cfg) -> Tuple[Array, Array]:
+    """x: (B, T, D) -> (out (B, T, D), aux_loss scalar)."""
+    m = cfg.moe
+    B, T, D = x.shape
+    N = B * T
+    E, K = m.num_experts, m.experts_per_token
+    C = _capacity(N, cfg)
+    xf = x.reshape(N, D)
+
+    logits = (xf.astype(jnp.float32) @ p["router"])          # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, K)                   # (N, K)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)   # renormalize
+
+    # ---- aux load-balance loss (Switch-style) ------------------------
+    frac = jnp.mean(jax.nn.one_hot(top_e[:, 0], E, dtype=jnp.float32), axis=0)
+    mean_p = jnp.mean(probs, axis=0)
+    aux = m.router_aux_loss * E * jnp.sum(frac * mean_p)
+
+    # ---- sort-based dispatch ------------------------------------------
+    flat_e = top_e.reshape(-1)                                # (N*K,)
+    flat_w = top_w.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(N), K)
+    order = jnp.argsort(flat_e, stable=True)
+    se, sw, stok = flat_e[order], flat_w[order], flat_tok[order]
+    # rank within expert group
+    ones = jnp.ones_like(se)
+    pos_in_sorted = jnp.cumsum(ones) - 1
+    seg_start = jnp.searchsorted(se, jnp.arange(E), side="left")
+    rank = pos_in_sorted - seg_start[se]
+    keep = rank < C
+    slot = se * C + jnp.where(keep, rank, 0)                  # (N*K,)
+
+    # scatter tokens into (E*C, D) buffer
+    buf = jnp.zeros((E * C, D), x.dtype)
+    contrib = jnp.where(keep[:, None], xf[stok], 0)
+    buf = buf.at[slot].add(jnp.where(keep[:, None], contrib, 0))
+    buf = buf.reshape(E, C, D)
+
+    # ---- expert computation (grouped matmul, expert-parallel) --------
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"]))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"]).reshape(E * C, D)
+
+    # ---- combine ------------------------------------------------------
+    gathered = out_buf[slot] * jnp.where(keep, sw, 0.0)[:, None].astype(x.dtype)
+    out = jnp.zeros((N, D), x.dtype).at[stok].add(gathered)
+    out = out.reshape(B, T, D)
+
+    # ---- shared experts (DeepSeek) -------------------------------------
+    if "shared" in p:
+        s = p["shared"]
+        sh = (jax.nn.silu(x @ s["w_gate"]) * (x @ s["w_up"])) @ s["w_down"]
+        out = out + sh
+    return out, aux

@@ -1,0 +1,65 @@
+"""Architecture registry.  The canonical per-arch configs live in
+``repro/configs/<id>.py`` (the deliverable); this module provides lookup
+and the input-shape registry shared by dry-run / benchmarks / tests."""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, Tuple
+
+from repro.models.common import ArchConfig
+
+ARCH_IDS = (
+    "granite-3-2b",
+    "hubert-xlarge",
+    "paligemma-3b",
+    "dbrx-132b",
+    "yi-34b",
+    "hymba-1.5b",
+    "xlstm-350m",
+    "qwen1.5-110b",
+    "llama3-405b",
+    "deepseek-v2-lite-16b",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                      # train | prefill | decode
+
+
+INPUT_SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def _module_name(arch_id: str) -> str:
+    return "repro.configs." + arch_id.replace("-", "_").replace(".", "_")
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    if arch_id not in ARCH_IDS and arch_id != "paper-logreg":
+        raise ValueError(f"unknown arch {arch_id!r}; have {ARCH_IDS}")
+    mod = importlib.import_module(_module_name(arch_id))
+    return mod.CONFIG
+
+
+def get_smoke_config(arch_id: str) -> ArchConfig:
+    return get_config(arch_id).smoke()
+
+
+def pair_supported(cfg: ArchConfig, shape: InputShape) -> Tuple[bool, str]:
+    """Whether (arch, shape) lowers; if not, the DESIGN.md-documented
+    reason."""
+    if shape.kind == "decode" and not cfg.supports_decode:
+        return False, "encoder-only architecture has no decode step"
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("pure full-attention arch without sliding-window "
+                       "variant: long_500k skipped")
+    return True, ""

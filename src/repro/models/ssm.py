@@ -1,0 +1,339 @@
+"""State-space / recurrent blocks: Mamba (S6 selective scan), and the two
+xLSTM cells (mLSTM matrix-memory, sLSTM scalar-memory).
+
+Training-mode scans:
+* Mamba uses a **chunked associative scan** — outer ``lax.scan`` over
+  chunks carrying the (d_inner, N) state, inner ``associative_scan``
+  within a chunk — bounding the materialized state to
+  ``chunk * d_inner * N`` per example (DESIGN.md §5).
+* mLSTM / sLSTM use a time-step ``lax.scan`` (exponential gating with the
+  max-stabilizer from arXiv:2405.04517).  The chunkwise-parallel mLSTM
+  form is a §Perf candidate, not a baseline requirement.
+
+Decode mode: every block exposes a ``*_step`` single-token update with an
+O(1)-size carried state — this is what makes ``long_500k`` native for the
+SSM/hybrid architectures.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+Array = jax.Array
+
+
+# ======================================================================
+# Mamba (S6)
+# ======================================================================
+
+class MambaState(NamedTuple):
+    conv: Array   # (B, W-1, d_inner) — causal-conv tail
+    h: Array      # (B, d_inner, N)
+
+
+def _dt_rank(cfg) -> int:
+    return cfg.ssm.dt_rank or -(-cfg.d_model // 16)
+
+
+def init_mamba(key: Array, cfg, d_in: Optional[int] = None) -> dict:
+    s = cfg.ssm
+    dt = cfg.param_dtype
+    D = d_in or cfg.d_model
+    di = s.expand * D
+    R = _dt_rank(cfg)
+    ks = jax.random.split(key, 7)
+    A = jnp.tile(jnp.arange(1, s.state_dim + 1, dtype=jnp.float32), (di, 1))
+    return {
+        "in_proj": dense_init(ks[0], D, 2 * di, dt),
+        "conv_w": (jax.random.normal(ks[1], (s.conv_width, di)) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((di,), dt),
+        "x_bc": dense_init(ks[2], di, 2 * s.state_dim, dt),
+        "x_dt": dense_init(ks[3], di, R, dt),
+        "dt_proj": dense_init(ks[4], R, di, dt),
+        "dt_bias": (jnp.log(jnp.expm1(jnp.full((di,), 0.01)))).astype(dt),
+        "A_log": jnp.log(A),          # float32, A = -exp(A_log)
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[5], di, D, dt),
+    }
+
+
+def _causal_conv(x: Array, w: Array, b: Array, tail: Optional[Array] = None
+                 ) -> Tuple[Array, Array]:
+    """x: (B, T, di); w: (W, di) depthwise.  Returns (y, new_tail)."""
+    W = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(W)) + b
+    return y, xp[:, -(W - 1):] if W > 1 else tail
+
+
+def _ssm_scan_chunked(xi: Array, dt: Array, Bm: Array, Cm: Array,
+                      A: Array, h0: Array, chunk: int
+                      ) -> Tuple[Array, Array]:
+    """Selective-scan core, chunked so the (B, T, di, N) state-history
+    tensor is never materialized: per chunk we form a = exp(dt A) and
+    bx = dt*B*x for ``chunk`` steps only, run an associative scan, and
+    contract with C immediately.  Chunk bodies are checkpointed so the
+    backward stores only the (B, di, N) carry per chunk boundary.
+
+    xi/dt: (B, T, di); Bm/Cm: (B, T, N); A: (di, N); h0: (B, di, N).
+    Returns (y (B, T, di), h_last).
+    """
+    B, T, di = xi.shape
+    N = A.shape[1]
+    c = min(chunk, T)
+    pad = (-T) % c
+
+    def padt(x):
+        return jnp.concatenate(
+            [x, jnp.zeros((B, pad) + x.shape[2:], x.dtype)], 1) if pad else x
+
+    xi, dt, Bm, Cm = map(padt, (xi, dt, Bm, Cm))
+    nc = xi.shape[1] // c
+
+    def chunkify(x):
+        return x.reshape((B, nc, c) + x.shape[2:]).transpose(
+            (1, 0, 2) + tuple(range(3, x.ndim + 1)))
+
+    xs = tuple(map(chunkify, (xi, dt, Bm, Cm)))   # each (nc, B, c, ...)
+
+    def combine(l, r):
+        (a1, b1), (a2, b2) = l, r
+        return a1 * a2, a2 * b1 + b2
+
+    @jax.checkpoint
+    def chunk_body(h, xc):
+        xi_c, dt_c, b_c, c_c = xc                 # (B, c, di) / (B, c, N)
+        a = jnp.exp(dt_c[..., None] * A[None, None])          # (B,c,di,N)
+        bx = (dt_c * xi_c)[..., None] * b_c[:, :, None, :]    # (B,c,di,N)
+        aa, bb = jax.lax.associative_scan(combine, (a, bx), axis=1)
+        hs = aa * h[:, None] + bb
+        y = jnp.einsum("bcdn,bcn->bcd", hs, c_c)              # (B,c,di)
+        return hs[:, -1], y
+
+    h_last, ys = jax.lax.scan(chunk_body, h0, xs)
+    y = ys.transpose(1, 0, 2, 3).reshape(B, nc * c, di)[:, :T]
+    return y, h_last
+
+
+def mamba_forward(p: dict, x: Array, cfg,
+                  state: Optional[MambaState] = None
+                  ) -> Tuple[Array, Optional[MambaState]]:
+    """Training/prefill over a full sequence.  x: (B, T, D)."""
+    s = cfg.ssm
+    B, T, D = x.shape
+    di = p["conv_b"].shape[0]
+    N = s.state_dim
+
+    zx = x @ p["in_proj"]
+    z, xi = jnp.split(zx, 2, axis=-1)
+    tail = state.conv if state is not None else None
+    xi, new_tail = _causal_conv(xi, p["conv_w"], p["conv_b"], tail)
+    xi = jax.nn.silu(xi)
+
+    bc = xi @ p["x_bc"]
+    Bm, Cm = jnp.split(bc, 2, axis=-1)                     # (B, T, N)
+    dt = jax.nn.softplus(xi @ p["x_dt"] @ p["dt_proj"]
+                         + p["dt_bias"]).astype(jnp.float32)  # (B,T,di)
+    A = -jnp.exp(p["A_log"])                               # (di, N)
+    h0 = state.h if state is not None else jnp.zeros((B, di, N), jnp.float32)
+    y, h_last = _ssm_scan_chunked(
+        xi.astype(jnp.float32), dt, Bm.astype(jnp.float32),
+        Cm.astype(jnp.float32), A, h0, s.chunk)
+    y = (y + xi.astype(jnp.float32) * p["D"]).astype(x.dtype)
+    out = (y * jax.nn.silu(z)) @ p["out_proj"]
+    return out, MambaState(conv=new_tail, h=h_last)
+
+
+def mamba_init_state(cfg, batch: int, d_in: Optional[int] = None,
+                     dtype=jnp.float32) -> MambaState:
+    s = cfg.ssm
+    di = s.expand * (d_in or cfg.d_model)
+    return MambaState(
+        conv=jnp.zeros((batch, s.conv_width - 1, di), dtype),
+        h=jnp.zeros((batch, di, s.state_dim), jnp.float32))
+
+
+def mamba_step(p: dict, x: Array, cfg, state: MambaState
+               ) -> Tuple[Array, MambaState]:
+    """Single-token decode.  x: (B, 1, D)."""
+    out, new_state = mamba_forward(p, x, cfg, state=state)
+    return out, new_state
+
+
+def _chunked_cell_scan(cell, init_state, xs, chunk: int):
+    """Time-scan with gradient checkpointing at chunk boundaries: backward
+    stores only the carry every ``chunk`` steps and recomputes within a
+    chunk — essential for the mLSTM whose per-step carry is the (hd, hd)
+    matrix memory (an unchunked scan would save T copies of it).
+    """
+    T = xs[0].shape[0]
+    c = min(chunk, T)
+    pad = (-T) % c
+    if pad:
+        xs = tuple(jnp.concatenate([x, jnp.zeros((pad,) + x.shape[1:],
+                                                 x.dtype)], 0) for x in xs)
+    nc = xs[0].shape[0] // c
+    xs_c = tuple(x.reshape((nc, c) + x.shape[1:]) for x in xs)
+
+    @jax.checkpoint
+    def chunk_body(carry, xc):
+        return jax.lax.scan(cell, carry, xc)
+
+    st, ys = jax.lax.scan(chunk_body, init_state, xs_c)
+    ys = ys.reshape((nc * c,) + ys.shape[2:])[:T]
+    return st, ys
+
+
+# ======================================================================
+# mLSTM (xLSTM matrix memory)
+# ======================================================================
+
+class MLSTMState(NamedTuple):
+    C: Array   # (B, H, hd, hd)
+    n: Array   # (B, H, hd)
+    m: Array   # (B, H)
+
+
+def init_mlstm(key: Array, cfg) -> dict:
+    xl = cfg.xlstm
+    dt = cfg.param_dtype
+    D = cfg.d_model
+    di = int(xl.proj_factor_mlstm * D)
+    H = cfg.num_heads
+    di = -(-di // H) * H
+    ks = jax.random.split(key, 7)
+    return {
+        "up": dense_init(ks[0], D, 2 * di, dt),
+        "wq": dense_init(ks[1], di, di, dt),
+        "wk": dense_init(ks[2], di, di, dt),
+        "wv": dense_init(ks[3], di, di, dt),
+        "w_if": dense_init(ks[4], di, 2 * H, dt),
+        "b_if": jnp.zeros((2 * H,), dt),
+        "down": dense_init(ks[5], di, D, dt),
+    }
+
+
+def mlstm_init_state(cfg, batch: int) -> MLSTMState:
+    xl = cfg.xlstm
+    H = cfg.num_heads
+    di = -(-int(xl.proj_factor_mlstm * cfg.d_model) // H) * H
+    hd = di // H
+    return MLSTMState(C=jnp.zeros((batch, H, hd, hd), jnp.float32),
+                      n=jnp.zeros((batch, H, hd), jnp.float32),
+                      m=jnp.full((batch, H), -1e30, jnp.float32))
+
+
+def _mlstm_cell(carry: MLSTMState, qkvif):
+    q, k, v, i_t, f_t = qkvif       # q/k/v: (B,H,hd); i/f: (B,H)
+    C, n, m = carry
+    m_new = jnp.maximum(f_t + m, i_t)
+    i_ = jnp.exp(i_t - m_new)
+    f_ = jnp.exp(f_t + m - m_new)
+    C_new = f_[..., None, None] * C + i_[..., None, None] * (
+        v[..., :, None] * k[..., None, :])
+    n_new = f_[..., None] * n + i_[..., None] * k
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n_new, q)),
+                        jnp.exp(-m_new))
+    y = jnp.einsum("bhde,bhe->bhd", C_new, q) / denom[..., None]
+    return MLSTMState(C_new, n_new, m_new), y
+
+
+def mlstm_forward(p: dict, x: Array, cfg,
+                  state: Optional[MLSTMState] = None
+                  ) -> Tuple[Array, Optional[MLSTMState]]:
+    B, T, D = x.shape
+    H = cfg.num_heads
+    up = x @ p["up"]
+    z, xi = jnp.split(up, 2, axis=-1)
+    di = xi.shape[-1]
+    hd = di // H
+    q = (xi @ p["wq"]).reshape(B, T, H, hd).astype(jnp.float32) / math.sqrt(hd)
+    k = (xi @ p["wk"]).reshape(B, T, H, hd).astype(jnp.float32) / math.sqrt(hd)
+    v = (xi @ p["wv"]).reshape(B, T, H, hd).astype(jnp.float32)
+    gif = (xi @ p["w_if"] + p["b_if"]).astype(jnp.float32)
+    i_t, f_t = jnp.split(gif, 2, axis=-1)                  # (B, T, H)
+    f_t = jax.nn.log_sigmoid(f_t)
+
+    st = state if state is not None else mlstm_init_state(cfg, B)
+    xs = (q.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+          v.transpose(1, 0, 2, 3), i_t.transpose(1, 0, 2),
+          f_t.transpose(1, 0, 2))
+    st_new, ys = _chunked_cell_scan(_mlstm_cell, st, xs, chunk=64)
+    y = ys.transpose(1, 0, 2, 3).reshape(B, T, di).astype(x.dtype)
+    out = (y * jax.nn.silu(z)) @ p["down"]
+    return out, st_new
+
+
+def mlstm_step(p, x, cfg, state):
+    return mlstm_forward(p, x, cfg, state=state)
+
+
+# ======================================================================
+# sLSTM (xLSTM scalar memory)
+# ======================================================================
+
+class SLSTMState(NamedTuple):
+    c: Array   # (B, di)
+    n: Array
+    h: Array
+    m: Array
+
+
+def init_slstm(key: Array, cfg) -> dict:
+    xl = cfg.xlstm
+    dt = cfg.param_dtype
+    D = cfg.d_model
+    di = int(xl.proj_factor_slstm * D)
+    ks = jax.random.split(key, 4)
+    return {
+        "w_in": dense_init(ks[0], D, 4 * di, dt),       # z, i, f, o pre-acts
+        "r": (jax.random.normal(ks[1], (di, 4 * di)) * 0.02).astype(dt),
+        "b": jnp.zeros((4 * di,), dt),
+        "down": dense_init(ks[2], di, D, dt),
+        "up_gate": dense_init(ks[3], D, di, dt),
+    }
+
+
+def slstm_init_state(cfg, batch: int) -> SLSTMState:
+    di = int(cfg.xlstm.proj_factor_slstm * cfg.d_model)
+    z = jnp.zeros((batch, di), jnp.float32)
+    return SLSTMState(c=z, n=z, h=z, m=jnp.full_like(z, -1e30))
+
+
+def _slstm_cell(p, carry: SLSTMState, u):
+    c, n, h, m = carry
+    pre = u + h.astype(u.dtype) @ p["r"].astype(jnp.float32)
+    z, i_t, f_t, o_t = jnp.split(pre, 4, axis=-1)
+    f_t = jax.nn.log_sigmoid(f_t)
+    m_new = jnp.maximum(f_t + m, i_t)
+    i_ = jnp.exp(i_t - m_new)
+    f_ = jnp.exp(f_t + m - m_new)
+    c_new = f_ * c + i_ * jnp.tanh(z)
+    n_new = f_ * n + i_
+    h_new = jax.nn.sigmoid(o_t) * c_new / jnp.maximum(n_new, 1.0)
+    return SLSTMState(c_new, n_new, h_new, m_new), h_new
+
+
+def slstm_forward(p: dict, x: Array, cfg,
+                  state: Optional[SLSTMState] = None
+                  ) -> Tuple[Array, Optional[SLSTMState]]:
+    B, T, D = x.shape
+    u = (x @ p["w_in"] + p["b"]).astype(jnp.float32)       # (B, T, 4di)
+    st = state if state is not None else slstm_init_state(cfg, B)
+    st_new, hs = _chunked_cell_scan(
+        lambda c, xs_: _slstm_cell(p, c, xs_[0]), st,
+        (u.transpose(1, 0, 2),), chunk=64)
+    h = hs.transpose(1, 0, 2).astype(x.dtype)              # (B, T, di)
+    out = (h * jax.nn.silu(x @ p["up_gate"])) @ p["down"]
+    return out, st_new
+
+
+def slstm_step(p, x, cfg, state):
+    return slstm_forward(p, x, cfg, state=state)

@@ -1,0 +1,80 @@
+"""Batched decode serving: the ``serve_step`` the decode input-shapes
+lower, plus a small request-batching driver for the serving example.
+
+``serve_step(params, tokens, state)`` advances EVERY sequence in the
+batch by one token against its KV cache (or SSM state), the standard
+continuous-batching inner loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import DecodeState, Model
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: List[int]
+    max_new_tokens: int
+    generated: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        return len(self.generated) >= self.max_new_tokens
+
+
+class DecodeServer:
+    """Greedy batched decoding with static batch slots (padding with an
+    idle request keeps shapes static)."""
+
+    def __init__(self, model: Model, params, batch_size: int,
+                 max_seq_len: int):
+        self.model = model
+        self.params = params
+        self.batch = batch_size
+        self.max_seq = max_seq_len
+        self.state = model.init_decode_state(batch_size, max_seq_len,
+                                             position=0)
+        self._step = jax.jit(model.serve_step)
+        self.slots: List[Optional[Request]] = [None] * batch_size
+        self._next_tok = np.zeros((batch_size, 1), np.int32)
+
+    def prefill(self, slot: int, req: Request) -> None:
+        """Token-by-token prefill (teacher-forcing the prompt).  A bulk
+        prefill path exists via Model.forward; this keeps the example
+        dependency-free."""
+        self.slots[slot] = req
+        for t in req.prompt:
+            self._next_tok[slot, 0] = t
+            logits, self.state = self._step(
+                self.params, jnp.asarray(self._next_tok), self.state)
+        self._next_tok[slot, 0] = int(np.argmax(
+            np.asarray(logits[slot])))
+
+    def step(self) -> None:
+        logits, self.state = self._step(
+            self.params, jnp.asarray(self._next_tok), self.state)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        for i, req in enumerate(self.slots):
+            if req is not None and not req.done:
+                req.generated.append(int(self._next_tok[i, 0]))
+                self._next_tok[i, 0] = nxt[i]
+
+    def run(self, requests: List[Request]) -> List[Request]:
+        pending = list(requests)
+        for i in range(min(self.batch, len(pending))):
+            self.prefill(i, pending.pop(0))
+        while any(r is not None and not r.done for r in self.slots):
+            self.step()
+            for i, r in enumerate(self.slots):
+                if r is not None and r.done and pending:
+                    self.prefill(i, pending.pop(0))
+        return requests

@@ -1,0 +1,69 @@
+"""Minimal dependency-free checkpointing: pytrees -> .npz + structure
+manifest.  Handles NamedTuples/dicts/tuples and restores onto the mesh
+with the trainer's shardings."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def _flatten_with_paths(tree: PyTree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    paths = [jax.tree_util.keystr(p)
+             for p, _ in jax.tree_util.tree_flatten_with_path(tree)[0]]
+    return leaves, paths, treedef
+
+
+def save_checkpoint(path: str, state: PyTree, step: int) -> str:
+    os.makedirs(path, exist_ok=True)
+    leaves, paths, _ = _flatten_with_paths(state)
+    arrays = {f"leaf_{i}": np.asarray(jax.device_get(l))
+              for i, l in enumerate(leaves)}
+    fname = os.path.join(path, f"ckpt_{step:08d}.npz")
+    np.savez(fname, **arrays)
+    manifest = {"step": step, "paths": paths, "num_leaves": len(leaves)}
+    with open(os.path.join(path, f"ckpt_{step:08d}.json"), "w") as f:
+        json.dump(manifest, f)
+    with open(os.path.join(path, "latest"), "w") as f:
+        f.write(str(step))
+    return fname
+
+
+def latest_step(path: str) -> Optional[int]:
+    marker = os.path.join(path, "latest")
+    if not os.path.exists(marker):
+        return None
+    with open(marker) as f:
+        return int(f.read().strip())
+
+
+def restore_checkpoint(path: str, state_like: PyTree,
+                       step: Optional[int] = None) -> PyTree:
+    """``state_like`` supplies structure + shardings (its leaves may be
+    concrete arrays or ShapeDtypeStructs with shardings)."""
+    if step is None:
+        step = latest_step(path)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {path}")
+    data = np.load(os.path.join(path, f"ckpt_{step:08d}.npz"))
+    leaves, treedef = jax.tree_util.tree_flatten(state_like)
+    if len(leaves) != len(data.files):
+        raise ValueError(
+            f"checkpoint has {len(data.files)} leaves, state expects "
+            f"{len(leaves)}")
+    new_leaves = []
+    for i, like in enumerate(leaves):
+        arr = data[f"leaf_{i}"]
+        sharding = getattr(like, "sharding", None)
+        x = jnp.asarray(arr, dtype=like.dtype)
+        if sharding is not None:
+            x = jax.device_put(x, sharding)
+        new_leaves.append(x)
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)

@@ -1,0 +1,39 @@
+"""Training-loop driver: batches -> jit step -> metrics/checkpoints."""
+from __future__ import annotations
+
+from typing import Callable, Iterator, Optional
+
+import jax
+import numpy as np
+
+from repro.data.sharding import place_batch
+from repro.training.checkpoints import save_checkpoint
+from repro.training.metrics import MetricsLogger
+from repro.training.trainer import Trainer, TrainState
+
+
+def train(trainer: Trainer, state: TrainState,
+          batches: Iterator[dict], num_steps: int,
+          logger: Optional[MetricsLogger] = None,
+          checkpoint_dir: Optional[str] = None,
+          checkpoint_every: int = 0,
+          log_every: int = 10,
+          seed: int = 0) -> TrainState:
+    logger = logger or MetricsLogger(print_every=log_every)
+    first = next(batches)
+    step_fn = trainer.jit_train_step(first)
+    mesh = trainer.mesh
+    data_axes = trainer.cfg.dasha.data_axes
+
+    batch = first
+    for i in range(num_steps):
+        placed = place_batch(batch, mesh, data_axes)
+        key = jax.random.key(seed + i)
+        state, metrics = step_fn(state, placed, key)
+        if i % log_every == 0 or i == num_steps - 1:
+            logger.log(i, loss=metrics.loss, grad_norm=metrics.grad_norm)
+        if checkpoint_dir and checkpoint_every and (i + 1) % checkpoint_every == 0:
+            save_checkpoint(checkpoint_dir, state, i + 1)
+        if i < num_steps - 1:
+            batch = next(batches)
+    return state

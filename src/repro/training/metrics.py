@@ -1,0 +1,39 @@
+"""Lightweight metrics logging: stdout + CSV/JSONL sinks."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any, Dict, Optional
+
+
+class MetricsLogger:
+    def __init__(self, out_dir: Optional[str] = None, name: str = "train",
+                 print_every: int = 1):
+        self.out_dir = out_dir
+        self.print_every = print_every
+        self._file = None
+        self._t0 = time.time()
+        if out_dir:
+            os.makedirs(out_dir, exist_ok=True)
+            self._file = open(os.path.join(out_dir, f"{name}.jsonl"), "a")
+
+    def log(self, step: int, **metrics: Any) -> None:
+        rec: Dict[str, Any] = {"step": step,
+                               "wall_s": round(time.time() - self._t0, 3)}
+        for k, v in metrics.items():
+            try:
+                rec[k] = float(v)
+            except (TypeError, ValueError):
+                rec[k] = str(v)
+        if self._file:
+            self._file.write(json.dumps(rec) + "\n")
+            self._file.flush()
+        if step % self.print_every == 0:
+            kv = " ".join(f"{k}={v:.5g}" if isinstance(v, float) else f"{k}={v}"
+                          for k, v in rec.items() if k != "step")
+            print(f"[step {step:>6d}] {kv}", flush=True)
+
+    def close(self) -> None:
+        if self._file:
+            self._file.close()

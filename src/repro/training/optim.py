@@ -1,0 +1,94 @@
+"""Server-side optimizers.
+
+The paper's server step is plain ``x^{t+1} = x^t - gamma * g^t`` (Alg. 1
+line 5) — that is the *faithful* mode and the default.
+
+Beyond-paper: the server may treat ``g^t`` (the variance-reduced,
+compression-debiased estimator) as the gradient fed to any first-order
+optimizer.  We provide AdamW — convergence theory no longer applies
+verbatim, but the estimator is still unbiased-in-the-limit and this is
+what a production deployment would run.  Recorded separately in
+EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+
+class SGDState(NamedTuple):
+    count: Array
+
+
+class AdamWState(NamedTuple):
+    count: Array
+    mu: PyTree
+    nu: PyTree
+
+
+@dataclasses.dataclass(frozen=True)
+class ServerOptimizer:
+    """optax-like (init, update) pair; ``update`` maps the DASHA estimator
+    g to a parameter delta."""
+    name: str
+    lr: float
+    weight_decay: float = 0.0
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    warmup: int = 0
+
+    def init(self, params: PyTree):
+        if self.name == "sgd":
+            return SGDState(count=jnp.zeros((), jnp.int32))
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return AdamWState(count=jnp.zeros((), jnp.int32), mu=zeros,
+                          nu=jax.tree.map(jnp.zeros_like, zeros))
+
+    def _schedule(self, count: Array) -> Array:
+        if self.warmup <= 0:
+            return jnp.asarray(self.lr, jnp.float32)
+        w = jnp.minimum(1.0, (count + 1) / self.warmup)
+        return self.lr * w
+
+    def update(self, g: PyTree, state, params: PyTree
+               ) -> Tuple[PyTree, Any]:
+        lr = self._schedule(state.count)
+        if self.name == "sgd":
+            delta = jax.tree.map(
+                lambda gi, p: -lr * gi.astype(jnp.float32)
+                - lr * self.weight_decay * p.astype(jnp.float32),
+                g, params)
+            return delta, SGDState(count=state.count + 1)
+        if self.name != "adamw":
+            raise ValueError(self.name)
+        c = state.count + 1
+        mu = jax.tree.map(lambda m, gi: self.b1 * m
+                          + (1 - self.b1) * gi.astype(jnp.float32),
+                          state.mu, g)
+        nu = jax.tree.map(lambda v, gi: self.b2 * v
+                          + (1 - self.b2) * jnp.square(gi.astype(jnp.float32)),
+                          state.nu, g)
+        bc1 = 1 - self.b1 ** c.astype(jnp.float32)
+        bc2 = 1 - self.b2 ** c.astype(jnp.float32)
+        delta = jax.tree.map(
+            lambda m, v, p: -lr * ((m / bc1) / (jnp.sqrt(v / bc2) + self.eps)
+                                   + self.weight_decay * p.astype(jnp.float32)),
+            mu, nu, params)
+        return delta, AdamWState(count=c, mu=mu, nu=nu)
+
+
+def paper_server(gamma: float) -> ServerOptimizer:
+    return ServerOptimizer(name="sgd", lr=gamma)
+
+
+def adamw_server(lr: float, weight_decay: float = 0.01,
+                 warmup: int = 100) -> ServerOptimizer:
+    return ServerOptimizer(name="adamw", lr=lr, weight_decay=weight_decay,
+                           warmup=warmup)

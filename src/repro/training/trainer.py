@@ -1,0 +1,156 @@
+"""The production train step: Model x ShardedDasha x ServerOptimizer.
+
+Step order is Algorithm 1, faithfully:
+
+    1. x^{t+1} = x^t + server_update(g^t)        (paper: -gamma g^t)
+    2. per-node stochastic grads at x^{t+1} AND x^t with the *same*
+       minibatch (Alg. 5 MVR pair; DESIGN.md §3)
+    3. node update: h_i, g_i, compressed messages m_i, aggregation -> g^{t+1}
+
+The whole step is one jit-able function; the dry-run lowers it with
+ShapeDtypeStructs for every (arch x input-shape x mesh) combination.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core.sharded import (ShardedDasha, ShardedDashaConfig,
+                                ShardedDashaState, estimator_spec, node_spec,
+                                per_node_value_and_grads)
+from repro.data.sharding import batch_specs
+from repro.models.common import param_specs_like
+from repro.models.model import Model
+from repro.training.optim import ServerOptimizer
+
+Array = jax.Array
+PyTree = Any
+
+
+class TrainState(NamedTuple):
+    params: PyTree
+    dasha: ShardedDashaState
+    opt: Any
+    step: Array
+
+
+class TrainMetrics(NamedTuple):
+    loss: Array
+    loss_old: Array
+    grad_norm: Array      # ||g^{t+1}|| of the server estimator
+    step: Array
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainerConfig:
+    dasha: ShardedDashaConfig
+    server: ServerOptimizer
+    zero_init_variates: bool = True   # init_zero vs grads-at-x0 init
+    fsdp: bool = True                 # shard params over the data axis too
+
+
+class Trainer:
+    def __init__(self, model: Model, mesh: Mesh, cfg: TrainerConfig):
+        self.model = model
+        self.mesh = mesh
+        self.cfg = cfg
+        params_shape = jax.eval_shape(model.init_params, jax.random.key(0))
+        self.param_specs = param_specs_like(
+            params_shape, mesh, fsdp_axis="data" if cfg.fsdp else None)
+        self.engine = ShardedDasha(mesh, self.param_specs, cfg.dasha)
+
+    # ---- specs (for dry-run in_shardings) ------------------------------
+    def state_specs(self) -> TrainState:
+        ps = self.param_specs
+        axes = self.cfg.dasha.data_axes
+        nspec = jax.tree.map(
+            lambda s: node_spec(s, axes), ps,
+            is_leaf=lambda x: isinstance(x, P))
+        espec = jax.tree.map(
+            lambda s: estimator_spec(s, axes), ps,
+            is_leaf=lambda x: isinstance(x, P))
+        params_shape = jax.eval_shape(self.model.init_params,
+                                      jax.random.key(0))
+        opt_state_shape = jax.eval_shape(self.cfg.server.init, params_shape)
+        opt_spec = jax.tree.map(lambda _: P(), opt_state_shape)
+        # mu/nu of adamw mirror params
+        if hasattr(opt_state_shape, "mu"):
+            opt_spec = type(opt_state_shape)(count=P(), mu=ps, nu=ps)
+        return TrainState(
+            params=ps,
+            dasha=ShardedDashaState(g=espec, g_i=nspec, h_i=nspec, step=P()),
+            opt=opt_spec,
+            step=P())
+
+    def state_shapes(self, batch_shapes: PyTree) -> TrainState:
+        del batch_shapes
+        return jax.eval_shape(self._init_abstract, jax.random.key(0))
+
+    def _init_abstract(self, key: Array) -> TrainState:
+        params = self.model.init_params(key)
+        dasha = self.engine.init_zero(params)
+        opt = self.cfg.server.init(params)
+        return TrainState(params=params, dasha=dasha, opt=opt,
+                          step=jnp.zeros((), jnp.int32))
+
+    # ---- init -----------------------------------------------------------
+    def init(self, key: Array) -> TrainState:
+        specs = self.state_specs()
+        shardings = jax.tree.map(
+            lambda s: NamedSharding(self.mesh, s), specs,
+            is_leaf=lambda x: isinstance(x, P))
+        return jax.jit(self._init_abstract,
+                       out_shardings=shardings)(key)
+
+    # ---- the step --------------------------------------------------------
+    def train_step(self, state: TrainState, batch: PyTree, key: Array
+                   ) -> Tuple[TrainState, TrainMetrics]:
+        model, eng, cfg = self.model, self.engine, self.cfg
+
+        # (1) server step with g^t
+        delta, opt_new = cfg.server.update(state.dasha.g, state.opt,
+                                           state.params)
+        params_new = jax.tree.map(
+            lambda p, d: (p.astype(jnp.float32) + d).astype(p.dtype),
+            state.params, delta)
+
+        # (2) same-sample per-node gradient pair (Alg. 5)
+        def node_loss(p, node_batch):
+            return model.loss(p, node_batch)
+
+        losses_new, g_new = per_node_value_and_grads(node_loss, params_new,
+                                                     batch)
+        losses_old, g_old = per_node_value_and_grads(node_loss, state.params,
+                                                     batch)
+
+        # (3) DASHA-PP node/aggregation update
+        dasha_new = eng.node_update(g_new, g_old, state.dasha, key)
+
+        gn = jnp.sqrt(sum(
+            jnp.sum(jnp.square(x.astype(jnp.float32)))
+            for x in jax.tree.leaves(dasha_new.g)))
+        metrics = TrainMetrics(loss=jnp.mean(losses_new),
+                               loss_old=jnp.mean(losses_old),
+                               grad_norm=gn,
+                               step=state.step)
+        return TrainState(params=params_new, dasha=dasha_new, opt=opt_new,
+                          step=state.step + 1), metrics
+
+    def jit_train_step(self, batch_example: PyTree):
+        """jit with explicit shardings (used by train loop and dry-run)."""
+        specs = self.state_specs()
+        bspecs = batch_specs(batch_example, self.cfg.dasha.data_axes)
+        to_shard = lambda tree: jax.tree.map(
+            lambda s: NamedSharding(self.mesh, s), tree,
+            is_leaf=lambda x: isinstance(x, P))
+        return jax.jit(
+            self.train_step,
+            in_shardings=(to_shard(specs), to_shard(bspecs), None),
+            out_shardings=(to_shard(specs), None),
+            donate_argnums=(0,),
+        )

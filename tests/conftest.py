@@ -1,0 +1,23 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches
+must see the real (1-device) CPU; only tests that need a host mesh spawn
+it via the session-scoped ``host_mesh`` fixture below, which is skipped
+unless the test session was started with REPRO_HOST_DEVICES set."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.key(0)
+
+
+@pytest.fixture(scope="session")
+def small_problem():
+    from repro.core import LogisticSigmoidProblem, make_synthetic_classification
+    feats, y = make_synthetic_classification(
+        jax.random.key(0), n_nodes=10, m_per_node=8, d=24)
+    return LogisticSigmoidProblem(feats, y)

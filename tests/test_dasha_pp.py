@@ -1,0 +1,126 @@
+"""Algorithm-level tests for the DASHA-PP family: convergence with
+theory hyperparameters, reduction identities, baseline equivalences."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (FullParticipation, Identity, QuadraticProblem, RandK,
+                        SNice, dasha, dasha_pp, dasha_pp_finite_mvr,
+                        dasha_pp_mvr, dasha_pp_page, theory)
+
+
+def _constants(prob):
+    L, L_hat, L_max, L_sigma = prob.smoothness()
+    return theory.ProblemConstants(L=L, L_hat=L_hat, L_max=L_max,
+                                   L_sigma=L_sigma, n=prob.n, m=prob.m,
+                                   d=prob.d)
+
+
+@pytest.fixture(scope="module")
+def quad():
+    return QuadraticProblem.random(jax.random.key(0), n=8, d=12, cond=5.0)
+
+
+def test_dasha_pp_gradient_converges_theory_params(quad):
+    """Theorem 2 end-to-end: gnorm -> ~0 with the exact (a, b, gamma)."""
+    c = _constants(quad)
+    comp = RandK(k=3)
+    samp = SNice(n=quad.n, s=3)
+    hp = theory.dasha_pp_gradient(c, comp.omega(quad.d), samp.p_a, samp.p_aa)
+    alg = dasha_pp(quad, comp, samp, gamma=hp.gamma, a=hp.a, b=hp.b)
+    x0 = jnp.zeros(quad.d)
+    _, mets = jax.jit(lambda k: alg.run(k, x0, 4000))(jax.random.key(1))
+    g = np.asarray(mets.grad_norm_sq)
+    assert np.all(np.isfinite(g))
+    assert g[-1] < 1e-4 * g[0], (g[0], g[-1])
+
+
+@pytest.mark.parametrize("variant", ["page", "finite_mvr", "mvr"])
+def test_variants_converge(small_problem, variant):
+    prob = small_problem
+    c = _constants(prob)
+    comp = RandK(k=max(1, prob.d // 8))
+    samp = SNice(n=prob.n, s=4)
+    omega = comp.omega(prob.d)
+    B = 2
+    if variant == "page":
+        hp = theory.dasha_pp_page(c, omega, samp.p_a, samp.p_aa, B)
+        alg = dasha_pp_page(prob, comp, samp, gamma=hp.gamma * 64, a=hp.a,
+                            b=hp.b, p_page=hp.p_page, batch_size=B)
+    elif variant == "finite_mvr":
+        hp = theory.dasha_pp_finite_mvr(c, omega, samp.p_a, samp.p_aa, B)
+        alg = dasha_pp_finite_mvr(prob, comp, samp, gamma=hp.gamma * 64,
+                                  a=hp.a, b=hp.b, batch_size=B)
+    else:
+        hp = theory.dasha_pp_mvr(c, omega, samp.p_a, samp.p_aa, B)
+        alg = dasha_pp_mvr(prob, comp, samp, gamma=hp.gamma * 64, a=hp.a,
+                           b=hp.b, batch_size=B)
+    x0 = jnp.zeros(prob.d)
+    _, mets = jax.jit(lambda k: alg.run(k, x0, 1500))(jax.random.key(2))
+    g = np.asarray(mets.grad_norm_sq)
+    assert np.all(np.isfinite(g))
+    assert np.median(g[-100:]) < 0.05 * g[0], (g[0], np.median(g[-100:]))
+
+
+def test_full_participation_reduces_to_dasha(quad):
+    """With p_a = 1 and identity compressor + b=1, DASHA-PP produces the
+    exact gradient-descent trajectory of DASHA (which itself reduces to
+    GD when C = I)."""
+    comp = Identity()
+    gamma = 0.05
+    alg_pp = dasha_pp(quad, comp, FullParticipation(n=quad.n),
+                      gamma=gamma, a=1.0, b=1.0)
+    alg_da = dasha(quad, comp, gamma=gamma, a=1.0)
+    x0 = jnp.ones(quad.d)
+    st_pp, _ = jax.jit(lambda k: alg_pp.run(k, x0, 50))(jax.random.key(0))
+    st_da, _ = jax.jit(lambda k: alg_da.run(k, x0, 50))(jax.random.key(5))
+    np.testing.assert_allclose(np.asarray(st_pp.x), np.asarray(st_da.x),
+                               rtol=1e-5)
+    # and both equal plain GD
+    x = x0
+    for _ in range(50):
+        x = x - gamma * quad.full_grad(x)
+    np.testing.assert_allclose(np.asarray(st_pp.x), np.asarray(x), rtol=1e-4)
+
+
+def test_nonparticipating_state_frozen(quad):
+    """Nodes outside S keep h_i, g_i exactly (Alg. 1 lines 15-17)."""
+    comp = RandK(k=4)
+    samp = SNice(n=quad.n, s=2)
+    alg = dasha_pp(quad, comp, samp, gamma=0.01, a=0.1, b=0.3)
+    st = alg.init(jax.random.key(0), jnp.zeros(quad.d))
+    key = jax.random.key(7)
+    st2, _ = jax.jit(alg.step)(key, st)
+    # recompute the mask the step used
+    k_part, _, _ = jax.random.split(key, 3)
+    mask = np.asarray(samp.sample(k_part))
+    h_same = np.asarray(jnp.all(st2.h_i == st.h_i, axis=1))
+    g_same = np.asarray(jnp.all(st2.g_i == st.g_i, axis=1))
+    assert np.all(h_same[~mask]) and np.all(g_same[~mask])
+    assert np.all(~h_same[mask])   # participants moved
+
+
+def test_metrics_accounting(quad):
+    comp = RandK(k=4)
+    samp = SNice(n=quad.n, s=3)
+    alg = dasha_pp(quad, comp, samp, gamma=0.01, a=0.1, b=0.3)
+    st = alg.init(jax.random.key(0), jnp.zeros(quad.d))
+    _, met = jax.jit(alg.step)(jax.random.key(1), st)
+    assert int(met.participants) == 3
+    assert float(met.bits_sent) == 3 * comp.wire_bits(quad.d)
+
+
+def test_theory_gamma_positive_and_monotone():
+    c = theory.ProblemConstants(L=1.0, L_hat=1.5, L_max=3.0, L_sigma=3.0,
+                                n=16, m=64, d=100)
+    for omega in (0.0, 3.0, 63.0):
+        hps = [theory.dasha_pp_gradient(c, omega, pa, pa * pa)
+               for pa in (1.0, 0.5, 0.1)]
+        gammas = [h.gamma for h in hps]
+        assert all(g > 0 for g in gammas)
+        # smaller p_a -> smaller admissible stepsize
+        assert gammas[0] >= gammas[1] >= gammas[2]
+        for h, pa in zip(hps, (1.0, 0.5, 0.1)):
+            assert np.isclose(h.a, pa / (2 * omega + 1))
+            assert np.isclose(h.b, pa / (2 - pa))

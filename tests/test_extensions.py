@@ -1,0 +1,96 @@
+"""Extended coverage: DASHA-PP-SYNC-MVR (appendix G) and the
+PL-condition analysis (paper Section F)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (QuadraticProblem, RandK, SNice, dasha_pp,
+                        dasha_pp_mvr, dasha_pp_sync_mvr, theory)
+
+
+def _constants(prob):
+    L, L_hat, L_max, L_sigma = prob.smoothness()
+    return theory.ProblemConstants(L=L, L_hat=L_hat, L_max=L_max,
+                                   L_sigma=L_sigma, n=prob.n, m=prob.m,
+                                   d=prob.d)
+
+
+def test_sync_mvr_converges_and_beats_plain_mvr_tail(small_problem):
+    """Appendix G: the resync removes compressed-estimator drift; with
+    identical (gamma, a, b) SYNC-MVR's tail gradient norm is no worse
+    than ~plain MVR's."""
+    prob = small_problem
+    comp = RandK(k=max(1, prob.d // 8))
+    samp = SNice(n=prob.n, s=4)
+    c = _constants(prob)
+    hp = theory.dasha_pp_mvr(c, comp.omega(prob.d), samp.p_a, samp.p_aa, 2)
+    kw = dict(gamma=hp.gamma * 64, a=hp.a, b=hp.b, batch_size=2)
+    x0 = jnp.zeros(prob.d)
+    plain = dasha_pp_mvr(prob, comp, samp, **kw)
+    sync = dasha_pp_sync_mvr(prob, comp, samp, p_sync=0.2, **kw)
+    _, m1 = jax.jit(lambda k: plain.run(k, x0, 1200))(jax.random.key(1))
+    _, m2 = jax.jit(lambda k: sync.run(k, x0, 1200))(jax.random.key(1))
+    t1 = float(np.median(np.asarray(m1.grad_norm_sq)[-100:]))
+    t2 = float(np.median(np.asarray(m2.grad_norm_sq)[-100:]))
+    assert np.isfinite(t2) and t2 < 0.05 * float(m2.grad_norm_sq[0])
+    assert t2 < 3.0 * t1, (t1, t2)
+    # resync rounds cost extra uncompressed bits — accounted
+    assert float(np.sum(np.asarray(m2.bits_sent))) > \
+        float(np.sum(np.asarray(m1.bits_sent)))
+
+
+def test_sync_mvr_unbiased_resync():
+    """The 1/p_a-debiased resync keeps E[g] consistent: after one resync
+    round with full participation the server estimator equals the mean
+    of the node estimators."""
+    prob = QuadraticProblem.random(jax.random.key(0), n=6, d=10)
+    comp = RandK(k=3)
+    samp = SNice(n=6, s=6)   # full participation -> deterministic resync
+    alg = dasha_pp_sync_mvr(prob, comp, samp, gamma=0.01, a=0.1, b=0.5,
+                            batch_size=1, p_sync=1.0)
+    st = alg.init(jax.random.key(1), jnp.zeros(10))
+    st2, _ = jax.jit(alg.step)(jax.random.key(2), st)
+    np.testing.assert_allclose(np.asarray(st2.g),
+                               np.asarray(jnp.mean(st2.g_i, axis=0)),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(st2.g_i), np.asarray(st2.h_i),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_pl_linear_convergence():
+    """Section F: on a strongly-convex quadratic (PL with mu = lambda_min)
+    DASHA-PP converges linearly at >= the predicted rate order."""
+    prob = QuadraticProblem.random(jax.random.key(3), n=6, d=10, cond=4.0)
+    c = _constants(prob)
+    mu = float(jnp.linalg.eigvalsh(jnp.mean(prob.A, 0))[0])
+    comp = RandK(k=4)
+    samp = SNice(n=6, s=3)
+    omega = comp.omega(prob.d)
+    hp, rate = theory.dasha_pp_pl(c, omega, samp.p_a, samp.p_aa, mu)
+    assert 0.0 < rate < 1.0
+    alg = dasha_pp(prob, comp, samp, gamma=hp.gamma, a=hp.a, b=hp.b)
+    x0 = jnp.ones(prob.d) * 2.0
+    _, mets = jax.jit(lambda k: alg.run(k, x0, 3000))(jax.random.key(4))
+    g = np.asarray(mets.grad_norm_sq)
+    # log-linear fit over the decaying stretch -> empirical contraction
+    seg = g[100:2500]
+    seg = seg[seg > 1e-20]
+    t = np.arange(seg.size)
+    slope = np.polyfit(t, np.log(seg), 1)[0]
+    emp_rate = float(np.exp(slope / 2))     # gnorm^2 ~ rate^{2t}
+    assert emp_rate < 1.0, "not linearly converging"
+    # the guaranteed factor upper-bounds the observed contraction
+    assert emp_rate <= rate + 1e-4, (emp_rate, rate)
+    assert g[-1] < 1e-9 * g[0]              # linear convergence reached
+    # rounds-to-eps helper is consistent
+    T = theory.pl_rounds_to_eps(c, omega, samp.p_a, samp.p_aa, mu,
+                                eps=1e-6, delta0=float(g[0]))
+    assert T > 0
+
+
+def test_pl_rate_improves_with_participation():
+    c = theory.ProblemConstants(L=1.0, L_hat=1.2, n=16, m=1, d=50)
+    rates = [theory.dasha_pp_pl(c, 3.0, pa, pa * pa, mu=0.1)[1]
+             for pa in (0.1, 0.5, 1.0)]
+    assert rates[0] > rates[1] > rates[2]   # more participation -> faster
