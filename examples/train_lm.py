@@ -33,6 +33,7 @@ def main():
                                    + os.environ.get("XLA_FLAGS", ""))
 
     import jax
+    from repro.compat import use_mesh
     from repro.core.sharded import ShardedDashaConfig
     from repro.data.synthetic import DataConfig, make_batch
     from repro.launch.mesh import make_host_mesh
@@ -75,7 +76,7 @@ def main():
             yield make_batch(cfg, data, step, dtype="float32")
             step += 1
 
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         state = train(trainer, state, batches(), num_steps=args.steps,
                       logger=MetricsLogger(args.log, print_every=20),
                       checkpoint_dir=args.ckpt,

@@ -60,6 +60,11 @@ class DashaPPConfig:
     p_page: float = 1.0               # page only
     batch_size: int = 1               # page / finite_mvr / mvr
     replace: bool = True              # batch sampling w/ replacement (Alg.3)
+    # Fuse lines 9-11 into one batched Pallas launch per round
+    # (kernels/dasha_update.py; interpret-mode on CPU).  Mirrors
+    # ShardedDashaConfig.use_pallas; numerics match the jnp chain to
+    # float32 rounding (tests/test_dasha_pp.py parity sweep).
+    use_pallas: bool = False
 
     def __post_init__(self):
         if self.variant not in ("gradient", "page", "finite_mvr", "mvr"):
@@ -150,6 +155,56 @@ class DashaPP:
         return k, None, calls
 
     # ------------------------------------------------------------------
+    def _fused_update(self, key: Array, x_new: Array, x_old: Array,
+                      state: DashaPPState, mask: Array):
+        """Lines 9-11 via the fused batched Pallas kernels (DESIGN.md §6):
+        one launch computes (k_i, h_new, payload) for all ``n`` simulated
+        nodes, replacing the five-pass elementwise jnp chain.  Randomness
+        is consumed exactly as in the unfused ``_k_*`` path, so the two
+        trajectories coincide."""
+        from repro.kernels import ops
+        p, cfg = self.problem, self.cfg
+        pa = self.sampler.p_a
+        kw = dict(b=cfg.b, a=cfg.a, pa=pa)
+        # Kernels compute in float32; restore the state dtype so the
+        # lax.scan carry in run() keeps a fixed type (x64/bf16 problems).
+        dt = state.h_i.dtype
+        _cast = lambda *xs: tuple(x.astype(dt) for x in xs)
+        if cfg.variant == "gradient":
+            gn, go = p.grad(x_new), p.grad(x_old)
+            k_i, h_new, payload = _cast(*ops.dasha_update_batched_op(
+                gn, go, state.h_i, state.g_i, mask, **kw))
+            return k_i, None, h_new, payload, jnp.asarray(2 * p.m * p.n)
+        if cfg.variant == "mvr":
+            idx = sample_batch_indices(key, p.n, p.m, cfg.batch_size,
+                                       replace=True)
+            bn, bo = p.batch_grad(x_new, idx), p.batch_grad(x_old, idx)
+            k_i, h_new, payload = _cast(*ops.dasha_update_batched_op(
+                bn, bo, state.h_i, state.g_i, mask, **kw))
+            return (k_i, None, h_new, payload,
+                    jnp.asarray(2 * cfg.batch_size * p.n))
+        if cfg.variant == "page":
+            k_coin, k_batch = jax.random.split(key)
+            coin = jax.random.bernoulli(k_coin, cfg.p_page)
+            idx = sample_batch_indices(k_batch, p.n, p.m, cfg.batch_size,
+                                       replace=cfg.replace)
+            gn, go = p.grad(x_new), p.grad(x_old)
+            bn, bo = p.batch_grad(x_new, idx), p.batch_grad(x_old, idx)
+            k_i, h_new, payload = _cast(*ops.dasha_page_update_op(
+                gn, go, bn, bo, state.h_i, state.g_i, mask, coin,
+                p_page=cfg.p_page, **kw))
+            calls = jnp.where(coin, 2 * p.m * p.n,
+                              2 * cfg.batch_size * p.n)
+            return k_i, None, h_new, payload, calls
+        # finite_mvr: k_i comes from the (n, m, d) component scatter —
+        # no dense elementwise shape to fuse — so only the tail fuses.
+        k_i, k_ij, calls = self._k_finite_mvr(key, x_new, x_old, state)
+        h_new, payload = _cast(*ops.dasha_tail_op(k_i, state.h_i,
+                                                  state.g_i, mask,
+                                                  a=cfg.a, pa=pa))
+        return k_i, k_ij, h_new, payload, calls
+
+    # ------------------------------------------------------------------
     def step(self, key: Array, state: DashaPPState
              ) -> Tuple[DashaPPState, StepMetrics]:
         p, cfg, C = self.problem, self.cfg, self.compressor
@@ -159,23 +214,29 @@ class DashaPP:
         # Lines 4-5: x^{t+1} = x^t - gamma * g^t; broadcast.
         x_new = state.x - cfg.gamma * state.g
 
-        # Line 9: k_i^{t+1} per variant (computed for every node; only
-        # participating nodes *use* it — see masking note in DESIGN.md §3).
-        k_fn = getattr(self, f"_k_{cfg.variant}")
-        k_i, k_ij, calls = k_fn(k_oracle, x_new, state.x, state)
-
         # Lines 7-8: participation mask.
         mask = self.sampler.sample(k_part)             # (n,) bool
         maskf = mask[:, None].astype(state.x.dtype)
 
-        # Line 10: h_i^{t+1} = h_i^t + k_i/p_a (participating only).
-        h_new = state.h_i + maskf * (k_i / pa)
+        if cfg.use_pallas:
+            # Lines 9-11 fused (one Pallas launch for all n nodes).
+            k_i, k_ij, h_new, payload, calls = self._fused_update(
+                k_oracle, x_new, state.x, state, mask)
+        else:
+            # Line 9: k_i^{t+1} per variant (computed for every node; only
+            # participating nodes *use* it — masking note, DESIGN.md §3).
+            k_fn = getattr(self, f"_k_{cfg.variant}")
+            k_i, k_ij, calls = k_fn(k_oracle, x_new, state.x, state)
+            # Line 10: h_i^{t+1} = h_i^t + k_i/p_a (participating only).
+            h_new = state.h_i + maskf * (k_i / pa)
+            # Line 11 payload: k_i/p_a - (a/p_a)(g_i - h_i^t).
+            payload = k_i / pa - (cfg.a / pa) * (state.g_i - state.h_i)
+
         h_ij_new = None
         if cfg.variant == "finite_mvr":
             h_ij_new = state.h_ij + maskf[:, :, None] * (k_ij / pa)
 
-        # Line 11: m_i = C_i(k_i/p_a - (a/p_a)(g_i - h_i^t)).
-        payload = k_i / pa - (cfg.a / pa) * (state.g_i - state.h_i)
+        # Line 11: m_i = C_i(payload).
         node_keys = jax.vmap(lambda i: jax.random.fold_in(k_comp, i))(
             jnp.arange(p.n))
         m_i = jax.vmap(C.compress)(node_keys, payload)
@@ -218,34 +279,39 @@ class DashaPP:
 # Named constructors (the paper's method zoo)
 # ----------------------------------------------------------------------
 
-def dasha_pp(problem, compressor, sampler, *, gamma, a, b) -> DashaPP:
+def dasha_pp(problem, compressor, sampler, *, gamma, a, b,
+             use_pallas=False) -> DashaPP:
     """DASHA-PP, gradient setting (Alg. 1 + Alg. 2, Theorem 2)."""
     return DashaPP(problem, compressor, sampler,
-                   DashaPPConfig("gradient", gamma=gamma, a=a, b=b))
+                   DashaPPConfig("gradient", gamma=gamma, a=a, b=b,
+                                 use_pallas=use_pallas))
 
 
 def dasha_pp_page(problem, compressor, sampler, *, gamma, a, b, p_page,
-                  batch_size) -> DashaPP:
+                  batch_size, use_pallas=False) -> DashaPP:
     """DASHA-PP-PAGE (Alg. 1 + Alg. 3, Theorem 3)."""
     return DashaPP(problem, compressor, sampler,
                    DashaPPConfig("page", gamma=gamma, a=a, b=b,
-                                 p_page=p_page, batch_size=batch_size))
+                                 p_page=p_page, batch_size=batch_size,
+                                 use_pallas=use_pallas))
 
 
 def dasha_pp_finite_mvr(problem, compressor, sampler, *, gamma, a, b,
-                        batch_size) -> DashaPP:
+                        batch_size, use_pallas=False) -> DashaPP:
     """DASHA-PP-FINITE-MVR (Alg. 1 + Alg. 4, Theorem 7)."""
     return DashaPP(problem, compressor, sampler,
                    DashaPPConfig("finite_mvr", gamma=gamma, a=a, b=b,
-                                 batch_size=batch_size))
+                                 batch_size=batch_size,
+                                 use_pallas=use_pallas))
 
 
 def dasha_pp_mvr(problem, compressor, sampler, *, gamma, a, b,
-                 batch_size) -> DashaPP:
+                 batch_size, use_pallas=False) -> DashaPP:
     """DASHA-PP-MVR (Alg. 1 + Alg. 5, Theorem 4)."""
     return DashaPP(problem, compressor, sampler,
                    DashaPPConfig("mvr", gamma=gamma, a=a, b=b,
-                                 batch_size=batch_size))
+                                 batch_size=batch_size,
+                                 use_pallas=use_pallas))
 
 
 def dasha(problem, compressor, *, gamma, a) -> DashaPP:

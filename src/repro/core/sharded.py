@@ -42,6 +42,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 Array = jax.Array
 PyTree = Any
 
@@ -76,7 +78,14 @@ class ShardedDashaConfig:
     block_size: int = 128          # BlockRandK block (TPU lane width)
     aggregation: str = "sparse_allgather"       # or dense_psum
     data_axes: Tuple[str, ...] = ("data",)
-    use_pallas: bool = False       # fuse the control-variate update kernel
+    # Dispatch the fused Pallas update path (kernels/, DESIGN.md §6) in
+    # every aggregation mode.  sparse_allgather additionally fuses
+    # BlockRandK into the update: the line-11 payload is evaluated only
+    # at the selected blocks, never dense in HBM.  On CPU the kernels
+    # run in interpret mode automatically (kernels/ops.py).
+    use_pallas: bool = False
+    # Force interpret mode on/off; None = auto (interpret unless TPU).
+    pallas_interpret: Optional[bool] = None
 
     @property
     def compressed(self) -> bool:
@@ -136,6 +145,14 @@ def _pad_to(x: Array, mult: int) -> Array:
     return jnp.pad(x, (0, pad)) if pad else x
 
 
+def block_randk_indices(key: Array, nb: int, k_blocks: int) -> Array:
+    """The BlockRandK draw: ``k_blocks`` of ``nb`` blocks u.a.r. without
+    replacement.  Single source of truth — the fused Pallas paths must
+    consume randomness identically to the jnp path for trajectory
+    parity."""
+    return jax.random.permutation(key, nb)[:k_blocks]
+
+
 def block_randk_select(key: Array, flat: Array, k_blocks: int,
                        block_size: int) -> Tuple[Array, Array]:
     """Choose ``k_blocks`` of the ``nb`` blocks u.a.r. without replacement.
@@ -144,7 +161,7 @@ def block_randk_select(key: Array, flat: Array, k_blocks: int,
     padded = _pad_to(flat, block_size)
     nb = padded.shape[0] // block_size
     blocks = padded.reshape(nb, block_size)
-    idx = jax.random.permutation(key, nb)[:k_blocks]
+    idx = block_randk_indices(key, nb, k_blocks)
     scale = nb / k_blocks
     return blocks[idx] * scale, idx
 
@@ -279,23 +296,29 @@ class ShardedDasha:
                 fgi = tgi[0].reshape(-1).astype(jnp.float32)
                 fg = tg.reshape(-1).astype(jnp.float32)
 
-                if cfg.use_pallas:
-                    from repro.kernels.ops import dasha_update_op
-                    k_vec, fh_new, payload = dasha_update_op(
-                        fn, fo, fh, fgi, b=cfg.b, a=cfg.a, pa=pa,
-                        participates=partf)
-                else:
+                lkey = jax.random.fold_in(
+                    jax.random.fold_in(step_key, 7919 + li), node_idx)
+                interp = cfg.pallas_interpret
+
+                def dense_update():
+                    """Lines 9-11 over the full local vector: fused
+                    kernel or the five-pass jnp chain."""
+                    if cfg.use_pallas:
+                        from repro.kernels.ops import dasha_update_op
+                        _, hn, pay = dasha_update_op(
+                            fn, fo, fh, fgi, b=cfg.b, a=cfg.a, pa=pa,
+                            participates=partf, interpret=interp)
+                        return hn, pay
                     # Alg.2/5: k = gn - go - b (h - go)
                     k_vec = fn - fo - cfg.b * (fh - fo)
                     # line 10: h += k/pa if participating
-                    fh_new = fh + partf * (k_vec / pa)
+                    hn = fh + partf * (k_vec / pa)
                     # line 11 payload: k/pa - (a/pa)(g_i - h_old)
-                    payload = k_vec / pa - (cfg.a / pa) * (fgi - fh)
-
-                lkey = jax.random.fold_in(
-                    jax.random.fold_in(step_key, 7919 + li), node_idx)
+                    pay = k_vec / pa - (cfg.a / pa) * (fgi - fh)
+                    return hn, pay
 
                 if cfg.compression_ratio is None:
+                    fh_new, payload = dense_update()
                     m_i = partf * payload
                     total = jax.lax.psum(m_i, data_axes)
                     delta = total / self.n_nodes
@@ -304,6 +327,10 @@ class ShardedDasha:
                     bs = min(cfg.block_size, fn.shape[0])
                     nb = -(-fn.shape[0] // bs)
                     kb = max(1, math.ceil(cfg.compression_ratio * nb))
+                    # Fused update (dense_update); the compress step is
+                    # already dense here, so BlockRandK has no traffic
+                    # to save and stays jnp in both paths.
+                    fh_new, payload = dense_update()
                     m_i = partf * block_randk_dense(lkey, payload, kb, bs)
                     total = jax.lax.psum(m_i, data_axes)
                     delta = total / self.n_nodes
@@ -312,7 +339,26 @@ class ShardedDasha:
                     bs = min(cfg.block_size, fn.shape[0])
                     nb = -(-fn.shape[0] // bs)
                     kb = max(1, math.ceil(cfg.compression_ratio * nb))
-                    vals, bidx = block_randk_select(lkey, payload, kb, bs)
+                    if cfg.use_pallas:
+                        # Fused update+compress (DESIGN.md §6): the h
+                        # tracker gets its own dense pass (k stays
+                        # in-register) and the line-11 payload is
+                        # evaluated ONLY at the kb selected blocks —
+                        # the dense payload never exists in HBM.
+                        from repro.kernels.ops import (
+                            dasha_h_update_op, dasha_payload_blocks_op)
+                        bidx = block_randk_indices(lkey, nb, kb)
+                        fh_new = dasha_h_update_op(
+                            fn, fo, fh, b=cfg.b, pa=pa,
+                            participates=partf, interpret=interp)
+                        vals = dasha_payload_blocks_op(
+                            fn, fo, fh, fgi, bidx, b=cfg.b, a=cfg.a,
+                            pa=pa, scale=nb / kb, block_size=bs,
+                            interpret=interp)
+                    else:
+                        fh_new, payload = dense_update()
+                        vals, bidx = block_randk_select(lkey, payload,
+                                                        kb, bs)
                     vals = partf * vals
                     # wire: (n·kb·bs values + n·kb indices) over data axes
                     all_vals = jax.lax.all_gather(vals, data_axes,
@@ -334,9 +380,8 @@ class ShardedDasha:
                     jax.tree.unflatten(treedef, new_gi),
                     jax.tree.unflatten(treedef, new_g))
 
-        h_new, gi_new, g_new = jax.shard_map(
+        h_new, gi_new, g_new = compat.shard_map(
             update, mesh=self.mesh, in_specs=in_specs, out_specs=out_specs,
-            check_vma=False,
         )(grads_new, grads_old, state.h_i, state.g_i, state.g, key,
           state.step)
 

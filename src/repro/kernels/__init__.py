@@ -1,3 +1,17 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the DASHA-PP hot path (DESIGN.md §6).
+
+Layout: one module per kernel family (``dasha_update``, ``randk``),
+``ops`` for the jit'd public wrappers with interpret-mode auto-detect,
+``ref`` for the pure-jnp oracles every kernel is tested against.
+"""
+from repro.kernels.ops import (block_gather_op, block_scatter_op,
+                               dasha_h_update_op, dasha_page_update_op,
+                               dasha_payload_blocks_op, dasha_tail_op,
+                               dasha_update_batched_op, dasha_update_op,
+                               interpret_default)
+
+__all__ = [
+    "block_gather_op", "block_scatter_op", "dasha_h_update_op",
+    "dasha_page_update_op", "dasha_payload_blocks_op", "dasha_tail_op",
+    "dasha_update_batched_op", "dasha_update_op", "interpret_default",
+]

@@ -12,17 +12,31 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.dasha_update import dasha_update_pallas
+from repro.kernels.dasha_update import (dasha_h_update_pallas,
+                                        dasha_page_update_batched_pallas,
+                                        dasha_payload_blocks_pallas,
+                                        dasha_tail_batched_pallas,
+                                        dasha_update_batched_pallas,
+                                        dasha_update_pallas)
 from repro.kernels.randk import block_gather_pallas, block_scatter_pallas
 
 Array = jax.Array
 
 
-def _interpret_default() -> bool:
+def interpret_default() -> bool:
+    """Whether Pallas kernels run in interpret mode by default here:
+    yes unless on TPU, overridable via ``REPRO_PALLAS_INTERPRET``."""
     env = os.environ.get("REPRO_PALLAS_INTERPRET")
     if env is not None:
         return env not in ("0", "false", "False")
     return jax.default_backend() != "tpu"
+
+
+_interpret_default = interpret_default   # internal alias
+
+
+def _f32(*xs: Array) -> tuple:
+    return tuple(x.astype(jnp.float32) for x in xs)
 
 
 def dasha_update_op(gn: Array, go: Array, h: Array, gi: Array, *,
@@ -33,9 +47,71 @@ def dasha_update_op(gn: Array, go: Array, h: Array, gi: Array, *,
     interp = _interpret_default() if interpret is None else interpret
     part = jnp.asarray(participates, jnp.float32)
     return dasha_update_pallas(
-        gn.astype(jnp.float32), go.astype(jnp.float32),
-        h.astype(jnp.float32), gi.astype(jnp.float32), part,
+        *_f32(gn, go, h, gi), part,
         b=float(b), a=float(a), pa=float(pa), interpret=interp)
+
+
+def dasha_update_batched_op(gn: Array, go: Array, h: Array, gi: Array,
+                            mask: Array, *, b: float, a: float, pa: float,
+                            interpret: bool | None = None
+                            ) -> Tuple[Array, Array, Array]:
+    """Node-major fused (k, h_new, payload), inputs (n, d), mask (n,).
+    Covers the Alg. 2 (gradient) and Alg. 5 (MVR) k-rules — they share
+    the ``gn - go - b (h - go)`` shape with ``gn/go`` = full vs minibatch
+    gradients respectively."""
+    interp = _interpret_default() if interpret is None else interpret
+    return dasha_update_batched_pallas(
+        *_f32(gn, go, h, gi), mask.astype(jnp.float32),
+        b=float(b), a=float(a), pa=float(pa), interpret=interp)
+
+
+def dasha_page_update_op(gn: Array, go: Array, bn: Array, bo: Array,
+                         h: Array, gi: Array, mask: Array, coin: Array, *,
+                         b: float, a: float, pa: float, p_page: float,
+                         interpret: bool | None = None
+                         ) -> Tuple[Array, Array, Array]:
+    """Fused Alg. 3 (PAGE) update: both branches + coin select + lines
+    10-11 in one kernel launch.  Inputs (n, d); coin is a () scalar."""
+    interp = _interpret_default() if interpret is None else interpret
+    return dasha_page_update_batched_pallas(
+        *_f32(gn, go, bn, bo, h, gi), mask.astype(jnp.float32),
+        jnp.asarray(coin, jnp.float32),
+        b=float(b), a=float(a), pa=float(pa), p_page=float(p_page),
+        interpret=interp)
+
+
+def dasha_tail_op(k: Array, h: Array, gi: Array, mask: Array, *,
+                  a: float, pa: float, interpret: bool | None = None
+                  ) -> Tuple[Array, Array]:
+    """Fused lines 10-11 given precomputed k (finite-MVR, Alg. 4)."""
+    interp = _interpret_default() if interpret is None else interpret
+    return dasha_tail_batched_pallas(
+        *_f32(k, h, gi), mask.astype(jnp.float32),
+        a=float(a), pa=float(pa), interpret=interp)
+
+
+def dasha_h_update_op(gn: Array, go: Array, h: Array, *, b: float,
+                      pa: float, participates: Array,
+                      interpret: bool | None = None) -> Array:
+    """Line-10 h-tracker pass only (flat (D,)); k stays in-register."""
+    interp = _interpret_default() if interpret is None else interpret
+    return dasha_h_update_pallas(
+        *_f32(gn, go, h), jnp.asarray(participates, jnp.float32),
+        b=float(b), pa=float(pa), interpret=interp)
+
+
+def dasha_payload_blocks_op(gn: Array, go: Array, h: Array, gi: Array,
+                            block_idx: Array, *, b: float, a: float,
+                            pa: float, scale: float, block_size: int,
+                            interpret: bool | None = None) -> Array:
+    """Fused update+BlockRandK-compress: line-11 payload evaluated only
+    at the selected blocks (never dense in HBM), pre-scaled for
+    unbiasedness.  Returns (k_blocks, block_size) wire values."""
+    interp = _interpret_default() if interpret is None else interpret
+    return dasha_payload_blocks_pallas(
+        *_f32(gn, go, h, gi), block_idx.astype(jnp.int32),
+        b=float(b), a=float(a), pa=float(pa), scale=float(scale),
+        block_size=int(block_size), interpret=interp)
 
 
 def block_gather_op(x_blocks: Array, block_idx: Array, *, scale: float,

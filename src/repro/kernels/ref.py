@@ -25,6 +25,56 @@ def dasha_update_ref(gn: Array, go: Array, h: Array, g_i: Array, *,
     return k, h_new, payload
 
 
+def dasha_update_batched_ref(gn: Array, go: Array, h: Array, g_i: Array,
+                             mask: Array, *, b: float, a: float, pa: float
+                             ) -> Tuple[Array, Array, Array]:
+    """Node-major (n, d) form of :func:`dasha_update_ref`; ``mask`` is the
+    (n,) participation indicator."""
+    m = mask.astype(gn.dtype)[:, None]
+    k = gn - go - b * (h - go)
+    h_new = h + m * (k / pa)
+    payload = k / pa - (a / pa) * (g_i - h)
+    return k, h_new, payload
+
+
+def dasha_page_update_ref(gn: Array, go: Array, bn: Array, bo: Array,
+                          h: Array, g_i: Array, mask: Array, coin: Array,
+                          *, b: float, a: float, pa: float, p_page: float
+                          ) -> Tuple[Array, Array, Array]:
+    """Alg. 3 PAGE rule + lines 10-11: shared Bernoulli ``coin`` selects
+    the full-gradient branch (prob. p_page) vs the minibatch branch."""
+    m = mask.astype(gn.dtype)[:, None]
+    k_full = gn - go - (b / p_page) * (h - go)
+    k_mini = bn - bo
+    k = jnp.where(coin.astype(bool), k_full, k_mini)
+    h_new = h + m * (k / pa)
+    payload = k / pa - (a / pa) * (g_i - h)
+    return k, h_new, payload
+
+
+def dasha_tail_ref(k: Array, h: Array, g_i: Array, mask: Array, *,
+                   a: float, pa: float) -> Tuple[Array, Array]:
+    """Lines 10-11 given a precomputed ``k`` (n, d) (finite-MVR path)."""
+    m = mask.astype(k.dtype)[:, None]
+    h_new = h + m * (k / pa)
+    payload = k / pa - (a / pa) * (g_i - h)
+    return h_new, payload
+
+
+def dasha_payload_blocks_ref(gn: Array, go: Array, h: Array, g_i: Array,
+                             block_idx: Array, *, b: float, a: float,
+                             pa: float, scale: float, block_size: int
+                             ) -> Array:
+    """Unfused composition the fused update+compress kernel must match:
+    dense payload -> pad to blocks -> gather selected rows -> scale."""
+    _, _, payload = dasha_update_ref(gn, go, h, g_i, b=b, a=a, pa=pa,
+                                     participates=jnp.asarray(1.0))
+    d = payload.shape[0]
+    nb = -(-d // block_size)
+    padded = jnp.pad(payload, (0, nb * block_size - d))
+    return padded.reshape(nb, block_size)[block_idx] * scale
+
+
 def block_gather_ref(x_blocks: Array, block_idx: Array, scale: float
                      ) -> Array:
     """RandK block gather: x_blocks (nb, bs), block_idx (kb,) ->

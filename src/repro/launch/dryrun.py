@@ -160,6 +160,7 @@ def lower_pair(arch_id: str, shape_name: str, *, multi_pod: bool,
             "p_a": dcfg.p_a,
             "ratio": dcfg.compression_ratio,
             "aggregation": dcfg.aggregation,
+            "use_pallas": dcfg.use_pallas,
             "uplink_bits_per_node_round":
                 trainer.engine.uplink_bits_per_round(n_params),
         }

@@ -3,21 +3,24 @@
 Defined as FUNCTIONS (not module-level constants) so importing this
 module never touches jax device state — required because the dry-run
 must set XLA_FLAGS before any jax initialization.
+
+Mesh construction goes through :mod:`repro.compat` so the same code
+runs on jax versions with and without ``jax.sharding.AxisType``.
 """
 from __future__ import annotations
 
 from typing import Tuple
 
-import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+from repro.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     """16x16 = 256 chips per pod (v5e); 2 pods = 512 chips multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def data_axes_of(mesh: Mesh) -> Tuple[str, ...]:
@@ -34,5 +37,4 @@ def num_nodes(mesh: Mesh) -> int:
 def make_host_mesh(data: int = 2, model: int = 2) -> Mesh:
     """Small mesh for CPU tests/examples (requires
     XLA_FLAGS=--xla_force_host_platform_device_count>=data*model)."""
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    return make_mesh((data, model), ("data", "model"))

@@ -21,6 +21,8 @@ def main():
     ap.add_argument("--p-a", type=float, default=0.5)
     ap.add_argument("--ratio", type=float, default=1 / 64)
     ap.add_argument("--aggregation", default="sparse_allgather")
+    ap.add_argument("--use-pallas", action="store_true",
+                    help="fused Pallas update path (DESIGN.md §6)")
     ap.add_argument("--server", choices=["paper", "adamw"], default="paper")
     ap.add_argument("--gamma", type=float, default=1e-3)
     ap.add_argument("--ckpt", default=None)
@@ -33,6 +35,7 @@ def main():
                                    + os.environ.get("XLA_FLAGS", ""))
 
     import jax
+    from repro.compat import use_mesh
     from repro.core.sharded import ShardedDashaConfig
     from repro.data.synthetic import DataConfig, make_batch
     from repro.launch.mesh import (data_axes_of, make_host_mesh,
@@ -64,7 +67,8 @@ def main():
         b=args.p_a / (2 - args.p_a),
         p_a=args.p_a, sampler="independent",
         compression_ratio=args.ratio,
-        aggregation=args.aggregation, data_axes=axes)
+        aggregation=args.aggregation, data_axes=axes,
+        use_pallas=args.use_pallas)
     server = (paper_server(args.gamma) if args.server == "paper"
               else adamw_server(lr=3e-4))
     trainer = Trainer(model, mesh, TrainerConfig(dasha=dcfg, server=server))
@@ -79,7 +83,7 @@ def main():
             yield make_batch(cfg, data, i, dtype=cfg.dtype)
             i += 1
 
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         train(trainer, state, batches(), num_steps=args.steps,
               logger=MetricsLogger(args.log, print_every=10),
               checkpoint_dir=args.ckpt,

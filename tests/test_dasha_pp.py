@@ -111,6 +111,42 @@ def test_metrics_accounting(quad):
     assert float(met.bits_sent) == 3 * comp.wire_bits(quad.d)
 
 
+@pytest.mark.parametrize("variant",
+                         ["gradient", "page", "finite_mvr", "mvr"])
+def test_pallas_path_matches_reference_trajectory(small_problem, quad,
+                                                  variant):
+    """use_pallas=True must reproduce the unfused trajectory (x, g, h_i)
+    for every k_i rule — the fused kernels consume randomness exactly
+    like the jnp chain, so 30 jitted rounds stay allclose."""
+    prob = quad if variant == "gradient" else small_problem
+    comp = RandK(k=4)
+    samp = SNice(n=prob.n, s=max(2, prob.n // 2))
+
+    def make(use_pallas):
+        kw = dict(gamma=0.01, a=0.1, b=0.3, use_pallas=use_pallas)
+        if variant == "gradient":
+            return dasha_pp(prob, comp, samp, **kw)
+        if variant == "page":
+            return dasha_pp_page(prob, comp, samp, p_page=0.3,
+                                 batch_size=2, **kw)
+        if variant == "finite_mvr":
+            return dasha_pp_finite_mvr(prob, comp, samp, batch_size=2, **kw)
+        return dasha_pp_mvr(prob, comp, samp, batch_size=2, **kw)
+
+    x0 = jnp.zeros(prob.d)
+    st_ref, met_ref = jax.jit(lambda k: make(False).run(k, x0, 30))(
+        jax.random.key(1))
+    st_pal, met_pal = jax.jit(lambda k: make(True).run(k, x0, 30))(
+        jax.random.key(1))
+    for a, b in [(st_ref.x, st_pal.x), (st_ref.g, st_pal.g),
+                 (st_ref.h_i, st_pal.h_i), (st_ref.g_i, st_pal.g_i)]:
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(met_ref.grad_norm_sq),
+                               np.asarray(met_pal.grad_norm_sq),
+                               rtol=1e-4)
+
+
 def test_theory_gamma_positive_and_monotone():
     c = theory.ProblemConstants(L=1.0, L_hat=1.5, L_max=3.0, L_sigma=3.0,
                                 n=16, m=64, d=100)

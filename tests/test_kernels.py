@@ -4,11 +4,26 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypo import given, settings, st   # hypothesis or deterministic fallback
 
 from repro.kernels import ref
 from repro.kernels.ops import (block_gather_op, block_scatter_op,
-                               dasha_update_op)
+                               dasha_h_update_op, dasha_page_update_op,
+                               dasha_payload_blocks_op, dasha_tail_op,
+                               dasha_update_batched_op, dasha_update_op)
+
+
+def _node_arrays(n, d, count, seed=0):
+    key = jax.random.key(seed)
+    return tuple(jax.random.normal(jax.random.fold_in(key, i), (n, d))
+                 for i in range(count))
+
+
+def _assert_all_close(outs, refs, rtol=1e-5, atol=1e-6):
+    for o, r in zip(outs, refs):
+        assert o.shape == r.shape
+        np.testing.assert_allclose(np.asarray(o), np.asarray(r),
+                                   rtol=rtol, atol=atol)
 
 
 @pytest.mark.parametrize("d", [1, 7, 128, 1000, 128 * 512, 128 * 512 + 17,
@@ -51,6 +66,85 @@ def test_dasha_update_participation_freezes_h():
     _, h_new, _ = dasha_update_op(gn, go, h, gi, b=0.3, a=0.1, pa=0.25,
                                   participates=jnp.asarray(0.0))
     np.testing.assert_allclose(np.asarray(h_new), np.asarray(h))
+
+
+# ---------------------------------------------------------------------
+# Batched (node-major) kernel family vs the jnp oracles
+# ---------------------------------------------------------------------
+
+@pytest.mark.parametrize("d", [1, 7, 129, 1000])   # odd d -> padding path
+@pytest.mark.parametrize("mask", [[1, 1, 1], [0, 0, 0], [1, 0, 1]])
+def test_batched_update_parity(d, mask):
+    """p_a < 1 participation masks and the lane-padding path."""
+    gn, go, h, gi = _node_arrays(3, d, 4, seed=d)
+    m = jnp.asarray(mask, jnp.float32)
+    args = dict(b=0.25, a=0.04, pa=0.5)
+    outs = dasha_update_batched_op(gn, go, h, gi, m, **args)
+    refs = ref.dasha_update_batched_ref(gn, go, h, gi, m, **args)
+    _assert_all_close(outs, refs)
+
+
+def test_batched_update_interpret_explicit():
+    """interpret=True must be forceable regardless of backend default."""
+    gn, go, h, gi = _node_arrays(2, 300, 4, seed=9)
+    m = jnp.asarray([1.0, 0.0])
+    args = dict(b=0.1, a=0.3, pa=0.25)
+    outs = dasha_update_batched_op(gn, go, h, gi, m, interpret=True, **args)
+    refs = ref.dasha_update_batched_ref(gn, go, h, gi, m, **args)
+    _assert_all_close(outs, refs)
+
+
+@pytest.mark.parametrize("coin", [0.0, 1.0])
+@pytest.mark.parametrize("d", [5, 384, 1000])
+def test_page_update_parity(coin, d):
+    """Both PAGE branches of the fused Alg. 3 kernel."""
+    gn, go, bn, bo, h, gi = _node_arrays(4, d, 6, seed=d + 1)
+    m = jnp.asarray([1.0, 0.0, 1.0, 1.0])
+    c = jnp.asarray(coin)
+    args = dict(b=0.25, a=0.04, pa=0.5, p_page=0.125)
+    outs = dasha_page_update_op(gn, go, bn, bo, h, gi, m, c, **args)
+    refs = ref.dasha_page_update_ref(gn, go, bn, bo, h, gi, m, c, **args)
+    _assert_all_close(outs, refs)
+
+
+@pytest.mark.parametrize("d", [3, 256, 777])
+def test_tail_parity(d):
+    """Lines 10-11 with an externally supplied k (finite-MVR path)."""
+    k, h, gi = _node_arrays(5, d, 3, seed=d + 2)
+    m = jnp.asarray([0.0, 1.0, 1.0, 0.0, 1.0])
+    outs = dasha_tail_op(k, h, gi, m, a=0.07, pa=0.25)
+    refs = ref.dasha_tail_ref(k, h, gi, m, a=0.07, pa=0.25)
+    _assert_all_close(outs, refs)
+
+
+@pytest.mark.parametrize("d,bs,kb", [(1024, 128, 2), (1000, 128, 3),
+                                     (64, 8, 4), (129, 128, 1)])
+def test_payload_blocks_fused_compress(d, bs, kb):
+    """The fused update+compress must equal dense payload -> block gather
+    (unbiasedness scale included), incl. ragged last block."""
+    gn, go, h, gi = (jax.random.normal(jax.random.fold_in(jax.random.key(d), i),
+                                       (d,)) for i in range(4))
+    nb = -(-d // bs)
+    idx = jnp.asarray(
+        np.random.default_rng(d).choice(nb, kb, replace=False), jnp.int32)
+    args = dict(b=0.3, a=0.05, pa=0.5, scale=nb / kb, block_size=bs)
+    out = dasha_payload_blocks_op(gn, go, h, gi, idx, **args)
+    want = ref.dasha_payload_blocks_ref(gn, go, h, gi, idx, **args)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("part", [0.0, 1.0])
+def test_h_update_parity(part):
+    d = 513
+    gn, go, h, gi = (jax.random.normal(jax.random.fold_in(jax.random.key(1), i),
+                                       (d,)) for i in range(4))
+    out = dasha_h_update_op(gn, go, h, b=0.2, pa=0.5,
+                            participates=jnp.asarray(part))
+    _, want, _ = ref.dasha_update_ref(gn, go, h, gi, b=0.2, a=0.0, pa=0.5,
+                                      participates=jnp.asarray(part))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
 
 
 @pytest.mark.parametrize("nb,bs,kb", [(8, 128, 1), (64, 128, 7),

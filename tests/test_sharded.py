@@ -27,10 +27,10 @@ def run_sub(code: str, devices: int = 8, timeout: int = 520) -> str:
 COMMON = """
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.compat import make_mesh, use_mesh
 from repro.core.sharded import (ShardedDasha, ShardedDashaConfig,
                                 per_node_value_and_grads)
-mesh = jax.make_mesh((4, 2), ('data', 'model'),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = make_mesh((4, 2), ('data', 'model'))
 def loss_fn(params, batch):
     x, y = batch
     return jnp.mean((x @ params['w'] - y) ** 2)
@@ -41,7 +41,7 @@ xb = jax.random.normal(jax.random.key(1), (4, 32, D))
 yb = xb @ jax.random.normal(jax.random.key(2), (D, 8))
 def fit(cfg, steps=250):
     eng = ShardedDasha(mesh, specs, cfg)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         p = {'w': jax.device_put(params['w'], NamedSharding(mesh, P(None, 'model')))}
         @jax.jit
         def step(params_, state, key):
@@ -78,12 +78,20 @@ print('OK', l_sparse, l_dense, l_id)
 
 @pytest.mark.slow
 def test_sharded_pallas_path_matches_jnp():
+    """The fused kernel path must reproduce the jnp trajectory in every
+    aggregation mode (sparse wire, dense psum, uncompressed)."""
     out = run_sub(COMMON + """
 base = dict(gamma=0.02, a=0.5/7, b=1/3, p_a=0.5, sampler='independent',
-            compression_ratio=0.25, block_size=8, data_axes=('data',))
-_, g_jnp = fit(ShardedDashaConfig(use_pallas=False, **base), steps=40)
-_, g_pal = fit(ShardedDashaConfig(use_pallas=True, **base), steps=40)
-np.testing.assert_allclose(g_jnp, g_pal, rtol=1e-5, atol=1e-6)
+            block_size=8, data_axes=('data',))
+for extra in (dict(compression_ratio=0.25, aggregation='sparse_allgather'),
+              dict(compression_ratio=0.25, aggregation='dense_psum'),
+              dict(compression_ratio=None)):
+    _, g_jnp = fit(ShardedDashaConfig(use_pallas=False, **base, **extra),
+                   steps=40)
+    _, g_pal = fit(ShardedDashaConfig(use_pallas=True, **base, **extra),
+                   steps=40)
+    np.testing.assert_allclose(g_jnp, g_pal, rtol=1e-5, atol=1e-6)
+    print('mode ok', extra)
 print('OK')
 """)
     assert "OK" in out
@@ -95,14 +103,14 @@ def test_full_trainer_loss_decreases_on_learnable_data():
     token pattern) — loss must drop."""
     out = run_sub("""
 import jax, jax.numpy as jnp, numpy as np
+from repro.compat import make_mesh, use_mesh
 from repro.models import Model, get_smoke_config
 from repro.core.sharded import ShardedDashaConfig
 from repro.training.trainer import Trainer, TrainerConfig
 from repro.training.optim import adamw_server
 from repro.data.sharding import place_batch
 
-mesh = jax.make_mesh((4, 2), ('data', 'model'),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = make_mesh((4, 2), ('data', 'model'))
 cfg = get_smoke_config('granite-3-2b').with_overrides(vocab_size=64)
 model = Model(cfg)
 dcfg = ShardedDashaConfig(gamma=0.0, a=0.02, b=0.9, p_a=0.5,
@@ -115,7 +123,7 @@ toks = jnp.tile(jnp.arange(32) % 7, (4, 2, 1)).astype(jnp.int32)
 batch = {'tokens': toks}
 step = tr.jit_train_step(batch)
 losses = []
-with jax.set_mesh(mesh):
+with use_mesh(mesh):
     placed = place_batch(batch, mesh, ('data',))
     for i in range(60):
         state, m = step(state, placed, jax.random.key(i))
