@@ -27,7 +27,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ref
-from repro.kernels.ops import (dasha_page_update_op,
+from repro.kernels.ops import (dasha_page_h_update_op,
+                               dasha_page_payload_blocks_op,
+                               dasha_page_update_op,
                                dasha_payload_blocks_op, dasha_tail_op,
                                dasha_update_batched_op, dasha_update_op,
                                interpret_default)
@@ -155,6 +157,44 @@ def run(d: int = 1 << 20, n: int = 8, quick: bool = False):
         b_unfused=hlo_bytes(cunf, gn, go, h, gi), ideal=ideal,
         err=_max_err([cfus(gn, go, h, gi)], [cunf(gn, go, h, gi)]),
         interpret=interpret))
+
+    # -- fused PAGE wire pair (h in-register + payload at blocks) --------
+    # coin is a *traced* argument so XLA cannot fold one branch away in
+    # the unfused chain (it is a runtime scalar in production too).
+    pbn, pbo = mk(30, (d,)), mk(31, (d,))
+    coin1 = jnp.asarray(1.0)
+    pckw = dict(p_page=0.125, **ckw)
+    pcunf = lambda *xs: ref.dasha_page_payload_blocks_ref(*xs[:-1], idx,
+                                                          xs[-1], **pckw)
+    pcfus = lambda *xs: dasha_page_payload_blocks_op(*xs[:-1], idx,
+                                                     xs[-1], **pckw)
+    ideal = 7 * kb * bs * 4.0      # 6 reads + 1 write of selected blocks
+    rows.append(_row(
+        "page_payload_compress(blockrandk)",
+        t_unfused=timeit(jax.jit(pcunf), gn, go, pbn, pbo, h, gi, coin1),
+        t_fused=None if interpret else timeit(jax.jit(pcfus), gn, go, pbn,
+                                              pbo, h, gi, coin1),
+        b_unfused=hlo_bytes(pcunf, gn, go, pbn, pbo, h, gi, coin1),
+        ideal=ideal,
+        err=_max_err([pcfus(gn, go, pbn, pbo, h, gi, coin1)],
+                     [pcunf(gn, go, pbn, pbo, h, gi, coin1)]),
+        interpret=interpret))
+
+    hkw = dict(b=kw["b"], pa=kw["pa"], p_page=0.125)
+    hunf = lambda *xs: ref.dasha_page_h_update_ref(*xs[:-1], part, xs[-1],
+                                                   **hkw)
+    hfus = lambda *xs: dasha_page_h_update_op(
+        *xs[:-1], xs[-1], participates=part, **hkw)
+    ideal = 6 * d * 4.0            # 5 reads + 1 write of d f32
+    rows.append(_row(
+        "page_h_update(in-register k)",
+        t_unfused=timeit(jax.jit(hunf), gn, go, pbn, pbo, h, coin1),
+        t_fused=None if interpret else timeit(jax.jit(hfus), gn, go, pbn,
+                                              pbo, h, coin1),
+        b_unfused=hlo_bytes(hunf, gn, go, pbn, pbo, h, coin1), ideal=ideal,
+        err=_max_err([hfus(gn, go, pbn, pbo, h, coin1)],
+                     [hunf(gn, go, pbn, pbo, h, coin1)]),
+        interpret=interpret))
     return rows
 
 
@@ -183,4 +223,11 @@ def main(quick: bool = True):
 
 
 if __name__ == "__main__":
-    list(main(quick=False))
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shapes; exercises every kernel in the "
+                         "family (interpret mode on CPU) — the CI job")
+    args = ap.parse_args()
+    list(main(quick=args.smoke))

@@ -3,6 +3,7 @@
 Layout:
     compressors.py    unbiased/biased communication compressors (Def. 1)
     participation.py  Assumption-8 participation samplers
+    variants.py       the k_i rule registry (Algs. 2-5) both engines share
     problems.py       distributed problems (paper §A experiments)
     theory.py         theorem-exact hyperparameters
     dasha_pp.py       Algorithm 1 (+ Algs. 2-5) and DASHA baselines
@@ -11,8 +12,8 @@ Layout:
     sharded.py        SPMD production runtime (shard_map over the mesh)
     sync_mvr.py       DASHA-PP-SYNC-MVR (appendix G)
 """
-from repro.core.compressors import (Composed, Compressor, Identity,
-                                    NaturalCompression, RandK,
+from repro.core.compressors import (BlockRandK, Composed, Compressor,
+                                    Identity, NaturalCompression, RandK,
                                     RandomDithering, TopK, make_compressor,
                                     randk_for_ratio)
 from repro.core.dasha_pp import (DashaPP, DashaPPConfig, DashaPPState,
@@ -29,10 +30,13 @@ from repro.core.problems import (DistributedProblem, LogisticSigmoidProblem,
                                  make_synthetic_classification,
                                  sample_batch_indices)
 from repro.core.sync_mvr import DashaPPSyncMVR, SyncMVRConfig, dasha_pp_sync_mvr
-from repro.core import theory
+from repro.core import theory, variants
+from repro.core.variants import (BaselineRule, VariantRule, get_baseline,
+                                 get_rule)
 
 __all__ = [
-    "Compressor", "Identity", "RandK", "TopK", "NaturalCompression",
+    "Compressor", "Identity", "RandK", "BlockRandK", "TopK",
+    "NaturalCompression",
     "RandomDithering", "Composed", "make_compressor", "randk_for_ratio",
     "ParticipationSampler", "SNice", "Independent", "FullParticipation",
     "make_sampler",
@@ -44,5 +48,6 @@ __all__ = [
     "dasha_pp_finite_mvr", "dasha_pp_mvr",
     "Marina", "MarinaConfig", "Frecon", "FreconConfig",
     "DashaPPSyncMVR", "SyncMVRConfig", "dasha_pp_sync_mvr",
-    "theory",
+    "theory", "variants",
+    "VariantRule", "BaselineRule", "get_rule", "get_baseline",
 ]

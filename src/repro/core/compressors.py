@@ -119,6 +119,49 @@ class RandK(Compressor):
 
 
 @dataclasses.dataclass(frozen=True)
+class BlockRandK(Compressor):
+    """RandK at block granularity (the TPU wire format, DESIGN.md §3):
+    choose ``kb`` of the ``nb`` (block_size,)-blocks u.a.r. without
+    replacement and scale by ``nb/kb``.  Blocks partition coordinates,
+    so this is an ordinary RandK on super-coordinates: unbiased with
+    exactly ``omega = nb/kb - 1``.
+
+    This is the *dense-output reference form* of the sharded engine's
+    wire: it reuses the engine's draw (``variants.block_randk_dense``),
+    so with matched keys (``variants.leaf_node_key``) the reference
+    DashaPP engine reproduces ShardedDasha messages bit-for-bit — the
+    basis of the trajectory-parity tests."""
+
+    ratio: float
+    block_size: int = 128
+    name: str = "block_randk"
+
+    def _plan(self, d: int):
+        from repro.core.variants import block_plan
+        return block_plan(d, self.block_size, self.ratio)
+
+    def omega(self, d: int) -> float:
+        _, nb, kb = self._plan(d)
+        return nb / kb - 1.0
+
+    def compress(self, key: Array, x: Array) -> Array:
+        from repro.core.variants import block_randk_dense
+        bs, _, kb = self._plan(x.shape[-1])
+        return block_randk_dense(key, x, kb, bs)
+
+    def compress_sparse(self, key: Array, x: Array) -> Tuple[Array, Array]:
+        from repro.core.variants import block_randk_select
+        bs, _, kb = self._plan(x.shape[-1])
+        return block_randk_select(key, x, kb, bs)
+
+    def wire_bits(self, d: int) -> float:
+        from repro.core.variants import message_bits
+        return message_bits(d, aggregation="sparse_allgather",
+                            compression_ratio=self.ratio,
+                            block_size=self.block_size)
+
+
+@dataclasses.dataclass(frozen=True)
 class TopK(Compressor):
     """Greedy Top-K by magnitude.  *Biased* (contractive) — included as a
     baseline only; not admissible for DASHA-PP's unbiasedness analysis.
@@ -273,6 +316,8 @@ def randk_for_ratio(d: int, ratio: float) -> RandK:
 _REGISTRY = {
     "identity": lambda d, **kw: Identity(),
     "randk": lambda d, **kw: RandK(k=kw.get("k", max(1, d // 100))),
+    "block_randk": lambda d, **kw: BlockRandK(
+        ratio=kw.get("ratio", 0.01), block_size=kw.get("block_size", 128)),
     "topk": lambda d, **kw: TopK(k=kw.get("k", max(1, d // 100))),
     "natural": lambda d, **kw: NaturalCompression(),
     "dithering": lambda d, **kw: RandomDithering(s=kw.get("s", 4)),

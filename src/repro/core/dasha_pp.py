@@ -1,6 +1,8 @@
 """DASHA-PP (paper Algorithm 1) and its sub-algorithms (Algs. 2-5).
 
-One generic engine implements Algorithm 1; the four ``k_i`` rules plug in:
+One generic engine implements Algorithm 1; the four ``k_i`` rules plug
+in from the :mod:`repro.core.variants` registry (the single source of
+truth shared with the sharded production engine, DESIGN.md §8):
 
 * ``gradient``    — Alg. 2 (DASHA-PP)
 * ``page``        — Alg. 3 (DASHA-PP-PAGE, finite-sum)
@@ -26,6 +28,7 @@ from typing import Callable, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import variants
 from repro.core.compressors import Compressor
 from repro.core.participation import (FullParticipation, ParticipationSampler)
 from repro.core.problems import DistributedProblem, sample_batch_indices
@@ -67,8 +70,7 @@ class DashaPPConfig:
     use_pallas: bool = False
 
     def __post_init__(self):
-        if self.variant not in ("gradient", "page", "finite_mvr", "mvr"):
-            raise ValueError(f"unknown variant {self.variant!r}")
+        variants.get_rule(self.variant)   # raises on unknown names
 
 
 class DashaPP:
@@ -105,111 +107,12 @@ class DashaPP:
             step=jnp.zeros((), jnp.int32))
 
     # ------------------------------------------------------------------
-    def _k_gradient(self, key, x_new, x_old, state):
-        p, b = self.problem, self.cfg.b
-        gn, go = p.grad(x_new), p.grad(x_old)
-        k = gn - go - b * (state.h_i - go)
-        calls = jnp.asarray(2 * p.m * p.n)  # full local grads at two points
-        return k, None, calls
-
-    def _k_page(self, key, x_new, x_old, state):
-        p, cfg = self.problem, self.cfg
-        k_coin, k_batch = jax.random.split(key)
-        # One global coin (paper: "with probability p_page on all
-        # participating nodes" — the switch is shared).
-        coin = jax.random.bernoulli(k_coin, cfg.p_page)
-        idx = sample_batch_indices(k_batch, p.n, p.m, cfg.batch_size,
-                                   replace=cfg.replace)
-        gn, go = p.grad(x_new), p.grad(x_old)
-        k_full = gn - go - (cfg.b / cfg.p_page) * (state.h_i - go)
-        bn = p.batch_grad(x_new, idx)
-        bo = p.batch_grad(x_old, idx)
-        k_mini = bn - bo
-        k = jnp.where(coin, k_full, k_mini)
-        calls = jnp.where(coin, 2 * p.m * p.n, 2 * cfg.batch_size * p.n)
-        return k, None, calls
-
-    def _k_finite_mvr(self, key, x_new, x_old, state):
-        p, cfg = self.problem, self.cfg
-        B, m = cfg.batch_size, p.m
-        idx = sample_batch_indices(key, p.n, m, B, replace=False)  # Alg.4: w/o repl.
-        gn = p.component_grads(x_new, idx)            # (n, B, d)
-        go = p.component_grads(x_old, idx)
-        h_sel = jnp.take_along_axis(state.h_ij, idx[..., None], axis=1)
-        k_sel = (m / B) * (gn - go - cfg.b * (h_sel - go))   # (n, B, d)
-        # Scatter back to (n, m, d); untouched components are zero.
-        k_ij = jnp.zeros_like(state.h_ij)
-        k_ij = jax.vmap(lambda kz, ii, kv: kz.at[ii].set(kv))(k_ij, idx, k_sel)
-        k = jnp.mean(k_ij, axis=1)                    # (n, d)
-        calls = jnp.asarray(2 * B * p.n)
-        return k, k_ij, calls
-
-    def _k_mvr(self, key, x_new, x_old, state):
-        p, cfg = self.problem, self.cfg
-        B = cfg.batch_size
-        idx = sample_batch_indices(key, p.n, p.m, B, replace=True)
-        bn = p.batch_grad(x_new, idx)   # same sample at both points (Alg.5)
-        bo = p.batch_grad(x_old, idx)
-        k = bn - bo - cfg.b * (state.h_i - bo)
-        calls = jnp.asarray(2 * B * p.n)
-        return k, None, calls
-
-    # ------------------------------------------------------------------
-    def _fused_update(self, key: Array, x_new: Array, x_old: Array,
-                      state: DashaPPState, mask: Array):
-        """Lines 9-11 via the fused batched Pallas kernels (DESIGN.md §6):
-        one launch computes (k_i, h_new, payload) for all ``n`` simulated
-        nodes, replacing the five-pass elementwise jnp chain.  Randomness
-        is consumed exactly as in the unfused ``_k_*`` path, so the two
-        trajectories coincide."""
-        from repro.kernels import ops
-        p, cfg = self.problem, self.cfg
-        pa = self.sampler.p_a
-        kw = dict(b=cfg.b, a=cfg.a, pa=pa)
-        # Kernels compute in float32; restore the state dtype so the
-        # lax.scan carry in run() keeps a fixed type (x64/bf16 problems).
-        dt = state.h_i.dtype
-        _cast = lambda *xs: tuple(x.astype(dt) for x in xs)
-        if cfg.variant == "gradient":
-            gn, go = p.grad(x_new), p.grad(x_old)
-            k_i, h_new, payload = _cast(*ops.dasha_update_batched_op(
-                gn, go, state.h_i, state.g_i, mask, **kw))
-            return k_i, None, h_new, payload, jnp.asarray(2 * p.m * p.n)
-        if cfg.variant == "mvr":
-            idx = sample_batch_indices(key, p.n, p.m, cfg.batch_size,
-                                       replace=True)
-            bn, bo = p.batch_grad(x_new, idx), p.batch_grad(x_old, idx)
-            k_i, h_new, payload = _cast(*ops.dasha_update_batched_op(
-                bn, bo, state.h_i, state.g_i, mask, **kw))
-            return (k_i, None, h_new, payload,
-                    jnp.asarray(2 * cfg.batch_size * p.n))
-        if cfg.variant == "page":
-            k_coin, k_batch = jax.random.split(key)
-            coin = jax.random.bernoulli(k_coin, cfg.p_page)
-            idx = sample_batch_indices(k_batch, p.n, p.m, cfg.batch_size,
-                                       replace=cfg.replace)
-            gn, go = p.grad(x_new), p.grad(x_old)
-            bn, bo = p.batch_grad(x_new, idx), p.batch_grad(x_old, idx)
-            k_i, h_new, payload = _cast(*ops.dasha_page_update_op(
-                gn, go, bn, bo, state.h_i, state.g_i, mask, coin,
-                p_page=cfg.p_page, **kw))
-            calls = jnp.where(coin, 2 * p.m * p.n,
-                              2 * cfg.batch_size * p.n)
-            return k_i, None, h_new, payload, calls
-        # finite_mvr: k_i comes from the (n, m, d) component scatter —
-        # no dense elementwise shape to fuse — so only the tail fuses.
-        k_i, k_ij, calls = self._k_finite_mvr(key, x_new, x_old, state)
-        h_new, payload = _cast(*ops.dasha_tail_op(k_i, state.h_i,
-                                                  state.g_i, mask,
-                                                  a=cfg.a, pa=pa))
-        return k_i, k_ij, h_new, payload, calls
-
-    # ------------------------------------------------------------------
     def step(self, key: Array, state: DashaPPState
              ) -> Tuple[DashaPPState, StepMetrics]:
         p, cfg, C = self.problem, self.cfg, self.compressor
+        rule = variants.get_rule(cfg.variant)
         pa = self.sampler.p_a
-        k_part, k_oracle, k_comp = jax.random.split(key, 3)
+        k_part, k_oracle, k_comp = variants.round_keys(key)
 
         # Lines 4-5: x^{t+1} = x^t - gamma * g^t; broadcast.
         x_new = state.x - cfg.gamma * state.g
@@ -218,26 +121,39 @@ class DashaPP:
         mask = self.sampler.sample(k_part)             # (n,) bool
         maskf = mask[:, None].astype(state.x.dtype)
 
+        # Line 9 oracles: the rule evaluates what it needs (full pair /
+        # same-sample pair / PAGE coin+pair / component scatter) with
+        # the canonical randomness consumption — shared between the
+        # fused and jnp paths, so their trajectories coincide.
+        ox, k_ij, calls = rule.reference_oracle(k_oracle, p, cfg, x_new,
+                                                state.x, state)
         if cfg.use_pallas:
-            # Lines 9-11 fused (one Pallas launch for all n nodes).
-            k_i, k_ij, h_new, payload, calls = self._fused_update(
-                k_oracle, x_new, state.x, state, mask)
+            # Lines 9-11 fused (one batched Pallas launch for all n
+            # simulated nodes, DESIGN.md §6).  Kernels compute in
+            # float32; restore the state dtype so the lax.scan carry in
+            # run() keeps a fixed type (x64/bf16 problems).
+            dt = state.h_i.dtype
+            k_i, h_new, payload = (
+                x.astype(dt) for x in rule.fused_batched(
+                    ox, state.h_i, state.g_i, mask, b=cfg.b, a=cfg.a,
+                    pa=pa, p_page=cfg.p_page))
         else:
             # Line 9: k_i^{t+1} per variant (computed for every node; only
             # participating nodes *use* it — masking note, DESIGN.md §3).
-            k_fn = getattr(self, f"_k_{cfg.variant}")
-            k_i, k_ij, calls = k_fn(k_oracle, x_new, state.x, state)
-            # Line 10: h_i^{t+1} = h_i^t + k_i/p_a (participating only).
-            h_new = state.h_i + maskf * (k_i / pa)
-            # Line 11 payload: k_i/p_a - (a/p_a)(g_i - h_i^t).
-            payload = k_i / pa - (cfg.a / pa) * (state.g_i - state.h_i)
+            k_i = rule.k(ox, state.h_i, b=cfg.b, p_page=cfg.p_page)
+            # Lines 10-11: tracker step + uplink payload.
+            h_new, payload = variants.control_variate_tail(
+                k_i, state.h_i, state.g_i, a=cfg.a, pa=pa, part=maskf)
 
         h_ij_new = None
-        if cfg.variant == "finite_mvr":
+        if rule.component_trackers:
             h_ij_new = state.h_ij + maskf[:, :, None] * (k_ij / pa)
 
-        # Line 11: m_i = C_i(payload).
-        node_keys = jax.vmap(lambda i: jax.random.fold_in(k_comp, i))(
+        # Line 11: m_i = C_i(payload).  Node i's key is the leaf-0 key of
+        # the shared derivation (Assumption 7; matches the sharded
+        # engine's per-leaf keys for trajectory parity).
+        node_keys = jax.vmap(
+            lambda i: variants.leaf_node_key(k_comp, 0, i))(
             jnp.arange(p.n))
         m_i = jax.vmap(C.compress)(node_keys, payload)
         m_i = maskf * m_i

@@ -28,8 +28,11 @@ from repro.core.compressors import Compressor
 from repro.core.dasha_pp import StepMetrics
 from repro.core.participation import ParticipationSampler
 from repro.core.problems import DistributedProblem, sample_batch_indices
+from repro.core.variants import get_baseline
 
 Array = jax.Array
+
+RULE = get_baseline("frecon")   # metadata + accounting (DESIGN.md §8)
 
 
 class FreconState(NamedTuple):
@@ -65,11 +68,10 @@ class Frecon:
 
         if cfg.batch_size is None:
             grads = p.grad(state.x)
-            calls = jnp.asarray(p.m * p.n)
         else:
             idx = sample_batch_indices(k_batch, p.n, p.m, cfg.batch_size)
             grads = p.batch_grad(state.x, idx)
-            calls = jnp.asarray(cfg.batch_size * p.n)
+        calls = RULE.oracle_calls(p.n, p.m, cfg.batch_size)
 
         mask = self.sampler.sample(k_part)
         maskf = mask[:, None].astype(state.x.dtype)
@@ -86,7 +88,8 @@ class Frecon:
         metrics = StepMetrics(
             loss=p.loss(state.x),
             grad_norm_sq=jnp.sum(p.full_grad(state.x) ** 2),
-            bits_sent=jnp.sum(mask) * C.wire_bits(p.d),
+            bits_sent=RULE.round_bits(p.n, p.d, jnp.sum(mask),
+                                      C.wire_bits(p.d)),
             grad_oracle_calls=calls,
             participants=jnp.sum(mask),
             x_norm=jnp.linalg.norm(state.x),

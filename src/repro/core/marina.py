@@ -27,8 +27,11 @@ from repro.core.compressors import Compressor
 from repro.core.dasha_pp import StepMetrics
 from repro.core.participation import FullParticipation, ParticipationSampler
 from repro.core.problems import DistributedProblem, sample_batch_indices
+from repro.core.variants import get_baseline
 
 Array = jax.Array
+
+RULE = get_baseline("marina")   # metadata + accounting (DESIGN.md §8)
 
 
 class MarinaState(NamedTuple):
@@ -71,14 +74,13 @@ class Marina:
         x_new = state.x - cfg.gamma * state.g
 
         sync = jax.random.bernoulli(k_coin, cfg.p_sync)
-        gn, calls_n = self._local_grad(k_g1, x_new)      # (n, d)
-        go, calls_o = self._local_grad(k_g2, state.x)
+        gn, _ = self._local_grad(k_g1, x_new)            # (n, d)
+        go, _ = self._local_grad(k_g2, state.x)
 
         # Sync round: g^{t+1} = mean_i ∇f_i(x^{t+1}) EXACT (VR-MARINA:
         # minibatches only on compressed-difference rounds), uncompressed,
         # all nodes — MARINA's full-participation requirement.
         g_sync = jnp.mean(p.grad(x_new), axis=0)
-        calls_n = jnp.where(sync, p.m * p.n, calls_n)
 
         # Compressed round: sampled nodes send C_i(diff), 1/p_a scaled.
         mask = self.sampler.sample(k_part).astype(state.x.dtype)[:, None]
@@ -89,13 +91,15 @@ class Marina:
 
         g_new = jnp.where(sync, g_sync, g_comp)
         n_part = jnp.where(sync, p.n, jnp.sum(mask))
-        bits = jnp.where(sync, p.n * 32.0 * p.d, jnp.sum(mask) * C.wire_bits(p.d))
+        bits = RULE.round_bits(p.n, p.d, jnp.sum(mask), C.wire_bits(p.d),
+                               sync=sync)
 
         metrics = StepMetrics(
             loss=p.loss(state.x),
             grad_norm_sq=jnp.sum(p.full_grad(state.x) ** 2),
             bits_sent=bits,
-            grad_oracle_calls=calls_n + calls_o,
+            grad_oracle_calls=RULE.oracle_calls(p.n, p.m, cfg.batch_size,
+                                                coin=sync),
             participants=n_part,
             x_norm=jnp.linalg.norm(state.x),
         )

@@ -24,6 +24,49 @@ import jax.numpy as jnp
 Array = jax.Array
 
 
+# ----------------------------------------------------------------------
+# Shared draw functions
+# ----------------------------------------------------------------------
+# The mask math lives in these standalone functions so the vmap
+# reference engine (vector form below) and the shard_map production
+# engine (leaf form, :func:`participates`) consume participation
+# randomness IDENTICALLY for a given key — a prerequisite for the
+# reference<->sharded trajectory-parity tests (DESIGN.md §8).
+
+def independent_mask(key: Array, n: int, p: float) -> Array:
+    """(n,) bool mask; node ``i`` draws from ``fold_in(key, i)`` so a
+    single node can reproduce its own coordinate without a gather."""
+    return jax.vmap(
+        lambda i: jax.random.bernoulli(jax.random.fold_in(key, i), p)
+    )(jnp.arange(n))
+
+
+def snice_mask(key: Array, n: int, s: int) -> Array:
+    """(n,) bool mask with exactly ``s`` participants (shared perm)."""
+    return jax.random.permutation(key, n) < s
+
+
+def snice_size(p_a: float, n: int) -> int:
+    """The ``s`` an s-nice sampler of rate ``p_a`` uses on ``n`` nodes."""
+    return max(1, round(p_a * n))
+
+
+def participates(sampler: str, key: Array, node_idx, n: int,
+                 p_a: float) -> Array:
+    """Leaf-level participation indicator: node ``node_idx``'s
+    coordinate of the mask the matching sampler draws from ``key``
+    (exact equality asserted by tests/test_variants.py)."""
+    if sampler == "full" or p_a >= 1.0:
+        return jnp.ones((), bool)
+    if sampler == "independent":
+        return jax.random.bernoulli(jax.random.fold_in(key, node_idx),
+                                    p_a)
+    if sampler == "s_nice":
+        s = snice_size(p_a, n)
+        return jax.random.permutation(key, n)[node_idx] < s
+    raise ValueError(f"unknown sampler {sampler!r}")
+
+
 class ParticipationSampler:
     n: int
 
@@ -67,8 +110,7 @@ class SNice(ParticipationSampler):
         return self.s * (self.s - 1) / (self.n * (self.n - 1))
 
     def sample(self, key: Array) -> Array:
-        perm = jax.random.permutation(key, self.n)
-        return perm < self.s
+        return snice_mask(key, self.n, self.s)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -91,7 +133,7 @@ class Independent(ParticipationSampler):
         return self.p * self.p
 
     def sample(self, key: Array) -> Array:
-        return jax.random.bernoulli(key, self.p, (self.n,))
+        return independent_mask(key, self.n, self.p)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -16,6 +16,15 @@ Pieces:
   g_i`` are param-shaped arrays with a leading node dimension sharded
   over the data axes (each device stores only its own node's variates:
   no replication).
+* **All four k_i rules** (Algs. 2-5) via ``ShardedDashaConfig.variant``,
+  consumed from the :mod:`repro.core.variants` registry — the same
+  objects the reference engine uses, so the two engines' trajectories
+  coincide for matched keys (DESIGN.md §8; asserted by
+  tests/test_sharded.py).  ``gradient``/``mvr`` take one gradient pair,
+  ``page`` adds a minibatch pair + the shared coin (derived in here
+  from the round key), ``finite_mvr`` takes component gradients + the
+  selected indices and carries ``h_ij`` component trackers in the
+  state.
 * Aggregation modes:
     - ``dense_psum``       — uncompressed baseline: ``psum`` of dense
       messages over the data axes (bytes ∝ d).
@@ -27,8 +36,8 @@ Pieces:
   granularity — blocks partition coordinates, so choosing ``K/bs`` of
   ``D/bs`` blocks uniformly without replacement and scaling by ``D/K``
   is unbiased with exactly the Definition-1 bound ``omega = D/K - 1``
-  (blocks are super-coordinates).  Avoids a full-length sort/gather per
-  step and keeps lane-aligned memory access.
+  (blocks are super-coordinates).  The draw/scatter helpers live in
+  :mod:`repro.core.variants` (re-exported here for compatibility).
 """
 from __future__ import annotations
 
@@ -43,6 +52,12 @@ from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
+from repro.core import participation, variants
+# Re-exported: the BlockRandK wire helpers moved to the rule layer
+# (core/variants.py); existing imports from this module keep working.
+from repro.core.variants import (block_plan, block_randk_dense,
+                                 block_randk_indices, block_randk_select,
+                                 block_scatter_add)
 
 Array = jax.Array
 PyTree = Any
@@ -71,13 +86,21 @@ def per_node_value_and_grads(loss_fn: Callable, params: PyTree,
 class ShardedDashaConfig:
     gamma: float
     a: float                       # compressor momentum (Alg.1 line 11)
-    b: float                       # VR momentum (Algs. 2/5 share one formula)
+    b: float                       # VR momentum
     p_a: float = 1.0
     sampler: str = "independent"   # independent | s_nice | full
     compression_ratio: Optional[float] = 0.01   # K/D; None => identity
     block_size: int = 128          # BlockRandK block (TPU lane width)
     aggregation: str = "sparse_allgather"       # or dense_psum
     data_axes: Tuple[str, ...] = ("data",)
+    # Which k_i rule (Algs. 2-5) the node update runs; see
+    # core/variants.py.  "mvr" (same-sample pair) and "gradient" (full
+    # pair) share one leaf formula — they differ in what gradients the
+    # caller feeds and in accounting; "page" additionally needs the
+    # minibatch pair (node_update(..., mini_new=, mini_old=)) and
+    # "finite_mvr" component gradients + indices and h_ij state.
+    variant: str = "mvr"
+    p_page: float = 1.0            # page only: full-pass probability
     # Dispatch the fused Pallas update path (kernels/, DESIGN.md §6) in
     # every aggregation mode.  sparse_allgather additionally fuses
     # BlockRandK into the update: the line-11 payload is evaluated only
@@ -86,6 +109,9 @@ class ShardedDashaConfig:
     use_pallas: bool = False
     # Force interpret mode on/off; None = auto (interpret unless TPU).
     pallas_interpret: Optional[bool] = None
+
+    def __post_init__(self):
+        variants.get_rule(self.variant)   # raises on unknown names
 
     @property
     def compressed(self) -> bool:
@@ -98,6 +124,16 @@ class ShardedDashaState(NamedTuple):
     g_i: PyTree    # per-node estimators, leading node dim over data axes
     h_i: PyTree    # per-node gradient trackers, same layout
     step: Array
+    # finite_mvr only: per-node per-component trackers, leaves
+    # (n, m, *param_shape) sharded like g_i with an extra (m,) dim.
+    h_ij: Optional[PyTree] = None
+
+
+class NodeUpdateMetrics(NamedTuple):
+    """Per-round wire accounting, measured inside the update (the
+    reference engine's StepMetrics counterpart)."""
+    participants: Array   # |S^t|, the realized participant count
+    bits_sent: Array      # total uplink bits this round (all nodes)
 
 
 def _num_nodes(mesh: Mesh, data_axes: Sequence[str]) -> int:
@@ -121,6 +157,13 @@ def node_spec(param_spec: P, data_axes: Sequence[str]) -> P:
     return P(lead, *(strip(e) for e in param_spec))
 
 
+def component_spec(param_spec: P, data_axes: Sequence[str]) -> P:
+    """Spec for a per-node, per-component array (n, B|m, *param_shape):
+    like :func:`node_spec` with an unsharded component dim inserted."""
+    ns = node_spec(param_spec, data_axes)
+    return P(ns[0], None, *tuple(ns)[1:])
+
+
 def estimator_spec(param_spec: P, data_axes: Sequence[str]) -> P:
     """Spec for the server estimator g: like params but never sharded over
     the node axes (every node must see the full (model-sharded) g)."""
@@ -137,57 +180,6 @@ def estimator_spec(param_spec: P, data_axes: Sequence[str]) -> P:
 
 
 # ----------------------------------------------------------------------
-# BlockRandK helpers (operate on a flat local vector inside shard_map)
-# ----------------------------------------------------------------------
-
-def _pad_to(x: Array, mult: int) -> Array:
-    pad = (-x.shape[0]) % mult
-    return jnp.pad(x, (0, pad)) if pad else x
-
-
-def block_randk_indices(key: Array, nb: int, k_blocks: int) -> Array:
-    """The BlockRandK draw: ``k_blocks`` of ``nb`` blocks u.a.r. without
-    replacement.  Single source of truth — the fused Pallas paths must
-    consume randomness identically to the jnp path for trajectory
-    parity."""
-    return jax.random.permutation(key, nb)[:k_blocks]
-
-
-def block_randk_select(key: Array, flat: Array, k_blocks: int,
-                       block_size: int) -> Tuple[Array, Array]:
-    """Choose ``k_blocks`` of the ``nb`` blocks u.a.r. without replacement.
-    Returns (values (k_blocks, block_size) scaled by nb/k_blocks,
-    block_idx (k_blocks,))."""
-    padded = _pad_to(flat, block_size)
-    nb = padded.shape[0] // block_size
-    blocks = padded.reshape(nb, block_size)
-    idx = block_randk_indices(key, nb, k_blocks)
-    scale = nb / k_blocks
-    return blocks[idx] * scale, idx
-
-
-def block_scatter_add(base_flat: Array, vals: Array, block_idx: Array,
-                      block_size: int) -> Array:
-    """base += scatter(vals at block_idx); shapes per block_randk_select.
-    ``vals``/``block_idx`` may carry a leading nodes dim."""
-    padded = _pad_to(base_flat, block_size)
-    nb = padded.shape[0] // block_size
-    blocks = padded.reshape(nb, block_size)
-    vals2 = vals.reshape(-1, block_size)
-    idx2 = block_idx.reshape(-1)
-    blocks = blocks.at[idx2].add(vals2)
-    return blocks.reshape(-1)[: base_flat.shape[0]]
-
-
-def block_randk_dense(key: Array, flat: Array, k_blocks: int,
-                      block_size: int) -> Array:
-    """Dense output of BlockRandK (used by the dense_psum + compressed
-    combination and by tests as the oracle wire-format-free form)."""
-    vals, idx = block_randk_select(key, flat, k_blocks, block_size)
-    return block_scatter_add(jnp.zeros_like(flat), vals, idx, block_size)
-
-
-# ----------------------------------------------------------------------
 # The sharded DASHA-PP engine
 # ----------------------------------------------------------------------
 
@@ -197,7 +189,17 @@ class ShardedDasha:
         engine = ShardedDasha(mesh, param_specs, cfg)
         state  = engine.init(grads_like)       # under jit, sharded
         params_new = engine.server_step(params, state)   # x - gamma g
-        state = engine.node_update(gn, go, state, key)   # lines 7-19
+        state, wire = engine.node_update(gn, go, state, key)  # lines 7-19
+
+    Variant-specific extra inputs to :meth:`node_update`:
+
+    * ``page``: ``mini_new=/mini_old=`` — the same-sample minibatch
+      gradient pair (``gn/go`` are the full-pass pair; the shared coin
+      is derived in here from the round key).
+    * ``finite_mvr``: ``gn/go`` are component gradients
+      ``(n, B, *shape)`` and ``component_idx`` the ``(n, B)`` selected
+      indices; ``state.h_ij`` must be initialized (``init(...,
+      h_ij0=...)``).
     """
 
     def __init__(self, mesh: Mesh, param_specs: PyTree,
@@ -205,16 +207,24 @@ class ShardedDasha:
         self.mesh = mesh
         self.param_specs = param_specs
         self.cfg = cfg
+        self.rule = variants.get_rule(cfg.variant)
         self.n_nodes = _num_nodes(mesh, cfg.data_axes)
 
     # -- state ----------------------------------------------------------
-    def init(self, grads0: PyTree) -> ShardedDashaState:
+    def init(self, grads0: PyTree,
+             h_ij0: Optional[PyTree] = None) -> ShardedDashaState:
         """Paper line 2 / Theorem 2: g_i^0 = h_i^0 = ∇f_i(x^0); the server
-        holds g^0 = mean_i g_i^0.  ``grads0`` = per-node grads (n, *shape)."""
+        holds g^0 = mean_i g_i^0.  ``grads0`` = per-node grads (n, *shape).
+        ``finite_mvr`` additionally takes the component trackers
+        ``h_ij0`` with leaves (n, m, *shape)."""
+        if self.rule.component_trackers and h_ij0 is None:
+            raise ValueError(
+                f"variant {self.cfg.variant!r} needs component trackers: "
+                "pass h_ij0 with leaves (n, m, *param_shape)")
         g0 = jax.tree.map(lambda g: jnp.mean(g, axis=0), grads0)
         return ShardedDashaState(
             g=g0, g_i=grads0, h_i=grads0,
-            step=jnp.zeros((), jnp.int32))
+            step=jnp.zeros((), jnp.int32), h_ij=h_ij0)
 
     def init_zero(self, params: PyTree) -> ShardedDashaState:
         """Zero-initialized variant (g_i^0 = h_i^0 = 0) — admissible for
@@ -233,33 +243,76 @@ class ShardedDasha:
             lambda p, g: (p - self.cfg.gamma * g.astype(p.dtype)),
             params, state.g)
 
+    # -- wire size of one node's message -----------------------------------
+    def _leaf_model_shards(self, spec: P) -> int:
+        """Number of distinct shards one node's copy of a leaf is split
+        into over the non-data mesh axes (replicated leaves: 1)."""
+        axes = set()
+        for entry in spec:
+            if entry is None:
+                continue
+            for a in ((entry,) if isinstance(entry, str) else entry):
+                if a not in self.cfg.data_axes:
+                    axes.add(a)
+        return int(math.prod(self.mesh.shape[a] for a in axes))
+
+    def _per_node_message_bits(self, h_i: PyTree) -> float:
+        """Uplink bits one participating node pays per round: compression
+        is applied per local shard, so each leaf contributes
+        (#model shards) x message_bits(local size).  Computed statically
+        from the specs — counting inside the shard_map would tally
+        model-replicated leaves once per model shard."""
+        cfg, total = self.cfg, 0.0
+        spec_leaves = jax.tree.leaves(self.param_specs,
+                                      is_leaf=lambda x: isinstance(x, P))
+        for leaf, spec in zip(jax.tree.leaves(h_i), spec_leaves):
+            d_leaf = int(math.prod(leaf.shape[1:]))
+            shards = self._leaf_model_shards(spec)
+            total += shards * variants.message_bits(
+                max(1, d_leaf // shards), aggregation=cfg.aggregation,
+                compression_ratio=cfg.compression_ratio,
+                block_size=cfg.block_size)
+        return total
+
     # -- participation ----------------------------------------------------
     def _participates(self, key: Array, node_idx: Array) -> Array:
-        cfg = self.cfg
-        if cfg.sampler == "full" or cfg.p_a >= 1.0:
-            return jnp.ones((), bool)
-        if cfg.sampler == "independent":
-            return jax.random.bernoulli(jax.random.fold_in(key, node_idx),
-                                        cfg.p_a)
-        if cfg.sampler == "s_nice":
-            s = max(1, round(cfg.p_a * self.n_nodes))
-            perm = jax.random.permutation(key, self.n_nodes)
-            return perm[node_idx] < s
-        raise ValueError(f"unknown sampler {self.cfg.sampler!r}")
+        """Node-local view of the participation mask — delegates to the
+        shared draw in core/participation.py so the mask coincides with
+        the reference samplers for a matched key."""
+        return participation.participates(self.cfg.sampler, key, node_idx,
+                                          self.n_nodes, self.cfg.p_a)
 
     # -- node + aggregation ------------------------------------------------
     def node_update(self, grads_new: PyTree, grads_old: PyTree,
-                    state: ShardedDashaState, key: Array
-                    ) -> ShardedDashaState:
+                    state: ShardedDashaState, key: Array, *,
+                    mini_new: Optional[PyTree] = None,
+                    mini_old: Optional[PyTree] = None,
+                    component_idx: Optional[Array] = None,
+                    ) -> Tuple[ShardedDashaState, NodeUpdateMetrics]:
         """Lines 7-19 of Algorithm 1 as a shard_map over the data axes.
 
-        ``grads_new/old`` leaves: (n_nodes, *param_shape) — per-node
-        (stochastic) gradients at x^{t+1} and x^t with the same sample
-        (Alg. 5 / Alg. 2 share the k_i formula ``gn - go - b (h - go)``).
+        ``grads_new/old`` leaves: (n_nodes, *param_shape) per-node
+        gradients at x^{t+1} and x^t — full pair (``gradient``),
+        same-sample minibatch pair (``mvr``), full pair + ``mini_new/
+        mini_old`` minibatch pair (``page``), or component gradients
+        (n, B, *shape) + ``component_idx`` (``finite_mvr``).
+
+        Returns the new state and :class:`NodeUpdateMetrics`.
         """
-        cfg = self.cfg
+        cfg, rule = self.cfg, self.rule
+        if rule.needs_minibatch and (mini_new is None or mini_old is None):
+            raise ValueError(f"variant {cfg.variant!r} needs the "
+                             "mini_new=/mini_old= minibatch gradient pair")
+        if rule.component_trackers:
+            if component_idx is None:
+                raise ValueError(f"variant {cfg.variant!r} needs "
+                                 "component_idx (n, B)")
+            if state.h_ij is None:
+                raise ValueError("state.h_ij is None — initialize with "
+                                 "init(grads0, h_ij0=...)")
         data_axes = cfg.data_axes
         lead = data_axes[0] if len(data_axes) == 1 else tuple(data_axes)
+        pa = cfg.p_a
 
         node_specs = jax.tree.map(lambda s: node_spec(s, data_axes),
                                   self.param_specs,
@@ -267,96 +320,147 @@ class ShardedDasha:
         est_specs = jax.tree.map(lambda s: estimator_spec(s, data_axes),
                                  self.param_specs,
                                  is_leaf=lambda x: isinstance(x, P))
-        in_specs = (node_specs, node_specs, node_specs, node_specs,
-                    est_specs, P(), P())
-        out_specs = (node_specs, node_specs, est_specs)
+        comp_specs = jax.tree.map(lambda s: component_spec(s, data_axes),
+                                  self.param_specs,
+                                  is_leaf=lambda x: isinstance(x, P))
 
-        def update(gn, go, h_i, g_i, g, key, step):
+        grad_specs = comp_specs if rule.component_trackers else node_specs
+        operands = [grads_new, grads_old, state.h_i, state.g_i, state.g,
+                    key, state.step]
+        in_specs = [grad_specs, grad_specs, node_specs, node_specs,
+                    est_specs, P(), P()]
+        if rule.needs_minibatch:
+            operands += [mini_new, mini_old]
+            in_specs += [node_specs, node_specs]
+        if rule.component_trackers:
+            operands += [component_idx, state.h_ij]
+            in_specs += [P(lead, None), comp_specs]
+
+        out_specs = [node_specs, node_specs, est_specs]
+        if rule.component_trackers:
+            out_specs += [comp_specs]
+        out_specs += [P()]               # participants
+
+        def update(gn, go, h_i, g_i, g, key, step, *extra):
             # Inside shard_map: leaves of gn/go/h_i/g_i are (1, *local);
             # g leaves are (*local) replicated over data axes.
             node_idx = jax.lax.axis_index(data_axes) if len(data_axes) > 1 \
                 else jax.lax.axis_index(data_axes[0])
-            step_key = jax.random.fold_in(key, step)
-            part = self._participates(step_key, node_idx)
+            # Shared per-round key derivation (DESIGN.md §8): identical
+            # to the reference engine's, so masks/coins/compressor draws
+            # coincide for matched keys.
+            k_part, k_oracle, k_comp = variants.round_keys(key, step)
+            part = self._participates(k_part, node_idx)
             partf = part.astype(jnp.float32)
-            pa = cfg.p_a
+            coin = None
+            if rule.needs_coin:
+                coin = variants.page_coin(
+                    variants.page_keys(k_oracle)[0],
+                    cfg.p_page).astype(jnp.float32)
+            b_new = b_old = idx = h_ij = None
+            pos = 0
+            if rule.needs_minibatch:
+                b_new, b_old = extra[0], extra[1]
+                pos = 2
+            if rule.component_trackers:
+                idx, h_ij = extra[pos], extra[pos + 1]
 
-            leaves_gn, treedef = jax.tree.flatten(gn)
+            leaves_gn, _ = jax.tree.flatten(gn)
+            _, treedef = jax.tree.flatten(h_i)
             leaves_go = jax.tree.leaves(go)
             leaves_h = jax.tree.leaves(h_i)
             leaves_gi = jax.tree.leaves(g_i)
             leaves_g = jax.tree.leaves(g)
+            leaves_bn = jax.tree.leaves(b_new) if b_new is not None else None
+            leaves_bo = jax.tree.leaves(b_old) if b_old is not None else None
+            leaves_hij = jax.tree.leaves(h_ij) if h_ij is not None else None
 
-            new_h, new_gi, new_g = [], [], []
+            interp = cfg.pallas_interpret
+            hp = dict(b=cfg.b, a=cfg.a, pa=pa, p_page=cfg.p_page)
+            new_h, new_gi, new_g, new_hij = [], [], [], []
             for li, (tn, to, th, tgi, tg) in enumerate(zip(
                     leaves_gn, leaves_go, leaves_h, leaves_gi, leaves_g)):
-                fn = tn[0].reshape(-1).astype(jnp.float32)
-                fo = to[0].reshape(-1).astype(jnp.float32)
                 fh = th[0].reshape(-1).astype(jnp.float32)
                 fgi = tgi[0].reshape(-1).astype(jnp.float32)
                 fg = tg.reshape(-1).astype(jnp.float32)
+                d_loc = fh.shape[0]
 
-                lkey = jax.random.fold_in(
-                    jax.random.fold_in(step_key, 7919 + li), node_idx)
-                interp = cfg.pallas_interpret
+                # ---- line 9 inputs: the rule's oracle leaf view ------
+                if rule.component_trackers:
+                    # tn/to: (1, B, *loc); h_ij leaf: (1, m, *loc).
+                    m_comp = leaves_hij[li].shape[1]
+                    B = tn.shape[1]
+                    fij = leaves_hij[li][0].reshape(
+                        m_comp, -1).astype(jnp.float32)
+                    fn2 = tn[0].reshape(B, -1).astype(jnp.float32)
+                    fo2 = to[0].reshape(B, -1).astype(jnp.float32)
+                    iloc = idx[0]                        # (B,)
+                    k_ij = variants.k_finite_mvr_components(
+                        fn2, fo2, fij[iloc], iloc, m_comp, b=cfg.b)
+                    fij_new = fij + partf * (k_ij / pa)
+                    ox = variants.OracleBatch(k=jnp.mean(k_ij, axis=0))
+                elif rule.needs_minibatch:
+                    ox = variants.OracleBatch(
+                        gn=tn[0].reshape(-1).astype(jnp.float32),
+                        go=to[0].reshape(-1).astype(jnp.float32),
+                        bn=leaves_bn[li][0].reshape(-1).astype(jnp.float32),
+                        bo=leaves_bo[li][0].reshape(-1).astype(jnp.float32),
+                        coin=coin)
+                else:
+                    ox = variants.OracleBatch(
+                        gn=tn[0].reshape(-1).astype(jnp.float32),
+                        go=to[0].reshape(-1).astype(jnp.float32))
 
-                def dense_update():
-                    """Lines 9-11 over the full local vector: fused
-                    kernel or the five-pass jnp chain."""
-                    if cfg.use_pallas:
-                        from repro.kernels.ops import dasha_update_op
-                        _, hn, pay = dasha_update_op(
-                            fn, fo, fh, fgi, b=cfg.b, a=cfg.a, pa=pa,
-                            participates=partf, interpret=interp)
-                        return hn, pay
-                    # Alg.2/5: k = gn - go - b (h - go)
-                    k_vec = fn - fo - cfg.b * (fh - fo)
-                    # line 10: h += k/pa if participating
-                    hn = fh + partf * (k_vec / pa)
-                    # line 11 payload: k/pa - (a/pa)(g_i - h_old)
-                    pay = k_vec / pa - (cfg.a / pa) * (fgi - fh)
-                    return hn, pay
+                lkey = variants.leaf_node_key(k_comp, li, node_idx)
 
+                def jnp_update(ox=ox, fh=fh, fgi=fgi):
+                    """Lines 9-11 over the full local vector (jnp)."""
+                    k = rule.k(ox, fh, b=cfg.b, p_page=cfg.p_page)
+                    return variants.control_variate_tail(
+                        k, fh, fgi, a=cfg.a, pa=pa, part=partf)
+
+                # ---- lines 10-11 + compress + aggregate --------------
                 if cfg.compression_ratio is None:
-                    fh_new, payload = dense_update()
+                    if cfg.use_pallas:
+                        fh_new, payload = rule.fused_flat(
+                            ox, fh, fgi, partf, interpret=interp, **hp)
+                    else:
+                        fh_new, payload = jnp_update()
                     m_i = partf * payload
                     total = jax.lax.psum(m_i, data_axes)
                     delta = total / self.n_nodes
                     fgi_new = fgi + m_i
                 elif cfg.aggregation == "dense_psum":
-                    bs = min(cfg.block_size, fn.shape[0])
-                    nb = -(-fn.shape[0] // bs)
-                    kb = max(1, math.ceil(cfg.compression_ratio * nb))
-                    # Fused update (dense_update); the compress step is
-                    # already dense here, so BlockRandK has no traffic
-                    # to save and stays jnp in both paths.
-                    fh_new, payload = dense_update()
+                    bs, nb, kb = block_plan(d_loc, cfg.block_size,
+                                            cfg.compression_ratio)
+                    # The compress step is already dense here, so
+                    # BlockRandK has no traffic to save and stays jnp
+                    # in both paths.
+                    if cfg.use_pallas:
+                        fh_new, payload = rule.fused_flat(
+                            ox, fh, fgi, partf, interpret=interp, **hp)
+                    else:
+                        fh_new, payload = jnp_update()
                     m_i = partf * block_randk_dense(lkey, payload, kb, bs)
                     total = jax.lax.psum(m_i, data_axes)
                     delta = total / self.n_nodes
                     fgi_new = fgi + m_i
                 else:  # sparse_allgather — the communication saving
-                    bs = min(cfg.block_size, fn.shape[0])
-                    nb = -(-fn.shape[0] // bs)
-                    kb = max(1, math.ceil(cfg.compression_ratio * nb))
+                    bs, nb, kb = block_plan(d_loc, cfg.block_size,
+                                            cfg.compression_ratio)
                     if cfg.use_pallas:
                         # Fused update+compress (DESIGN.md §6): the h
                         # tracker gets its own dense pass (k stays
                         # in-register) and the line-11 payload is
                         # evaluated ONLY at the kb selected blocks —
-                        # the dense payload never exists in HBM.
-                        from repro.kernels.ops import (
-                            dasha_h_update_op, dasha_payload_blocks_op)
+                        # the dense payload never exists in HBM
+                        # (finite_mvr: tail+gather, its k is dense).
                         bidx = block_randk_indices(lkey, nb, kb)
-                        fh_new = dasha_h_update_op(
-                            fn, fo, fh, b=cfg.b, pa=pa,
-                            participates=partf, interpret=interp)
-                        vals = dasha_payload_blocks_op(
-                            fn, fo, fh, fgi, bidx, b=cfg.b, a=cfg.a,
-                            pa=pa, scale=nb / kb, block_size=bs,
-                            interpret=interp)
+                        fh_new, vals = rule.fused_flat_blocks(
+                            ox, fh, fgi, partf, bidx, scale=nb / kb,
+                            block_size=bs, interpret=interp, **hp)
                     else:
-                        fh_new, payload = dense_update()
+                        fh_new, payload = jnp_update()
                         vals, bidx = block_randk_select(lkey, payload,
                                                         kb, bs)
                     vals = partf * vals
@@ -375,25 +479,43 @@ class ShardedDasha:
                 new_h.append(fh_new.astype(th.dtype).reshape(th.shape))
                 new_gi.append(fgi_new.astype(tgi.dtype).reshape(tgi.shape))
                 new_g.append(fg_new.astype(tg.dtype).reshape(tg.shape))
+                if rule.component_trackers:
+                    hl = leaves_hij[li]
+                    new_hij.append(
+                        fij_new.astype(hl.dtype).reshape(hl.shape))
 
-            return (jax.tree.unflatten(treedef, new_h),
+            participants = jax.lax.psum(partf, data_axes)
+            outs = [jax.tree.unflatten(treedef, new_h),
                     jax.tree.unflatten(treedef, new_gi),
-                    jax.tree.unflatten(treedef, new_g))
+                    jax.tree.unflatten(treedef, new_g)]
+            if rule.component_trackers:
+                outs.append(jax.tree.unflatten(treedef, new_hij))
+            return tuple(outs) + (participants,)
 
-        h_new, gi_new, g_new = compat.shard_map(
-            update, mesh=self.mesh, in_specs=in_specs, out_specs=out_specs,
-        )(grads_new, grads_old, state.h_i, state.g_i, state.g, key,
-          state.step)
+        results = compat.shard_map(
+            update, mesh=self.mesh, in_specs=tuple(in_specs),
+            out_specs=tuple(out_specs),
+        )(*operands)
 
-        return ShardedDashaState(g=g_new, g_i=gi_new, h_i=h_new,
-                                 step=state.step + 1)
+        if rule.component_trackers:
+            h_new, gi_new, g_new, h_ij_new, parts = results
+        else:
+            h_new, gi_new, g_new, parts = results
+            h_ij_new = None
+        new_state = ShardedDashaState(g=g_new, g_i=gi_new, h_i=h_new,
+                                      step=state.step + 1, h_ij=h_ij_new)
+        bits = parts * self._per_node_message_bits(state.h_i)
+        return new_state, NodeUpdateMetrics(participants=parts,
+                                            bits_sent=bits)
 
     # -- wire accounting ---------------------------------------------------
     def uplink_bits_per_round(self, d_total: int) -> float:
-        """Expected uplink bits per node per round (Tables 1-2 metric)."""
+        """Expected uplink bits per node per round (Tables 1-2 metric),
+        aggregation-aware: only ``sparse_allgather`` has a sparse wire;
+        ``dense_psum`` moves dense messages regardless of the
+        compression ratio (core/variants.py accounting)."""
         cfg = self.cfg
-        if cfg.compression_ratio is None:
-            return cfg.p_a * d_total * 32.0
-        nb = -(-d_total // cfg.block_size)
-        kb = max(1, math.ceil(cfg.compression_ratio * nb))
-        return cfg.p_a * kb * (cfg.block_size * 32.0 + 32.0)
+        return variants.uplink_bits_per_node(
+            d_total, aggregation=cfg.aggregation,
+            compression_ratio=cfg.compression_ratio,
+            block_size=cfg.block_size, p_a=cfg.p_a)

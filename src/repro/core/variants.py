@@ -1,0 +1,550 @@
+"""Variant-rule layer: ONE source of truth for the ``k_i`` rules of
+Algorithms 2-5 and everything a ``k_i`` rule owns.
+
+Both engines (the ``vmap`` reference :mod:`repro.core.dasha_pp` and the
+``shard_map`` production :mod:`repro.core.sharded`) consume the rules
+from this registry instead of carrying private copies (DESIGN.md §8).
+A :class:`VariantRule` owns:
+
+(a) the ``k_i`` formula as a pure leaf-level function — shape
+    polymorphic, so the reference engine applies it node-major ``(n, d)``
+    and the sharded engine applies it to a flat local leaf ``(D,)``;
+(b) which gradient oracles the step needs (full pair, same-sample
+    minibatch pair, periodic full pass + shared coin, component
+    scatter) — both as metadata and as ``reference_oracle`` which
+    evaluates them against a :class:`~repro.core.problems.
+    DistributedProblem` with the canonical randomness consumption;
+(c) oracle-call and uplink-bit accounting;
+(d) the matching fused-kernel dispatch (``dasha_update`` vs
+    ``dasha_page_update`` vs tail-only; dense and blocks-only wire
+    forms).
+
+The MARINA / FRECON baselines are recast in the same interface
+(:class:`BaselineRule`): they are not Algorithm-1 ``k_i`` rules, but
+their oracle needs and accounting live here so every method the repo
+compares shares one metadata/accounting source.
+
+Randomness contract (what makes reference <-> sharded trajectory parity
+possible, asserted in tests/test_sharded.py): every step splits its
+round key as ``round_keys`` below — ``(k_part, k_oracle, k_comp)`` —
+the participation mask comes from ``k_part`` via
+:mod:`repro.core.participation`, the PAGE coin/batch keys from
+``page_keys(k_oracle)``, and node ``i``'s compressor key for pytree
+leaf ``li`` from ``leaf_node_key(k_comp, li, i)`` (the reference
+engine's flat vector is leaf 0).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.problems import sample_batch_indices
+
+Array = jax.Array
+
+
+# ----------------------------------------------------------------------
+# Randomness derivation (shared by both engines)
+# ----------------------------------------------------------------------
+
+def round_keys(key: Array, step: Optional[Array] = None
+               ) -> Tuple[Array, Array, Array]:
+    """The per-round key split: ``(k_part, k_oracle, k_comp)``.  The
+    sharded engine passes ``step`` (its key is per-run); the reference
+    engine folds the round index in before calling :meth:`DashaPP.step`
+    and passes ``step=None``."""
+    if step is not None:
+        key = jax.random.fold_in(key, step)
+    keys = jax.random.split(key, 3)
+    return keys[0], keys[1], keys[2]
+
+
+def page_keys(k_oracle: Array) -> Tuple[Array, Array]:
+    """PAGE's oracle-key split: ``(k_coin, k_batch)``."""
+    keys = jax.random.split(k_oracle)
+    return keys[0], keys[1]
+
+
+def page_coin(k_coin: Array, p_page: float) -> Array:
+    """The shared Bernoulli switch of Alg. 3 (one coin for all nodes)."""
+    return jax.random.bernoulli(k_coin, p_page)
+
+
+def leaf_node_key(k_comp: Array, leaf_idx: int, node_idx) -> Array:
+    """Node ``node_idx``'s compressor key for pytree leaf ``leaf_idx``
+    (Assumption 7: independent across nodes).  The reference engine's
+    flat parameter vector is leaf 0."""
+    return jax.random.fold_in(jax.random.fold_in(k_comp, leaf_idx),
+                              node_idx)
+
+
+# ----------------------------------------------------------------------
+# Pure k_i formulas (Alg. 1 line 9, one per sub-algorithm)
+# ----------------------------------------------------------------------
+
+def k_same_sample(gn: Array, go: Array, h: Array, *, b: float) -> Array:
+    """Algs. 2/5 share one formula: ``k = gn - go - b (h - go)`` with
+    ``gn/go`` the full (Alg. 2) vs same-sample minibatch (Alg. 5)
+    gradients at ``x^{t+1}`` / ``x^t``.  Shape-polymorphic."""
+    return gn - go - b * (h - go)
+
+
+def k_page(gn: Array, go: Array, bn: Array, bo: Array, h: Array,
+           coin: Array, *, b: float, p_page: float) -> Array:
+    """Alg. 3: with probability ``p_page`` (shared ``coin``) the
+    full-gradient branch ``gn - go - (b/p_page)(h - go)``, else the
+    minibatch branch ``bn - bo``."""
+    k_full = gn - go - (b / p_page) * (h - go)
+    k_mini = bn - bo
+    return jnp.where(jnp.asarray(coin).astype(bool), k_full, k_mini)
+
+
+def k_finite_mvr_components(gn_sel: Array, go_sel: Array, h_sel: Array,
+                            idx: Array, m: int, *, b: float) -> Array:
+    """Alg. 4, single node: component gradients at the ``B`` selected
+    indices -> the ``(m, d)`` component update ``k_ij`` (zero at
+    unselected components).  The reference engine vmaps this over
+    nodes; the sharded engine applies it per local leaf."""
+    B = gn_sel.shape[0]
+    k_sel = (m / B) * (gn_sel - go_sel - b * (h_sel - go_sel))
+    zeros = jnp.zeros((m,) + gn_sel.shape[1:], gn_sel.dtype)
+    return zeros.at[idx].set(k_sel)
+
+
+def control_variate_tail(k: Array, h: Array, g_i: Array, *, a: float,
+                         pa: float, part) -> Array:
+    """Alg. 1 lines 10-11 given ``k``: the tracker step and the uplink
+    payload.  ``part`` is the participation indicator, broadcastable to
+    ``k`` (scalar for a flat leaf, ``(n, 1)`` node-major)."""
+    h_new = h + part * (k / pa)
+    payload = k / pa - (a / pa) * (g_i - h)
+    return h_new, payload
+
+
+# ----------------------------------------------------------------------
+# BlockRandK wire helpers (TPU adaptation of RandK, DESIGN.md §3)
+# ----------------------------------------------------------------------
+
+def _pad_to(x: Array, mult: int) -> Array:
+    pad = (-x.shape[0]) % mult
+    return jnp.pad(x, (0, pad)) if pad else x
+
+
+def block_plan(d: int, block_size: int, ratio: float
+               ) -> Tuple[int, int, int]:
+    """The (effective block size, #blocks, #selected blocks) of a
+    ``d``-vector under compression ``ratio`` — the single place this
+    arithmetic lives so engines, compressors, and accounting agree."""
+    bs = min(block_size, d)
+    nb = -(-d // bs)
+    kb = max(1, math.ceil(ratio * nb))
+    return bs, nb, kb
+
+
+def block_randk_indices(key: Array, nb: int, k_blocks: int) -> Array:
+    """The BlockRandK draw: ``k_blocks`` of ``nb`` blocks u.a.r. without
+    replacement.  Single source of truth — the fused Pallas paths must
+    consume randomness identically to the jnp path for trajectory
+    parity."""
+    return jax.random.permutation(key, nb)[:k_blocks]
+
+
+def block_randk_select(key: Array, flat: Array, k_blocks: int,
+                       block_size: int) -> Tuple[Array, Array]:
+    """Choose ``k_blocks`` of the ``nb`` blocks u.a.r. without replacement.
+    Returns (values (k_blocks, block_size) scaled by nb/k_blocks,
+    block_idx (k_blocks,))."""
+    padded = _pad_to(flat, block_size)
+    nb = padded.shape[0] // block_size
+    blocks = padded.reshape(nb, block_size)
+    idx = block_randk_indices(key, nb, k_blocks)
+    scale = nb / k_blocks
+    return blocks[idx] * scale, idx
+
+
+def block_scatter_add(base_flat: Array, vals: Array, block_idx: Array,
+                      block_size: int) -> Array:
+    """base += scatter(vals at block_idx); shapes per block_randk_select.
+    ``vals``/``block_idx`` may carry a leading nodes dim."""
+    padded = _pad_to(base_flat, block_size)
+    nb = padded.shape[0] // block_size
+    blocks = padded.reshape(nb, block_size)
+    vals2 = vals.reshape(-1, block_size)
+    idx2 = block_idx.reshape(-1)
+    blocks = blocks.at[idx2].add(vals2)
+    return blocks.reshape(-1)[: base_flat.shape[0]]
+
+
+def block_randk_dense(key: Array, flat: Array, k_blocks: int,
+                      block_size: int) -> Array:
+    """Dense output of BlockRandK (used by the dense_psum + compressed
+    combination, the :class:`~repro.core.compressors.BlockRandK`
+    reference compressor, and tests)."""
+    vals, idx = block_randk_select(key, flat, k_blocks, block_size)
+    return block_scatter_add(jnp.zeros_like(flat), vals, idx, block_size)
+
+
+# ----------------------------------------------------------------------
+# Uplink accounting (aggregation-aware)
+# ----------------------------------------------------------------------
+
+FLOAT_BITS = 32.0
+INDEX_BITS = 32.0
+
+
+def message_bits(d: int, *, aggregation: str,
+                 compression_ratio: Optional[float],
+                 block_size: int) -> float:
+    """Uplink bits one participating node pays to send one ``d``-leaf
+    message.  Only ``sparse_allgather`` has a sparse wire format:
+    ``dense_psum`` all-reduces *dense* vectors (the BlockRandK zeros
+    still cross the wire) and ``compression_ratio=None`` is the
+    uncompressed baseline."""
+    if compression_ratio is None or aggregation != "sparse_allgather":
+        return d * FLOAT_BITS
+    bs, _, kb = block_plan(d, block_size, compression_ratio)
+    return kb * (bs * FLOAT_BITS + INDEX_BITS)
+
+
+def uplink_bits_per_node(d_total: int, *, aggregation: str,
+                         compression_ratio: Optional[float],
+                         block_size: int, p_a: float = 1.0) -> float:
+    """Expected uplink bits per node per round (Tables 1-2 metric):
+    a node participates with probability ``p_a`` and then pays
+    :func:`message_bits`."""
+    return p_a * message_bits(d_total, aggregation=aggregation,
+                              compression_ratio=compression_ratio,
+                              block_size=block_size)
+
+
+# ----------------------------------------------------------------------
+# Oracle inputs (what a k_i rule consumes, per leaf or node-major)
+# ----------------------------------------------------------------------
+
+class OracleBatch(NamedTuple):
+    """Evaluated gradient-oracle inputs for one step.  Which fields are
+    set depends on the rule: gradient/mvr use ``(gn, go)`` (full vs
+    same-sample minibatch pair), page adds ``(bn, bo, coin)``,
+    finite_mvr carries the pre-scattered ``k`` (its dense elementwise
+    shape is the scatter output, not an oracle pair)."""
+    gn: Any = None
+    go: Any = None
+    bn: Any = None
+    bo: Any = None
+    coin: Any = None
+    k: Any = None
+
+
+# ----------------------------------------------------------------------
+# The rules
+# ----------------------------------------------------------------------
+
+class VariantRule:
+    """One Algorithm-2..5 sub-algorithm: metadata + pure math + oracle
+    plan + fused-kernel dispatch.  Stateless; registered in
+    :data:`VARIANTS`."""
+
+    name: str = ""
+    algorithm: str = ""
+    oracle: str = ""                   # human-readable oracle needs
+    needs_coin: bool = False           # shared Bernoulli switch (page)
+    needs_minibatch: bool = False      # second (minibatch) gradient pair
+    component_trackers: bool = False   # (n, m, d) h_ij state (finite_mvr)
+    trainer_supported: bool = True     # runs in training/trainer.py
+
+    # -- (a) the k_i formula ------------------------------------------
+    def k(self, ox: OracleBatch, h: Array, *, b: float,
+          p_page: float = 1.0) -> Array:
+        raise NotImplementedError
+
+    # -- (c) oracle accounting ----------------------------------------
+    def oracle_calls(self, n: int, m: int, batch_size: Optional[int] = None,
+                     coin=None) -> Array:
+        raise NotImplementedError
+
+    # -- (b) the oracle plan against a DistributedProblem -------------
+    def reference_oracle(self, key, problem, cfg, x_new, x_old, state
+                         ) -> Tuple[OracleBatch, Optional[Array], Array]:
+        """Evaluate the oracles the rule needs, consuming randomness
+        canonically.  Returns ``(ox, k_ij or None, oracle_calls)``."""
+        raise NotImplementedError
+
+    # -- (d) fused-kernel dispatch ------------------------------------
+    def fused_batched(self, ox: OracleBatch, h, gi, mask, *, b, a, pa,
+                      p_page: float = 1.0, interpret=None):
+        """Node-major (n, d) fused update -> (k, h_new, payload)."""
+        raise NotImplementedError
+
+    def fused_flat(self, ox: OracleBatch, h, gi, part, *, b, a, pa,
+                   p_page: float = 1.0, interpret=None):
+        """Flat (D,) fused update -> (h_new, payload)."""
+        raise NotImplementedError
+
+    def fused_flat_blocks(self, ox: OracleBatch, h, gi, part, block_idx,
+                          *, b, a, pa, scale, block_size,
+                          p_page: float = 1.0, interpret=None):
+        """Flat sparse-wire split -> (h_new, wire values at the selected
+        blocks, pre-scaled)."""
+        raise NotImplementedError
+
+
+class GradientRule(VariantRule):
+    name = "gradient"
+    algorithm = "Alg. 2 (DASHA-PP)"
+    oracle = "full local gradients at x^{t+1} and x^t"
+
+    def k(self, ox, h, *, b, p_page=1.0):
+        return k_same_sample(ox.gn, ox.go, h, b=b)
+
+    def oracle_calls(self, n, m, batch_size=None, coin=None):
+        return jnp.asarray(2 * m * n)
+
+    def reference_oracle(self, key, problem, cfg, x_new, x_old, state):
+        del key, state
+        ox = OracleBatch(gn=problem.grad(x_new), go=problem.grad(x_old))
+        return ox, None, self.oracle_calls(problem.n, problem.m)
+
+    def fused_batched(self, ox, h, gi, mask, *, b, a, pa, p_page=1.0,
+                      interpret=None):
+        from repro.kernels import ops
+        return ops.dasha_update_batched_op(ox.gn, ox.go, h, gi, mask,
+                                           b=b, a=a, pa=pa,
+                                           interpret=interpret)
+
+    def fused_flat(self, ox, h, gi, part, *, b, a, pa, p_page=1.0,
+                   interpret=None):
+        from repro.kernels import ops
+        _, h_new, payload = ops.dasha_update_op(
+            ox.gn, ox.go, h, gi, b=b, a=a, pa=pa, participates=part,
+            interpret=interpret)
+        return h_new, payload
+
+    def fused_flat_blocks(self, ox, h, gi, part, block_idx, *, b, a, pa,
+                          scale, block_size, p_page=1.0, interpret=None):
+        from repro.kernels import ops
+        h_new = ops.dasha_h_update_op(ox.gn, ox.go, h, b=b, pa=pa,
+                                      participates=part,
+                                      interpret=interpret)
+        vals = ops.dasha_payload_blocks_op(
+            ox.gn, ox.go, h, gi, block_idx, b=b, a=a, pa=pa, scale=scale,
+            block_size=block_size, interpret=interpret)
+        return h_new, vals
+
+
+class MvrRule(GradientRule):
+    name = "mvr"
+    algorithm = "Alg. 5 (DASHA-PP-MVR)"
+    oracle = "same-sample minibatch gradient pair at x^{t+1} and x^t"
+
+    def oracle_calls(self, n, m, batch_size=None, coin=None):
+        return jnp.asarray(2 * batch_size * n)
+
+    def reference_oracle(self, key, problem, cfg, x_new, x_old, state):
+        del state
+        idx = sample_batch_indices(key, problem.n, problem.m,
+                                   cfg.batch_size, replace=True)
+        ox = OracleBatch(gn=problem.batch_grad(x_new, idx),
+                         go=problem.batch_grad(x_old, idx))
+        return ox, None, self.oracle_calls(problem.n, problem.m,
+                                           cfg.batch_size)
+
+
+class PageRule(VariantRule):
+    name = "page"
+    algorithm = "Alg. 3 (DASHA-PP-PAGE)"
+    oracle = ("periodic full pass (shared coin, prob. p_page) + "
+              "same-sample minibatch pair")
+    needs_coin = True
+    needs_minibatch = True
+
+    def k(self, ox, h, *, b, p_page):
+        return k_page(ox.gn, ox.go, ox.bn, ox.bo, h, ox.coin,
+                      b=b, p_page=p_page)
+
+    def oracle_calls(self, n, m, batch_size=None, coin=None):
+        return jnp.where(coin, 2 * m * n, 2 * batch_size * n)
+
+    def reference_oracle(self, key, problem, cfg, x_new, x_old, state):
+        del state
+        k_coin, k_batch = page_keys(key)
+        coin = page_coin(k_coin, cfg.p_page)
+        idx = sample_batch_indices(k_batch, problem.n, problem.m,
+                                   cfg.batch_size, replace=cfg.replace)
+        ox = OracleBatch(gn=problem.grad(x_new), go=problem.grad(x_old),
+                         bn=problem.batch_grad(x_new, idx),
+                         bo=problem.batch_grad(x_old, idx), coin=coin)
+        return ox, None, self.oracle_calls(problem.n, problem.m,
+                                           cfg.batch_size, coin)
+
+    def fused_batched(self, ox, h, gi, mask, *, b, a, pa, p_page=1.0,
+                      interpret=None):
+        from repro.kernels import ops
+        return ops.dasha_page_update_op(ox.gn, ox.go, ox.bn, ox.bo, h, gi,
+                                        mask, ox.coin, b=b, a=a, pa=pa,
+                                        p_page=p_page, interpret=interpret)
+
+    def fused_flat(self, ox, h, gi, part, *, b, a, pa, p_page=1.0,
+                   interpret=None):
+        from repro.kernels import ops
+        ins = [x[None] for x in (ox.gn, ox.go, ox.bn, ox.bo, h, gi)]
+        _, h_new, payload = ops.dasha_page_update_op(
+            *ins, jnp.reshape(part, (1,)), ox.coin, b=b, a=a, pa=pa,
+            p_page=p_page, interpret=interpret)
+        return h_new[0], payload[0]
+
+    def fused_flat_blocks(self, ox, h, gi, part, block_idx, *, b, a, pa,
+                          scale, block_size, p_page=1.0, interpret=None):
+        from repro.kernels import ops
+        h_new = ops.dasha_page_h_update_op(
+            ox.gn, ox.go, ox.bn, ox.bo, h, ox.coin, b=b, pa=pa,
+            p_page=p_page, participates=part, interpret=interpret)
+        vals = ops.dasha_page_payload_blocks_op(
+            ox.gn, ox.go, ox.bn, ox.bo, h, gi, block_idx, ox.coin,
+            b=b, a=a, pa=pa, p_page=p_page, scale=scale,
+            block_size=block_size, interpret=interpret)
+        return h_new, vals
+
+
+class FiniteMvrRule(VariantRule):
+    name = "finite_mvr"
+    algorithm = "Alg. 4 (DASHA-PP-FINITE-MVR)"
+    oracle = ("component gradient pair at a without-replacement "
+              "minibatch, scattered over (m,) trackers")
+    component_trackers = True
+    # Needs per-component trackers h_ij of shape (n, m, *param) — only
+    # meaningful for problem-scale runs, not the LM trainer.
+    trainer_supported = False
+
+    def k(self, ox, h, *, b, p_page=1.0):
+        return ox.k
+
+    def oracle_calls(self, n, m, batch_size=None, coin=None):
+        return jnp.asarray(2 * batch_size * n)
+
+    def reference_oracle(self, key, problem, cfg, x_new, x_old, state):
+        B, m = cfg.batch_size, problem.m
+        idx = sample_batch_indices(key, problem.n, m, B,
+                                   replace=False)   # Alg. 4: w/o repl.
+        gn = problem.component_grads(x_new, idx)     # (n, B, d)
+        go = problem.component_grads(x_old, idx)
+        h_sel = jnp.take_along_axis(state.h_ij, idx[..., None], axis=1)
+        k_ij = jax.vmap(
+            lambda a_, b_, c_, i_: k_finite_mvr_components(
+                a_, b_, c_, i_, m, b=cfg.b))(gn, go, h_sel, idx)
+        ox = OracleBatch(k=jnp.mean(k_ij, axis=1))
+        return ox, k_ij, self.oracle_calls(problem.n, m, B)
+
+    def fused_batched(self, ox, h, gi, mask, *, b, a, pa, p_page=1.0,
+                      interpret=None):
+        from repro.kernels import ops
+        h_new, payload = ops.dasha_tail_op(ox.k, h, gi, mask, a=a, pa=pa,
+                                           interpret=interpret)
+        return ox.k, h_new, payload
+
+    def fused_flat(self, ox, h, gi, part, *, b, a, pa, p_page=1.0,
+                   interpret=None):
+        from repro.kernels import ops
+        h_new, payload = ops.dasha_tail_op(
+            ox.k[None], h[None], gi[None], jnp.reshape(part, (1,)),
+            a=a, pa=pa, interpret=interpret)
+        return h_new[0], payload[0]
+
+    def fused_flat_blocks(self, ox, h, gi, part, block_idx, *, b, a, pa,
+                          scale, block_size, p_page=1.0, interpret=None):
+        # k_i comes from the component scatter and is already dense, so
+        # the payload has no never-materialize win: fuse the tail, then
+        # gather the selected blocks (kernel gather, DESIGN.md §8).
+        from repro.kernels import ops
+        h_new, payload = self.fused_flat(ox, h, gi, part, b=b, a=a, pa=pa,
+                                         interpret=interpret)
+        padded = _pad_to(payload, block_size)
+        blocks = padded.reshape(-1, block_size)
+        vals = ops.block_gather_op(blocks, block_idx, scale=scale,
+                                   interpret=interpret)
+        return h_new, vals
+
+
+# ----------------------------------------------------------------------
+# Baselines recast in the same interface (metadata + accounting only)
+# ----------------------------------------------------------------------
+
+class BaselineRule:
+    """MARINA / FRECON are not Algorithm-1 ``k_i`` rules, but they share
+    the registry so method comparisons draw oracle needs and accounting
+    from one place."""
+
+    name: str = ""
+    algorithm: str = ""
+    oracle: str = ""
+    variance_reduced: bool = False
+    supports_pp: bool = False
+
+    def oracle_calls(self, n, m, batch_size=None, coin=None):
+        raise NotImplementedError
+
+    def round_bits(self, n, d, n_part, wire_bits, sync=None):
+        raise NotImplementedError
+
+
+class MarinaRule(BaselineRule):
+    name = "marina"
+    algorithm = "MARINA (Gorbunov et al., 2021)"
+    oracle = ("local gradient pair; full uncompressed gradients from "
+              "ALL nodes on sync rounds (no PP there)")
+    variance_reduced = True       # compressor variance only
+    supports_pp = False           # sync rounds require full participation
+
+    def oracle_calls(self, n, m, batch_size=None, coin=None):
+        if batch_size is None:
+            return jnp.asarray(2 * m * n)
+        return jnp.where(coin, m * n + batch_size * n,
+                         2 * batch_size * n)
+
+    def round_bits(self, n, d, n_part, wire_bits, sync=None):
+        return jnp.where(sync, n * FLOAT_BITS * d, n_part * wire_bits)
+
+
+class FreconRule(BaselineRule):
+    name = "frecon"
+    algorithm = "FRECON (Zhao et al., 2021a)"
+    oracle = "one (mini-batch) gradient per sampled client per round"
+    variance_reduced = False      # no local stochastic-gradient VR
+    supports_pp = True
+
+    def oracle_calls(self, n, m, batch_size=None, coin=None):
+        return jnp.asarray((m if batch_size is None else batch_size) * n)
+
+    def round_bits(self, n, d, n_part, wire_bits, sync=None):
+        return n_part * wire_bits
+
+
+# ----------------------------------------------------------------------
+# Registry
+# ----------------------------------------------------------------------
+
+VARIANTS = {r.name: r for r in
+            (GradientRule(), PageRule(), FiniteMvrRule(), MvrRule())}
+BASELINES = {r.name: r for r in (MarinaRule(), FreconRule())}
+RULES = {**VARIANTS, **BASELINES}
+
+
+def get_rule(name: str) -> VariantRule:
+    """The Algorithm-2..5 rule registered under ``name``."""
+    try:
+        return VARIANTS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown variant {name!r}; choose from {sorted(VARIANTS)}"
+        ) from None
+
+
+def get_baseline(name: str) -> BaselineRule:
+    try:
+        return BASELINES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown baseline {name!r}; choose from {sorted(BASELINES)}"
+        ) from None

@@ -329,6 +329,53 @@ def dasha_h_update_pallas(gn: Array, go: Array, h: Array,
     return _unprep_flat(hn2, d)
 
 
+def _page_h_update_kernel(part_ref, coin_ref, gn_ref, go_ref, bn_ref,
+                          bo_ref, h_ref, h_new_ref, *, b: float, pa: float,
+                          p_page: float):
+    part = part_ref[0, 0]
+    coin = coin_ref[0, 0]
+    gn = gn_ref[...]
+    go = go_ref[...]
+    h = h_ref[...]
+    k_full = gn - go - (b / p_page) * (h - go)
+    k_mini = bn_ref[...] - bo_ref[...]
+    k = coin * k_full + (1.0 - coin) * k_mini
+    h_new_ref[...] = h + part * (k * (1.0 / pa))
+
+
+@functools.partial(jax.jit, static_argnames=("b", "pa", "p_page",
+                                             "block_rows", "interpret"))
+def dasha_page_h_update_pallas(gn: Array, go: Array, bn: Array, bo: Array,
+                               h: Array, participates: Array, coin: Array,
+                               *, b: float, pa: float, p_page: float,
+                               block_rows: int = DEFAULT_BLOCK_ROWS,
+                               interpret: bool = True) -> Array:
+    """Line 10 with the Alg. 3 PAGE ``k`` recomputed in-register, flat
+    (D,): both branches + the shared-coin select never touch HBM.
+    Pairs with :func:`dasha_page_payload_blocks_pallas` for the PAGE
+    sparse wire (DESIGN.md §8)."""
+    (d,) = gn.shape
+    rows_pad, pad = _pad_rows(d, block_rows)
+    gn2, go2, bn2, bo2, h2 = (_prep_flat(x, rows_pad, pad)
+                              for x in (gn, go, bn, bo, h))
+    part = jnp.reshape(participates.astype(jnp.float32), (1, 1))
+    coin2 = jnp.reshape(coin.astype(jnp.float32), (1, 1))
+    grid = (rows_pad // block_rows,)
+    tile = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
+    scalar = pl.BlockSpec((1, 1), lambda i: (0, 0))
+
+    hn2 = pl.pallas_call(
+        functools.partial(_page_h_update_kernel, b=b, pa=pa,
+                          p_page=p_page),
+        grid=grid,
+        in_specs=[scalar, scalar, tile, tile, tile, tile, tile],
+        out_specs=tile,
+        out_shape=jax.ShapeDtypeStruct((rows_pad, LANES), jnp.float32),
+        interpret=interpret,
+    )(part, coin2, gn2, go2, bn2, bo2, h2)
+    return _unprep_flat(hn2, d)
+
+
 def _payload_blocks_kernel(idx_ref, gn_ref, go_ref, h_ref, gi_ref, out_ref,
                            *, b: float, a: float, pa: float, scale: float):
     # The BlockSpec index_map (scalar prefetch) already routed block
@@ -379,3 +426,64 @@ def dasha_payload_blocks_pallas(gn: Array, go: Array, h: Array, gi: Array,
         out_shape=jax.ShapeDtypeStruct((kb, bs), jnp.float32),
         interpret=interpret,
     )(block_idx.astype(jnp.int32), gn2, go2, h2, gi2)
+
+
+def _page_payload_blocks_kernel(idx_ref, coin_ref, gn_ref, go_ref, bn_ref,
+                                bo_ref, h_ref, gi_ref, out_ref, *,
+                                b: float, a: float, pa: float,
+                                p_page: float, scale: float):
+    # Same scalar-prefetch gather as _payload_blocks_kernel, with the
+    # Alg. 3 k-rule (both branches + shared coin) in-register.
+    coin = coin_ref[0, 0]
+    gn = gn_ref[...]
+    go = go_ref[...]
+    h = h_ref[...]
+    k_full = gn - go - (b / p_page) * (h - go)
+    k_mini = bn_ref[...] - bo_ref[...]
+    k = coin * k_full + (1.0 - coin) * k_mini
+    inv_pa = 1.0 / pa
+    payload = k * inv_pa - (a * inv_pa) * (gi_ref[...] - h)
+    out_ref[...] = payload * scale
+
+
+@functools.partial(jax.jit, static_argnames=("b", "a", "pa", "p_page",
+                                             "scale", "block_size",
+                                             "interpret"))
+def dasha_page_payload_blocks_pallas(gn: Array, go: Array, bn: Array,
+                                     bo: Array, h: Array, gi: Array,
+                                     block_idx: Array, coin: Array, *,
+                                     b: float, a: float, pa: float,
+                                     p_page: float, scale: float,
+                                     block_size: int,
+                                     interpret: bool = True) -> Array:
+    """Fused PAGE update+compress for the BlockRandK wire: the Alg. 3
+    line-11 payload evaluated **only at the selected blocks** (the
+    dense payload never exists in HBM), pre-scaled for unbiasedness.
+    Inputs are flat (D,) float32 plus the shared (scalar) coin; returns
+    (k_blocks, block_size) wire values."""
+    (d,) = gn.shape
+    kb = int(block_idx.shape[0])
+    bs = block_size
+    nb = -(-d // bs)
+    pad = nb * bs - d
+
+    def prep(x):
+        return jnp.pad(x, (0, pad)).reshape(nb, bs)
+
+    gn2, go2, bn2, bo2, h2, gi2 = map(prep, (gn, go, bn, bo, h, gi))
+    coin2 = jnp.reshape(coin.astype(jnp.float32), (1, 1))
+    row = pl.BlockSpec((1, bs), lambda i, idx: (idx[i], 0))
+    scalar = pl.BlockSpec((1, 1), lambda i, idx: (0, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(kb,),
+        in_specs=[scalar, row, row, row, row, row, row],
+        out_specs=pl.BlockSpec((1, bs), lambda i, idx: (i, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_page_payload_blocks_kernel, b=b, a=a, pa=pa,
+                          p_page=p_page, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((kb, bs), jnp.float32),
+        interpret=interpret,
+    )(block_idx.astype(jnp.int32), coin2, gn2, go2, bn2, bo2, h2, gi2)

@@ -13,6 +13,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.dasha_update import (dasha_h_update_pallas,
+                                        dasha_page_h_update_pallas,
+                                        dasha_page_payload_blocks_pallas,
                                         dasha_page_update_batched_pallas,
                                         dasha_payload_blocks_pallas,
                                         dasha_tail_batched_pallas,
@@ -112,6 +114,36 @@ def dasha_payload_blocks_op(gn: Array, go: Array, h: Array, gi: Array,
         *_f32(gn, go, h, gi), block_idx.astype(jnp.int32),
         b=float(b), a=float(a), pa=float(pa), scale=float(scale),
         block_size=int(block_size), interpret=interp)
+
+
+def dasha_page_h_update_op(gn: Array, go: Array, bn: Array, bo: Array,
+                           h: Array, coin: Array, *, b: float, pa: float,
+                           p_page: float, participates: Array,
+                           interpret: bool | None = None) -> Array:
+    """Line-10 h-tracker pass with the Alg. 3 PAGE k-rule in-register
+    (flat (D,)); pairs with :func:`dasha_page_payload_blocks_op`."""
+    interp = _interpret_default() if interpret is None else interpret
+    return dasha_page_h_update_pallas(
+        *_f32(gn, go, bn, bo, h), jnp.asarray(participates, jnp.float32),
+        jnp.asarray(coin, jnp.float32),
+        b=float(b), pa=float(pa), p_page=float(p_page), interpret=interp)
+
+
+def dasha_page_payload_blocks_op(gn: Array, go: Array, bn: Array,
+                                 bo: Array, h: Array, gi: Array,
+                                 block_idx: Array, coin: Array, *,
+                                 b: float, a: float, pa: float,
+                                 p_page: float, scale: float,
+                                 block_size: int,
+                                 interpret: bool | None = None) -> Array:
+    """Fused PAGE update+BlockRandK compress: the Alg. 3 payload
+    evaluated only at the selected blocks (never dense in HBM)."""
+    interp = _interpret_default() if interpret is None else interpret
+    return dasha_page_payload_blocks_pallas(
+        *_f32(gn, go, bn, bo, h, gi), block_idx.astype(jnp.int32),
+        jnp.asarray(coin, jnp.float32),
+        b=float(b), a=float(a), pa=float(pa), p_page=float(p_page),
+        scale=float(scale), block_size=int(block_size), interpret=interp)
 
 
 def block_gather_op(x_blocks: Array, block_idx: Array, *, scale: float,

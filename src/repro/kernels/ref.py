@@ -1,10 +1,19 @@
-"""Pure-jnp oracles for the Pallas kernels (the allclose ground truth)."""
+"""Pure-jnp oracles for the Pallas kernels (the allclose ground truth).
+
+The formulas themselves live in :mod:`repro.core.variants` — the
+variant-rule layer is the single source of truth for the Algs. 2-5
+math (DESIGN.md §8); these wrappers only compose them into the exact
+input/output shapes each kernel exposes.
+"""
 from __future__ import annotations
 
 from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.variants import (control_variate_tail, k_page,
+                                 k_same_sample)
 
 Array = jax.Array
 
@@ -19,9 +28,9 @@ def dasha_update_ref(gn: Array, go: Array, h: Array, g_i: Array, *,
         h_new   = h + participates * k / pa
         payload = k / pa - (a / pa) (g_i - h)
     """
-    k = gn - go - b * (h - go)
-    h_new = h + participates * (k / pa)
-    payload = k / pa - (a / pa) * (g_i - h)
+    k = k_same_sample(gn, go, h, b=b)
+    h_new, payload = control_variate_tail(k, h, g_i, a=a, pa=pa,
+                                          part=participates)
     return k, h_new, payload
 
 
@@ -30,10 +39,9 @@ def dasha_update_batched_ref(gn: Array, go: Array, h: Array, g_i: Array,
                              ) -> Tuple[Array, Array, Array]:
     """Node-major (n, d) form of :func:`dasha_update_ref`; ``mask`` is the
     (n,) participation indicator."""
-    m = mask.astype(gn.dtype)[:, None]
-    k = gn - go - b * (h - go)
-    h_new = h + m * (k / pa)
-    payload = k / pa - (a / pa) * (g_i - h)
+    k = k_same_sample(gn, go, h, b=b)
+    h_new, payload = control_variate_tail(
+        k, h, g_i, a=a, pa=pa, part=mask.astype(gn.dtype)[:, None])
     return k, h_new, payload
 
 
@@ -43,22 +51,24 @@ def dasha_page_update_ref(gn: Array, go: Array, bn: Array, bo: Array,
                           ) -> Tuple[Array, Array, Array]:
     """Alg. 3 PAGE rule + lines 10-11: shared Bernoulli ``coin`` selects
     the full-gradient branch (prob. p_page) vs the minibatch branch."""
-    m = mask.astype(gn.dtype)[:, None]
-    k_full = gn - go - (b / p_page) * (h - go)
-    k_mini = bn - bo
-    k = jnp.where(coin.astype(bool), k_full, k_mini)
-    h_new = h + m * (k / pa)
-    payload = k / pa - (a / pa) * (g_i - h)
+    k = k_page(gn, go, bn, bo, h, coin, b=b, p_page=p_page)
+    h_new, payload = control_variate_tail(
+        k, h, g_i, a=a, pa=pa, part=mask.astype(gn.dtype)[:, None])
     return k, h_new, payload
 
 
 def dasha_tail_ref(k: Array, h: Array, g_i: Array, mask: Array, *,
                    a: float, pa: float) -> Tuple[Array, Array]:
     """Lines 10-11 given a precomputed ``k`` (n, d) (finite-MVR path)."""
-    m = mask.astype(k.dtype)[:, None]
-    h_new = h + m * (k / pa)
-    payload = k / pa - (a / pa) * (g_i - h)
-    return h_new, payload
+    return control_variate_tail(k, h, g_i, a=a, pa=pa,
+                                part=mask.astype(k.dtype)[:, None])
+
+
+def _blocks_of(payload: Array, block_size: int) -> Array:
+    d = payload.shape[0]
+    nb = -(-d // block_size)
+    padded = jnp.pad(payload, (0, nb * block_size - d))
+    return padded.reshape(nb, block_size)
 
 
 def dasha_payload_blocks_ref(gn: Array, go: Array, h: Array, g_i: Array,
@@ -69,10 +79,32 @@ def dasha_payload_blocks_ref(gn: Array, go: Array, h: Array, g_i: Array,
     dense payload -> pad to blocks -> gather selected rows -> scale."""
     _, _, payload = dasha_update_ref(gn, go, h, g_i, b=b, a=a, pa=pa,
                                      participates=jnp.asarray(1.0))
-    d = payload.shape[0]
-    nb = -(-d // block_size)
-    padded = jnp.pad(payload, (0, nb * block_size - d))
-    return padded.reshape(nb, block_size)[block_idx] * scale
+    return _blocks_of(payload, block_size)[block_idx] * scale
+
+
+def dasha_page_h_update_ref(gn: Array, go: Array, bn: Array, bo: Array,
+                            h: Array, participates: Array, coin: Array,
+                            *, b: float, pa: float, p_page: float
+                            ) -> Array:
+    """Line 10 with the PAGE k-rule (flat (D,))."""
+    k = k_page(gn, go, bn, bo, h, coin, b=b, p_page=p_page)
+    h_new, _ = control_variate_tail(k, h, jnp.zeros_like(h), a=0.0,
+                                    pa=pa, part=participates)
+    return h_new
+
+
+def dasha_page_payload_blocks_ref(gn: Array, go: Array, bn: Array,
+                                  bo: Array, h: Array, g_i: Array,
+                                  block_idx: Array, coin: Array, *,
+                                  b: float, a: float, pa: float,
+                                  p_page: float, scale: float,
+                                  block_size: int) -> Array:
+    """Dense PAGE payload -> block gather -> scale (the fused kernel's
+    oracle)."""
+    k = k_page(gn, go, bn, bo, h, coin, b=b, p_page=p_page)
+    _, payload = control_variate_tail(k, h, g_i, a=a, pa=pa,
+                                      part=jnp.asarray(1.0))
+    return _blocks_of(payload, block_size)[block_idx] * scale
 
 
 def block_gather_ref(x_blocks: Array, block_idx: Array, scale: float

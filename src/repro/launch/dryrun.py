@@ -157,6 +157,7 @@ def lower_pair(arch_id: str, shape_name: str, *, multi_pod: bool,
         lowered = step_jit.lower(state_sds, batch_sds, key_sds)
         rec["dasha"] = {
             "data_axes": list(dcfg.data_axes),
+            "variant": dcfg.variant,
             "p_a": dcfg.p_a,
             "ratio": dcfg.compression_ratio,
             "aggregation": dcfg.aggregation,
@@ -230,6 +231,8 @@ def main() -> None:
     ap.add_argument("--tag", default="baseline")
     ap.add_argument("--dasha-ratio", type=float, default=None)
     ap.add_argument("--dasha-aggregation", default=None)
+    ap.add_argument("--dasha-variant", default=None,
+                    choices=["mvr", "gradient", "page"])
     ap.add_argument("--dasha-pallas", action="store_true")
     args = ap.parse_args()
 
@@ -244,6 +247,10 @@ def main() -> None:
         overrides["compression_ratio"] = args.dasha_ratio
     if args.dasha_aggregation:
         overrides["aggregation"] = args.dasha_aggregation
+    if args.dasha_variant:
+        overrides["variant"] = args.dasha_variant
+        if args.dasha_variant == "page":
+            overrides["p_page"] = 1 / 8
     if args.dasha_pallas:
         overrides["use_pallas"] = True
 

@@ -21,6 +21,14 @@ def main():
     ap.add_argument("--p-a", type=float, default=0.5)
     ap.add_argument("--ratio", type=float, default=1 / 64)
     ap.add_argument("--aggregation", default="sparse_allgather")
+    ap.add_argument("--variant", default="mvr",
+                    choices=["mvr", "gradient", "page"],
+                    help="k_i rule (core/variants.py); finite_mvr needs "
+                         "per-component trackers and has no LM trainer path")
+    ap.add_argument("--p-page", type=float, default=1 / 8,
+                    help="page variant: full-pass probability")
+    ap.add_argument("--page-mini-batch", type=int, default=1,
+                    help="page variant: per-node minibatch examples")
     ap.add_argument("--use-pallas", action="store_true",
                     help="fused Pallas update path (DESIGN.md §6)")
     ap.add_argument("--server", choices=["paper", "adamw"], default="paper")
@@ -68,16 +76,28 @@ def main():
         p_a=args.p_a, sampler="independent",
         compression_ratio=args.ratio,
         aggregation=args.aggregation, data_axes=axes,
+        variant=args.variant, p_page=args.p_page,
         use_pallas=args.use_pallas)
     server = (paper_server(args.gamma) if args.server == "paper"
               else adamw_server(lr=3e-4))
-    trainer = Trainer(model, mesh, TrainerConfig(dasha=dcfg, server=server))
+    trainer = Trainer(model, mesh, TrainerConfig(
+        dasha=dcfg, server=server,
+        page_mini_batch=args.page_mini_batch))
     state = trainer.init(jax.random.key(0))
 
     data = DataConfig(seq_len=seq, global_batch=gbatch, num_nodes=n,
                       vocab_size=cfg.vocab_size)
 
     def batches():
+        # The gradient variant (Alg. 2) is the deterministic full-local-
+        # gradient setting: each node's dataset is FIXED across rounds
+        # (this is also what makes the trainer's old-grad cache exact).
+        # Streaming fresh batches would break the correlated gn/go pair;
+        # use mvr/page for stochastic data.
+        if args.variant == "gradient":
+            fixed = make_batch(cfg, data, 0, dtype=cfg.dtype)
+            while True:
+                yield fixed
         i = 0
         while True:
             yield make_batch(cfg, data, i, dtype=cfg.dtype)

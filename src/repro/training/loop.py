@@ -31,7 +31,9 @@ def train(trainer: Trainer, state: TrainState,
         key = jax.random.key(seed + i)
         state, metrics = step_fn(state, placed, key)
         if i % log_every == 0 or i == num_steps - 1:
-            logger.log(i, loss=metrics.loss, grad_norm=metrics.grad_norm)
+            logger.log(i, loss=metrics.loss, grad_norm=metrics.grad_norm,
+                       bits_sent=metrics.bits_sent,
+                       participants=metrics.participants)
         if checkpoint_dir and checkpoint_every and (i + 1) % checkpoint_every == 0:
             save_checkpoint(checkpoint_dir, state, i + 1)
         if i < num_steps - 1:

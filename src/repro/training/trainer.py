@@ -3,8 +3,21 @@
 Step order is Algorithm 1, faithfully:
 
     1. x^{t+1} = x^t + server_update(g^t)        (paper: -gamma g^t)
-    2. per-node stochastic grads at x^{t+1} AND x^t with the *same*
-       minibatch (Alg. 5 MVR pair; DESIGN.md §3)
+    2. per-node stochastic grads at x^{t+1} AND x^t — what is evaluated
+       depends on the variant (core/variants.py):
+         * ``mvr``      — the same minibatch at both points (Alg. 5 pair)
+         * ``gradient`` — the (fixed-batch) local gradient pair; the
+           old-point gradient is deterministic, so it is CACHED from the
+           previous round instead of re-evaluated (one vjp per step
+           instead of two — exactness requires node batches fixed
+           across rounds, the Alg. 2 full-gradient setting)
+         * ``page``     — the shared Alg. 3 coin picks EITHER a full
+           pass over the whole node batch OR a minibatch pass over the
+           first ``page_mini_batch`` examples (two batch-shape paths in
+           one step; ``lax.cond`` executes only the taken branch, so
+           full-pass compute is paid only with probability p_page)
+       (``finite_mvr`` needs per-component trackers — problem-scale
+       only, rejected here; see DESIGN.md §8 support matrix)
     3. node update: h_i, g_i, compressed messages m_i, aggregation -> g^{t+1}
 
 The whole step is one jit-able function; the dry-run lowers it with
@@ -20,6 +33,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro.core import variants
 from repro.core.sharded import (ShardedDasha, ShardedDashaConfig,
                                 ShardedDashaState, estimator_spec, node_spec,
                                 per_node_value_and_grads)
@@ -37,6 +51,9 @@ class TrainState(NamedTuple):
     dasha: ShardedDashaState
     opt: Any
     step: Array
+    # gradient-variant eval reuse: (losses (n,), per-node grads) at the
+    # CURRENT params — next round's old-point pair.  () when disabled.
+    cache: Any = ()
 
 
 class TrainMetrics(NamedTuple):
@@ -44,6 +61,8 @@ class TrainMetrics(NamedTuple):
     loss_old: Array
     grad_norm: Array      # ||g^{t+1}|| of the server estimator
     step: Array
+    bits_sent: Array      # uplink bits this round, all nodes (engine-measured)
+    participants: Array   # |S^t| this round
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,13 +71,34 @@ class TrainerConfig:
     server: ServerOptimizer
     zero_init_variates: bool = True   # init_zero vs grads-at-x0 init
     fsdp: bool = True                 # shard params over the data axis too
+    # page variant: per-node examples of the minibatch branch (the full
+    # branch uses the whole node batch).
+    page_mini_batch: int = 1
+    # gradient variant: cache the old-point per-node gradients from the
+    # previous round (None = auto: on iff variant == "gradient").
+    # EXACT only when each node's batch is FIXED across rounds — which
+    # is what the Alg. 2 deterministic-gradient setting means (the k_i
+    # pair must be two evaluations of the same f_i).  Feed a constant
+    # batch per node (launch/train.py does) or set this to False when
+    # streaming data through the gradient variant anyway.
+    cache_old_grads: Optional[bool] = None
 
 
 class Trainer:
     def __init__(self, model: Model, mesh: Mesh, cfg: TrainerConfig):
+        rule = variants.get_rule(cfg.dasha.variant)
+        if not rule.trainer_supported:
+            raise ValueError(
+                f"variant {cfg.dasha.variant!r} ({rule.algorithm}) needs "
+                "per-component trackers and is not supported by the LM "
+                "trainer; use ShardedDasha directly (DESIGN.md §8)")
         self.model = model
         self.mesh = mesh
         self.cfg = cfg
+        self.rule = rule
+        self.cache_old = (cfg.cache_old_grads
+                          if cfg.cache_old_grads is not None
+                          else cfg.dasha.variant == "gradient")
         params_shape = jax.eval_shape(model.init_params, jax.random.key(0))
         self.param_specs = param_specs_like(
             params_shape, mesh, fsdp_axis="data" if cfg.fsdp else None)
@@ -68,6 +108,7 @@ class Trainer:
     def state_specs(self) -> TrainState:
         ps = self.param_specs
         axes = self.cfg.dasha.data_axes
+        lead = axes[0] if len(axes) == 1 else tuple(axes)
         nspec = jax.tree.map(
             lambda s: node_spec(s, axes), ps,
             is_leaf=lambda x: isinstance(x, P))
@@ -81,11 +122,13 @@ class Trainer:
         # mu/nu of adamw mirror params
         if hasattr(opt_state_shape, "mu"):
             opt_spec = type(opt_state_shape)(count=P(), mu=ps, nu=ps)
+        cache_spec = (P(lead), nspec) if self.cache_old else ()
         return TrainState(
             params=ps,
             dasha=ShardedDashaState(g=espec, g_i=nspec, h_i=nspec, step=P()),
             opt=opt_spec,
-            step=P())
+            step=P(),
+            cache=cache_spec)
 
     def state_shapes(self, batch_shapes: PyTree) -> TrainState:
         del batch_shapes
@@ -95,8 +138,15 @@ class Trainer:
         params = self.model.init_params(key)
         dasha = self.engine.init_zero(params)
         opt = self.cfg.server.init(params)
+        cache = ()
+        if self.cache_old:
+            n = self.engine.n_nodes
+            cache = (jnp.zeros((n,), jnp.float32),
+                     jax.tree.map(
+                         lambda p: jnp.zeros((n,) + p.shape, p.dtype),
+                         params))
         return TrainState(params=params, dasha=dasha, opt=opt,
-                          step=jnp.zeros((), jnp.int32))
+                          step=jnp.zeros((), jnp.int32), cache=cache)
 
     # ---- init -----------------------------------------------------------
     def init(self, key: Array) -> TrainState:
@@ -119,17 +169,63 @@ class Trainer:
             lambda p, d: (p.astype(jnp.float32) + d).astype(p.dtype),
             state.params, delta)
 
-        # (2) same-sample per-node gradient pair (Alg. 5)
+        # (2) the variant's per-node gradient oracles
         def node_loss(p, node_batch):
             return model.loss(p, node_batch)
 
-        losses_new, g_new = per_node_value_and_grads(node_loss, params_new,
-                                                     batch)
-        losses_old, g_old = per_node_value_and_grads(node_loss, state.params,
-                                                     batch)
+        node_kwargs: Dict[str, Any] = {}
+        cache_new = state.cache
+        if self.rule.needs_minibatch:        # page: two batch-shape paths
+            mini = jax.tree.map(lambda x: x[:, :cfg.page_mini_batch], batch)
+            # Same coin derivation as the engine consumes inside
+            # node_update (core/variants.py round-key contract), so the
+            # branch we evaluate is the branch the kernel selects.
+            _, k_oracle, _ = variants.round_keys(key, state.dasha.step)
+            coin = variants.page_coin(variants.page_keys(k_oracle)[0],
+                                      cfg.dasha.p_page)
+
+            def full_pass(_):
+                ln, gn = per_node_value_and_grads(node_loss, params_new,
+                                                  batch)
+                lo, go = per_node_value_and_grads(node_loss, state.params,
+                                                  batch)
+                z = jax.tree.map(jnp.zeros_like, gn)
+                return ln, lo, gn, go, z, z
+
+            def mini_pass(_):
+                ln, bn = per_node_value_and_grads(node_loss, params_new,
+                                                  mini)
+                lo, bo = per_node_value_and_grads(node_loss, state.params,
+                                                  mini)
+                z = jax.tree.map(jnp.zeros_like, bn)
+                return ln, lo, z, z, bn, bo
+
+            # Only the taken branch runs: the full pass is paid with
+            # probability p_page (the unused pair enters the kernel as
+            # zeros and is discarded by the coin select).
+            (losses_new, losses_old, g_new, g_old, b_new,
+             b_old) = jax.lax.cond(coin, full_pass, mini_pass, None)
+            node_kwargs = dict(mini_new=b_new, mini_old=b_old)
+        elif self.cache_old:                 # gradient: reuse old grads
+            losses_new, g_new = per_node_value_and_grads(
+                node_loss, params_new, batch)
+
+            def fresh(_):
+                return per_node_value_and_grads(node_loss, state.params,
+                                                batch)
+
+            losses_old, g_old = jax.lax.cond(
+                state.step == 0, fresh, lambda _: state.cache, None)
+            cache_new = (losses_new, g_new)
+        else:                                # mvr: same-sample pair
+            losses_new, g_new = per_node_value_and_grads(
+                node_loss, params_new, batch)
+            losses_old, g_old = per_node_value_and_grads(
+                node_loss, state.params, batch)
 
         # (3) DASHA-PP node/aggregation update
-        dasha_new = eng.node_update(g_new, g_old, state.dasha, key)
+        dasha_new, wire = eng.node_update(g_new, g_old, state.dasha, key,
+                                          **node_kwargs)
 
         gn = jnp.sqrt(sum(
             jnp.sum(jnp.square(x.astype(jnp.float32)))
@@ -137,9 +233,11 @@ class Trainer:
         metrics = TrainMetrics(loss=jnp.mean(losses_new),
                                loss_old=jnp.mean(losses_old),
                                grad_norm=gn,
-                               step=state.step)
+                               step=state.step,
+                               bits_sent=wire.bits_sent,
+                               participants=wire.participants)
         return TrainState(params=params_new, dasha=dasha_new, opt=opt_new,
-                          step=state.step + 1), metrics
+                          step=state.step + 1, cache=cache_new), metrics
 
     def jit_train_step(self, batch_example: PyTree):
         """jit with explicit shardings (used by train loop and dry-run)."""

@@ -8,7 +8,9 @@ from _hypo import given, settings, st   # hypothesis or deterministic fallback
 
 from repro.kernels import ref
 from repro.kernels.ops import (block_gather_op, block_scatter_op,
-                               dasha_h_update_op, dasha_page_update_op,
+                               dasha_h_update_op, dasha_page_h_update_op,
+                               dasha_page_payload_blocks_op,
+                               dasha_page_update_op,
                                dasha_payload_blocks_op, dasha_tail_op,
                                dasha_update_batched_op, dasha_update_op)
 
@@ -143,6 +145,48 @@ def test_h_update_parity(part):
                             participates=jnp.asarray(part))
     _, want, _ = ref.dasha_update_ref(gn, go, h, gi, b=0.2, a=0.0, pa=0.5,
                                       participates=jnp.asarray(part))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("coin", [0.0, 1.0])
+@pytest.mark.parametrize("part", [0.0, 1.0])
+def test_page_h_update_parity(coin, part):
+    """Line 10 with the PAGE k recomputed in-register (both branches,
+    both participation states)."""
+    d = 513
+    gn, go, bn, bo, h = (
+        jax.random.normal(jax.random.fold_in(jax.random.key(3), i), (d,))
+        for i in range(5))
+    args = dict(b=0.2, pa=0.5, p_page=0.25)
+    out = dasha_page_h_update_op(gn, go, bn, bo, h, jnp.asarray(coin),
+                                 participates=jnp.asarray(part), **args)
+    want = ref.dasha_page_h_update_ref(gn, go, bn, bo, h,
+                                       jnp.asarray(part),
+                                       jnp.asarray(coin), **args)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("coin", [0.0, 1.0])
+@pytest.mark.parametrize("d,bs,kb", [(1024, 128, 2), (1000, 128, 3),
+                                     (64, 8, 4)])
+def test_page_payload_blocks_fused_compress(coin, d, bs, kb):
+    """The fused PAGE update+compress must equal dense PAGE payload ->
+    block gather, on both coin branches (incl. ragged last block)."""
+    gn, go, bn, bo, h, gi = (
+        jax.random.normal(jax.random.fold_in(jax.random.key(d), i), (d,))
+        for i in range(6))
+    nb = -(-d // bs)
+    idx = jnp.asarray(
+        np.random.default_rng(d).choice(nb, kb, replace=False), jnp.int32)
+    args = dict(b=0.3, a=0.05, pa=0.5, p_page=0.25, scale=nb / kb,
+                block_size=bs)
+    c = jnp.asarray(coin)
+    out = dasha_page_payload_blocks_op(gn, go, bn, bo, h, gi, idx, c,
+                                       **args)
+    want = ref.dasha_page_payload_blocks_ref(gn, go, bn, bo, h, gi, idx,
+                                             c, **args)
     np.testing.assert_allclose(np.asarray(out), np.asarray(want),
                                rtol=1e-5, atol=1e-6)
 

@@ -48,7 +48,8 @@ def fit(cfg, steps=250):
             pn = eng.server_step(params_, state)
             _, gn = per_node_value_and_grads(loss_fn, pn, (xb, yb))
             _, go = per_node_value_and_grads(loss_fn, params_, (xb, yb))
-            return pn, eng.node_update(gn, go, state, key)
+            st_new, _ = eng.node_update(gn, go, state, key)
+            return pn, st_new
         _, g0 = per_node_value_and_grads(loss_fn, p, (xb, yb))
         st = eng.init(g0)
         for i in range(steps):
@@ -92,6 +93,296 @@ for extra in (dict(compression_ratio=0.25, aggregation='sparse_allgather'),
                    steps=40)
     np.testing.assert_allclose(g_jnp, g_pal, rtol=1e-5, atol=1e-6)
     print('mode ok', extra)
+print('OK')
+""")
+    assert "OK" in out
+
+
+PARITY = """
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.compat import make_mesh, use_mesh
+from repro.core import variants, BlockRandK, Identity, SNice
+from repro.core.dasha_pp import DashaPP, DashaPPConfig
+from repro.core.sharded import ShardedDasha, ShardedDashaConfig
+from repro.core.problems import (LogisticSigmoidProblem,
+                                 make_synthetic_classification,
+                                 sample_batch_indices)
+
+n, m, d, B, T = 4, 6, 32, 2, 10
+feats, y = make_synthetic_classification(jax.random.key(0), n_nodes=n,
+                                         m_per_node=m, d=d)
+prob = LogisticSigmoidProblem(feats, y)
+mesh = make_mesh((4,), ('data',))
+specs = {'w': P()}
+RUN = jax.random.key(42)
+x0 = jnp.zeros(d)
+samp = SNice(n=n, s=2)
+gamma, a, b, p_page = 0.05, 0.1, 0.3, 0.4
+
+def ref_run(variant, compressor, pallas):
+    cfg = DashaPPConfig(variant, gamma=gamma, a=a, b=b, p_page=p_page,
+                        batch_size=B, use_pallas=pallas)
+    alg = DashaPP(prob, compressor, samp, cfg)
+    st = alg.init(jax.random.key(0), x0)
+    step = jax.jit(alg.step)
+    for t in range(T):
+        st, _ = step(jax.random.fold_in(RUN, t), st)
+    return st
+
+def sharded_run(variant, agg, ratio, pallas):
+    cfg = ShardedDashaConfig(gamma=gamma, a=a, b=b, p_a=0.5,
+                             sampler='s_nice', compression_ratio=ratio,
+                             block_size=8, aggregation=agg,
+                             data_axes=('data',), variant=variant,
+                             p_page=p_page, use_pallas=pallas)
+    eng = ShardedDasha(mesh, specs, cfg)
+
+    # One round: the oracle inputs are computed from the SAME problem
+    # with the SAME key derivation the reference engine consumes
+    # (variants.round_keys contract) — so the trajectories must agree
+    # element-wise, not just in distribution.
+    @jax.jit
+    def round_fn(x, st, key):
+        xn = eng.server_step(x, st)
+        _, k_oracle, _ = variants.round_keys(key, st.step)
+        kw = {}
+        if variant == 'mvr':
+            idx = sample_batch_indices(k_oracle, n, m, B, replace=True)
+            gn = {'w': prob.batch_grad(xn['w'], idx)}
+            go = {'w': prob.batch_grad(x['w'], idx)}
+        elif variant == 'gradient':
+            gn = {'w': prob.grad(xn['w'])}
+            go = {'w': prob.grad(x['w'])}
+        elif variant == 'page':
+            _, k_batch = variants.page_keys(k_oracle)
+            idx = sample_batch_indices(k_batch, n, m, B, replace=True)
+            gn = {'w': prob.grad(xn['w'])}
+            go = {'w': prob.grad(x['w'])}
+            kw = dict(mini_new={'w': prob.batch_grad(xn['w'], idx)},
+                      mini_old={'w': prob.batch_grad(x['w'], idx)})
+        else:
+            idx = sample_batch_indices(k_oracle, n, m, B, replace=False)
+            gn = {'w': prob.component_grads(xn['w'], idx)}
+            go = {'w': prob.component_grads(x['w'], idx)}
+            kw = dict(component_idx=idx)
+        st2, met = eng.node_update(gn, go, st, key, **kw)
+        return xn, st2, met
+
+    with use_mesh(mesh):
+        hij0 = None
+        if variant == 'finite_mvr':
+            all_idx = jnp.broadcast_to(jnp.arange(m)[None, :], (n, m))
+            hij0 = {'w': prob.component_grads(x0, all_idx)}
+        st = eng.init({'w': prob.grad(x0)}, h_ij0=hij0)
+        x = {'w': x0}
+        for t in range(T):
+            x, st, met = round_fn(x, st, RUN)
+    return x['w'], st, met, eng
+
+def check(pallas):
+    for variant in ('mvr', 'gradient', 'page', 'finite_mvr'):
+        for agg, ratio in (('sparse_allgather', 0.25),
+                           ('dense_psum', 0.25),
+                           ('sparse_allgather', None)):
+            comp = Identity() if ratio is None else \\
+                BlockRandK(ratio=ratio, block_size=8)
+            st_ref = ref_run(variant, comp, pallas)
+            x_sh, st_sh, met, eng = sharded_run(variant, agg, ratio,
+                                                pallas)
+            for name, a_, b_ in [('x', st_ref.x, x_sh),
+                                 ('g', st_ref.g, st_sh.g['w']),
+                                 ('h_i', st_ref.h_i, st_sh.h_i['w']),
+                                 ('g_i', st_ref.g_i, st_sh.g_i['w'])]:
+                np.testing.assert_allclose(
+                    np.asarray(a_), np.asarray(b_), rtol=1e-4, atol=1e-5,
+                    err_msg=f'{variant}/{agg}/ratio={ratio}/{name}')
+            if variant == 'finite_mvr':
+                np.testing.assert_allclose(
+                    np.asarray(st_ref.h_ij), np.asarray(st_sh.h_ij['w']),
+                    rtol=1e-4, atol=1e-5)
+            # engine-measured bits match the aggregation-aware accounting
+            per_node = eng.uplink_bits_per_round(d) / eng.cfg.p_a
+            assert float(met.bits_sent) == \\
+                float(met.participants) * per_node, (variant, agg)
+            print('parity ok', variant, agg, ratio, flush=True)
+"""
+
+
+@pytest.mark.slow
+def test_variant_parity_vs_reference_jnp():
+    """Acceptance: ShardedDasha reproduces the reference DashaPP
+    trajectory for ALL FOUR variants in every aggregation mode (matched
+    keys; page coin and batch randomness consumed identically)."""
+    out = run_sub(PARITY + "\ncheck(pallas=False)\nprint('OK')\n",
+                  devices=4)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_variant_parity_vs_reference_pallas():
+    """Same acceptance matrix with the fused Pallas update paths."""
+    out = run_sub(PARITY + "\ncheck(pallas=True)\nprint('OK')\n",
+                  devices=4)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_bits_accounting_on_model_axis_mesh():
+    """bits_sent must count each node's message ONCE even when leaves
+    are replicated across the model axis (regression: a psum over all
+    mesh axes tallied replicated leaves once per model shard)."""
+    out = run_sub("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.compat import make_mesh, use_mesh
+from repro.core.sharded import ShardedDasha, ShardedDashaConfig
+
+mesh = make_mesh((2, 2), ('data', 'model'))
+dw, dv = 64, 128
+# 'w' replicated over model; 'v' sharded over model.
+specs = {'w': P(), 'v': P(None, 'model')}
+g0 = {'w': jnp.ones((2, dw)), 'v': jnp.ones((2, dv // 8, 8))}
+
+def bits(ratio, aggregation):
+    cfg = ShardedDashaConfig(gamma=0.1, a=0.1, b=0.3, p_a=1.0,
+                             sampler='full', compression_ratio=ratio,
+                             block_size=8, aggregation=aggregation,
+                             data_axes=('data',))
+    eng = ShardedDasha(mesh, specs, cfg)
+    with use_mesh(mesh):
+        st = eng.init(g0)
+        st, met = eng.node_update(g0, g0, st, jax.random.key(0))
+    return float(met.participants), float(met.bits_sent)
+
+# uncompressed: 2 nodes x (dw + dv) x 32 bits — NOT x2 for the model axis
+parts, b = bits(None, 'sparse_allgather')
+assert parts == 2.0
+assert b == 2 * (dw + dv) * 32.0, b
+# dense_psum moves dense bits too
+_, b = bits(0.25, 'dense_psum')
+assert b == 2 * (dw + dv) * 32.0, b
+# sparse: per model shard, kb = ceil(.25 * nb) blocks of (8 vals + idx)
+_, b = bits(0.25, 'sparse_allgather')
+w_bits = 2 * (8 * 32.0 + 32.0)            # nb=8 -> kb=2 (one shard)
+v_bits = 2 * (2 * (8 * 32.0 + 32.0))      # 2 shards x (nb=8 -> kb=2)
+assert b == 2 * (w_bits + v_bits), (b, 2 * (w_bits + v_bits))
+print('OK')
+""", devices=4)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_checkpoint_resume_reproduces_trajectory():
+    """training/checkpoints.py round-trip: save -> restore -> resume
+    equals the uninterrupted run, including the variant-bearing state
+    (gradient variant's eval-reuse cache; engine-level h_ij)."""
+    out = run_sub("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.compat import make_mesh, use_mesh
+from repro.models import Model, get_smoke_config
+from repro.core.sharded import ShardedDashaConfig
+from repro.training.checkpoints import (latest_step, restore_checkpoint,
+                                        save_checkpoint)
+from repro.training.trainer import Trainer, TrainerConfig
+from repro.training.optim import adamw_server
+from repro.data.sharding import place_batch
+import tempfile
+
+mesh = make_mesh((4, 2), ('data', 'model'))
+cfg = get_smoke_config('granite-3-2b').with_overrides(vocab_size=64)
+model = Model(cfg)
+dcfg = ShardedDashaConfig(gamma=0.0, a=0.02, b=0.9, p_a=0.5,
+                          sampler='independent', compression_ratio=0.1,
+                          block_size=64, data_axes=('data',),
+                          variant='gradient')
+tr = Trainer(model, mesh, TrainerConfig(dasha=dcfg,
+                                        server=adamw_server(lr=3e-3,
+                                                            warmup=5)))
+toks = jnp.tile(jnp.arange(32) % 7, (4, 2, 1)).astype(jnp.int32)
+batch = {'tokens': toks}
+step = tr.jit_train_step(batch)
+ckpt = tempfile.mkdtemp()
+
+with use_mesh(mesh):
+    placed = place_batch(batch, mesh, ('data',))
+    # uninterrupted 6 steps; snapshot a copy at step 3
+    state = tr.init(jax.random.key(0))
+    for i in range(6):
+        if i == 3:
+            save_checkpoint(ckpt, state, step=3)
+        state, m = step(state, placed, jax.random.key(i))
+    # restore at 3 and resume 3 more with the same keys
+    assert latest_step(ckpt) == 3
+    like = tr.init(jax.random.key(0))
+    resumed = restore_checkpoint(ckpt, like)
+    for i in range(3, 6):
+        resumed, m2 = step(resumed, placed, jax.random.key(i))
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(resumed)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-7)
+    assert float(m.loss) == float(m2.loss)
+print('OK')
+""")
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_trainer_page_and_gradient_cache():
+    """Trainer satellites: (1) the page variant's two-batch-shape step
+    runs and logs wire metrics; (2) the gradient variant's eval-reuse
+    cache leaves the trajectory unchanged vs recomputing the old-point
+    gradients."""
+    out = run_sub("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.compat import make_mesh, use_mesh
+from repro.models import Model, get_smoke_config
+from repro.core.sharded import ShardedDashaConfig
+from repro.training.trainer import Trainer, TrainerConfig
+from repro.training.optim import adamw_server
+from repro.data.sharding import place_batch
+
+mesh = make_mesh((4, 2), ('data', 'model'))
+cfg = get_smoke_config('granite-3-2b').with_overrides(vocab_size=64)
+model = Model(cfg)
+toks = jnp.tile(jnp.arange(32) % 7, (4, 2, 1)).astype(jnp.int32)
+batch = {'tokens': toks}
+
+def run(variant, steps, cache=None):
+    dcfg = ShardedDashaConfig(gamma=0.0, a=0.02, b=0.9, p_a=0.5,
+                              sampler='independent',
+                              compression_ratio=0.1, block_size=64,
+                              data_axes=('data',), variant=variant,
+                              p_page=0.5)
+    tr = Trainer(model, mesh, TrainerConfig(
+        dasha=dcfg, server=adamw_server(lr=3e-3, warmup=5),
+        cache_old_grads=cache))
+    state = tr.init(jax.random.key(0))
+    step = tr.jit_train_step(batch)
+    mets = []
+    with use_mesh(mesh):
+        placed = place_batch(batch, mesh, ('data',))
+        for i in range(steps):
+            state, m = step(state, placed, jax.random.key(i))
+            mets.append((float(m.loss), float(m.grad_norm),
+                         float(m.bits_sent), float(m.participants)))
+    return mets, state
+
+mets, _ = run('page', 8)
+assert all(np.isfinite(v) for row in mets for v in row)
+# bits surfaced and proportional to the realized participant count
+assert any(row[2] > 0 for row in mets)
+per_node = {row[2] / row[3] for row in mets if row[3] > 0}
+assert len(per_node) == 1, per_node
+print('page ok', mets[-1])
+
+m_cache, st_c = run('gradient', 8, cache=True)
+m_fresh, st_f = run('gradient', 8, cache=False)
+for a, b in zip(m_cache, m_fresh):
+    np.testing.assert_allclose(a, b, rtol=1e-6)
+for a, b in zip(jax.tree.leaves(st_c.params), jax.tree.leaves(st_f.params)):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+print('cache ok')
 print('OK')
 """)
     assert "OK" in out

@@ -1,0 +1,273 @@
+"""The variant-rule layer (core/variants.py): registry contents, pure
+k_i formulas, oracle/uplink accounting, the shared randomness contract,
+and sampler parity between the leaf-level ``participates`` (sharded
+engine) and the reference samplers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import variants
+from repro.core.compressors import BlockRandK
+from repro.core.participation import (FullParticipation, Independent,
+                                      SNice, participates, snice_size)
+
+# ----------------------------------------------------------------------
+# Registry
+# ----------------------------------------------------------------------
+
+
+def test_registry_contents():
+    assert sorted(variants.VARIANTS) == ["finite_mvr", "gradient", "mvr",
+                                         "page"]
+    assert sorted(variants.BASELINES) == ["frecon", "marina"]
+    page = variants.get_rule("page")
+    assert page.needs_coin and page.needs_minibatch
+    fin = variants.get_rule("finite_mvr")
+    assert fin.component_trackers and not fin.trainer_supported
+    for name in ("gradient", "mvr"):
+        r = variants.get_rule(name)
+        assert not (r.needs_coin or r.component_trackers)
+        assert r.trainer_supported
+    # every rule documents its oracle and paper algorithm
+    for r in list(variants.VARIANTS.values()) + \
+            list(variants.BASELINES.values()):
+        assert r.oracle and r.algorithm
+    with pytest.raises(ValueError):
+        variants.get_rule("nope")
+    with pytest.raises(ValueError):
+        variants.get_baseline("gradient")   # not a baseline
+
+
+def test_engine_configs_reject_unknown_variant():
+    from repro.core.dasha_pp import DashaPPConfig
+    from repro.core.sharded import ShardedDashaConfig
+    with pytest.raises(ValueError):
+        DashaPPConfig("bogus", gamma=0.1, a=0.1, b=0.1)
+    with pytest.raises(ValueError):
+        ShardedDashaConfig(gamma=0.1, a=0.1, b=0.1, variant="bogus")
+
+
+# ----------------------------------------------------------------------
+# Pure formulas
+# ----------------------------------------------------------------------
+
+
+def test_k_formulas_shape_polymorphic():
+    """The same leaf function serves node-major (n, d) and flat (D,)."""
+    key = jax.random.key(0)
+    gn, go, h = (jax.random.normal(jax.random.fold_in(key, i), (3, 8))
+                 for i in range(3))
+    k2 = variants.k_same_sample(gn, go, h, b=0.3)
+    k1 = variants.k_same_sample(gn[0], go[0], h[0], b=0.3)
+    np.testing.assert_allclose(np.asarray(k2[0]), np.asarray(k1))
+    np.testing.assert_allclose(
+        np.asarray(k2), np.asarray(gn - go - 0.3 * (h - go)))
+
+
+@pytest.mark.parametrize("coin", [0, 1])
+def test_k_page_branches(coin):
+    key = jax.random.key(1)
+    gn, go, bn, bo, h = (jax.random.normal(jax.random.fold_in(key, i),
+                                           (8,)) for i in range(5))
+    k = variants.k_page(gn, go, bn, bo, h, jnp.asarray(bool(coin)),
+                        b=0.3, p_page=0.25)
+    want = (gn - go - (0.3 / 0.25) * (h - go)) if coin else (bn - bo)
+    np.testing.assert_allclose(np.asarray(k), np.asarray(want),
+                               rtol=1e-6)
+
+
+def test_k_finite_mvr_scatter():
+    """Selected components get the scaled update, others exactly zero."""
+    m, B, d = 6, 2, 4
+    key = jax.random.key(2)
+    gn, go, h = (jax.random.normal(jax.random.fold_in(key, i), (B, d))
+                 for i in range(3))
+    idx = jnp.asarray([1, 4])
+    k_ij = variants.k_finite_mvr_components(gn, go, h, idx, m, b=0.3)
+    assert k_ij.shape == (m, d)
+    want_sel = (m / B) * (gn - go - 0.3 * (h - go))
+    np.testing.assert_allclose(np.asarray(k_ij[idx]),
+                               np.asarray(want_sel), rtol=1e-6)
+    others = np.delete(np.asarray(k_ij), np.asarray(idx), axis=0)
+    assert (others == 0).all()
+
+
+def test_control_variate_tail_masking():
+    key = jax.random.key(3)
+    k, h, gi = (jax.random.normal(jax.random.fold_in(key, i), (8,))
+                for i in range(3))
+    h_new, payload = variants.control_variate_tail(
+        k, h, gi, a=0.1, pa=0.5, part=jnp.asarray(0.0))
+    np.testing.assert_array_equal(np.asarray(h_new), np.asarray(h))
+    np.testing.assert_allclose(
+        np.asarray(payload),
+        np.asarray(k / 0.5 - (0.1 / 0.5) * (gi - h)), rtol=1e-6)
+
+
+# ----------------------------------------------------------------------
+# Accounting
+# ----------------------------------------------------------------------
+
+
+def test_oracle_call_accounting():
+    n, m, B = 10, 32, 4
+    assert int(variants.get_rule("gradient").oracle_calls(n, m)) \
+        == 2 * m * n
+    assert int(variants.get_rule("mvr").oracle_calls(n, m, B)) == 2 * B * n
+    assert int(variants.get_rule("finite_mvr").oracle_calls(n, m, B)) \
+        == 2 * B * n
+    page = variants.get_rule("page")
+    assert int(page.oracle_calls(n, m, B, coin=jnp.asarray(True))) \
+        == 2 * m * n
+    assert int(page.oracle_calls(n, m, B, coin=jnp.asarray(False))) \
+        == 2 * B * n
+    marina = variants.get_baseline("marina")
+    assert int(marina.oracle_calls(n, m)) == 2 * m * n
+    assert int(marina.oracle_calls(n, m, B, coin=jnp.asarray(True))) \
+        == m * n + B * n
+    frecon = variants.get_baseline("frecon")
+    assert int(frecon.oracle_calls(n, m, B)) == B * n
+    assert int(frecon.oracle_calls(n, m)) == m * n
+
+
+def test_uplink_bits_aggregation_aware():
+    """dense_psum moves dense messages regardless of the ratio; only
+    sparse_allgather gets the compressed wire."""
+    d, bs, ratio, pa = 10_000, 128, 1 / 64, 0.5
+    dense = variants.uplink_bits_per_node(
+        d, aggregation="dense_psum", compression_ratio=ratio,
+        block_size=bs, p_a=pa)
+    ident = variants.uplink_bits_per_node(
+        d, aggregation="sparse_allgather", compression_ratio=None,
+        block_size=bs, p_a=pa)
+    sparse = variants.uplink_bits_per_node(
+        d, aggregation="sparse_allgather", compression_ratio=ratio,
+        block_size=bs, p_a=pa)
+    assert dense == ident == pa * d * 32.0
+    _, nb, kb = variants.block_plan(d, bs, ratio)
+    assert sparse == pa * kb * (bs * 32.0 + 32.0)
+    assert sparse < dense / 10
+
+
+def test_sharded_engine_uplink_accounting():
+    """ShardedDasha.uplink_bits_per_round delegates to the rule layer
+    (the dense_psum bug: it used to report compressed bits there)."""
+    from jax.sharding import PartitionSpec as P
+    from repro.compat import make_mesh
+    from repro.core.sharded import ShardedDasha, ShardedDashaConfig
+    mesh = make_mesh((1,), ("data",))
+    base = dict(gamma=0.1, a=0.1, b=0.1, p_a=0.5, compression_ratio=1 / 64,
+                block_size=128, data_axes=("data",))
+    sparse = ShardedDasha(mesh, {"w": P()}, ShardedDashaConfig(
+        aggregation="sparse_allgather", **base))
+    dense = ShardedDasha(mesh, {"w": P()}, ShardedDashaConfig(
+        aggregation="dense_psum", **base))
+    d = 100_000
+    assert dense.uplink_bits_per_round(d) == 0.5 * d * 32.0
+    assert sparse.uplink_bits_per_round(d) < \
+        dense.uplink_bits_per_round(d) / 10
+
+
+# ----------------------------------------------------------------------
+# Sampler parity (sharded `participates` vs reference samplers)
+# ----------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind,samp", [
+    ("independent", Independent(n=12, p=0.3)),
+    ("s_nice", SNice(n=12, s=4)),
+    ("full", FullParticipation(n=12)),
+])
+def test_participates_matches_sampler_exactly(kind, samp):
+    """The leaf-level draw the sharded engine uses IS the reference
+    sampler's mask coordinate — bitwise, for every key."""
+    n = samp.n
+    for seed in range(20):
+        key = jax.random.key(seed)
+        mask_ref = np.asarray(samp.sample(key))
+        mask_leaf = np.asarray(jax.vmap(
+            lambda i: participates(kind, key, i, n, samp.p_a)
+        )(jnp.arange(n)))
+        np.testing.assert_array_equal(mask_ref, mask_leaf)
+
+
+def test_participates_snice_exactly_s():
+    n, pa = 12, 1 / 3
+    s = snice_size(pa, n)
+    assert s == 4
+    for seed in range(30):
+        mask = jax.vmap(
+            lambda i: participates("s_nice", jax.random.key(seed), i, n,
+                                   pa))(jnp.arange(n))
+        assert int(jnp.sum(mask)) == s
+
+
+def test_participates_independent_rate():
+    n, pa, trials = 12, 0.3, 2000
+    keys = jax.random.split(jax.random.key(0), trials)
+    masks = jax.vmap(lambda k: jax.vmap(
+        lambda i: participates("independent", k, i, n, pa)
+    )(jnp.arange(n)))(keys)
+    p_hat = np.asarray(jnp.mean(masks.astype(jnp.float32), axis=0))
+    np.testing.assert_allclose(p_hat, pa, atol=0.05)
+
+
+def test_participates_unknown_sampler():
+    with pytest.raises(ValueError):
+        participates("bogus", jax.random.key(0), 0, 4, 0.5)
+
+
+# ----------------------------------------------------------------------
+# BlockRandK reference compressor (the sharded wire, dense form)
+# ----------------------------------------------------------------------
+
+
+def test_block_randk_compressor_unbiased_and_bounded():
+    d, bs, ratio = 256, 8, 0.25
+    comp = BlockRandK(ratio=ratio, block_size=bs)
+    x = jax.random.normal(jax.random.key(0), (d,))
+    keys = jax.random.split(jax.random.key(1), 800)
+    outs = jax.vmap(lambda k: comp.compress(k, x))(keys)
+    mean = np.asarray(jnp.mean(outs, axis=0))
+    rel = np.linalg.norm(mean - np.asarray(x)) / np.linalg.norm(x)
+    assert rel < 0.15, rel
+    # Definition-1 variance bound with omega = nb/kb - 1
+    omega = comp.omega(d)
+    var = float(jnp.mean(jnp.sum((outs - x) ** 2, axis=-1)))
+    assert var <= 1.05 * omega * float(jnp.sum(x ** 2))
+    # wire format: kb blocks of bs values + kb indices
+    _, nb, kb = variants.block_plan(d, bs, ratio)
+    assert comp.wire_bits(d) == kb * (bs * 32.0 + 32.0)
+    vals, idx = comp.compress_sparse(jax.random.key(2), x)
+    assert vals.shape == (kb, bs) and idx.shape == (kb,)
+
+
+def test_block_randk_compressor_matches_engine_wire():
+    """compress() is exactly the sharded engine's dense BlockRandK for
+    the same key — the basis of reference<->sharded parity."""
+    d, bs, ratio = 100, 8, 0.25     # ragged last block
+    comp = BlockRandK(ratio=ratio, block_size=bs)
+    x = jax.random.normal(jax.random.key(3), (d,))
+    key = jax.random.key(4)
+    _, nb, kb = variants.block_plan(d, bs, ratio)
+    want = variants.block_randk_dense(key, x, kb, bs)
+    np.testing.assert_array_equal(np.asarray(comp.compress(key, x)),
+                                  np.asarray(want))
+
+
+# ----------------------------------------------------------------------
+# Randomness contract
+# ----------------------------------------------------------------------
+
+
+def test_round_keys_step_fold():
+    """round_keys(key, step) == round_keys(fold_in(key, step)) — the
+    sharded engine (run key + step) and the reference engine (per-round
+    key) derive identical (k_part, k_oracle, k_comp)."""
+    key = jax.random.key(7)
+    a = variants.round_keys(key, jnp.asarray(3))
+    b = variants.round_keys(jax.random.fold_in(key, 3))
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(jax.random.key_data(x),
+                                      jax.random.key_data(y))
