@@ -1,0 +1,117 @@
+"""Async-runtime benchmark: virtual wall-clock of buffered first-K
+aggregation vs the full-barrier round, swept over latency heterogeneity
+x buffer size x variant (DESIGN.md §9).
+
+The sync engines price a round at the cohort MAX latency; the async
+server prices it at the K-th order statistic.  Under lognormal
+heterogeneity the gap is the paper's partial-participation story told
+in wall-clock: the server never needed everyone, so it should not pay
+for everyone.  Reported per row:
+
+* ``t_virtual``   — total virtual seconds for the same dispatch budget,
+* ``speedup``     — barrier time / this time (barrier row = 1.0),
+* ``gnorm``       — median final ||∇f(x)||² (solution quality),
+* ``s_mean``      — mean commit staleness (the price of not waiting),
+* ``util``        — mean client busy-fraction.
+
+    PYTHONPATH=src python benchmarks/bench_async.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(
+    0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.common import make_paper_problem  # noqa: E402
+from repro.core import RandK, SNice
+from repro.core.dasha_pp import DashaPPConfig
+from repro.fl import (AsyncConfig, AsyncDashaServer, ConstantLatency,
+                      LognormalLatency)
+
+
+def run_cell(prob, variant: str, sigma: float, buffer_frac, rounds: int,
+             s_cohort: int, seed: int = 1):
+    samp = SNice(n=prob.n, s=s_cohort)
+    comp = RandK(k=max(1, prob.d // 20))
+    cfg = DashaPPConfig(variant, gamma=0.05, a=0.1, b=0.3, p_page=0.25,
+                        batch_size=2)
+    if sigma == 0.0:
+        lat = ConstantLatency(compute_s=1.0, bandwidth_bps=1e5)
+    else:
+        lat = LognormalLatency(compute_s=1.0, sigma=sigma,
+                               client_sigma=sigma, bandwidth_bps=1e5,
+                               bandwidth_sigma=sigma / 2)
+    K = (None if buffer_frac is None
+         else max(1, int(round(buffer_frac * s_cohort))))
+    srv = AsyncDashaServer(prob, comp, samp, cfg, AsyncConfig(
+        buffer_size=K, staleness_exponent=0.5), lat)
+    _, res = srv.run(jax.random.key(seed), jnp.zeros(prob.d), rounds)
+    return dict(
+        t_virtual=res.total_time,
+        gnorm=float(np.median(res.grad_norm_sq[-max(1, rounds // 10):])),
+        s_mean=float(np.mean(res.staleness_mean)),
+        util=float(np.mean(res.utilization)),
+        bits=float(res.bits_cum[-1]))
+
+
+def main(quick: bool = True):
+    if quick:
+        n, m, d, rounds = 8, 6, 24, 25
+        variants_ = ("mvr", "page")
+        sigmas = (0.0, 1.0)
+        buffers = (None, 0.5)
+    else:
+        n, m, d, rounds = 32, 12, 120, 400
+        variants_ = ("gradient", "mvr", "page", "finite_mvr")
+        sigmas = (0.0, 0.5, 1.0)
+        buffers = (None, 0.5, 0.25)
+    prob = make_paper_problem(setting="finite_sum", n=n, m=m, d=d)
+    s_cohort = max(2, n // 4)
+
+    print("# async runtime: buffered first-K vs full barrier "
+          "(virtual wall-clock)")
+    rows, ok = [], True
+    for variant in variants_:
+        for sigma in sigmas:
+            base = None
+            for frac in buffers:
+                cell = run_cell(prob, variant, sigma, frac, rounds,
+                                s_cohort)
+                if frac is None:
+                    base = cell["t_virtual"]
+                speed = base / cell["t_virtual"]
+                tag = "barrier" if frac is None else f"K={frac:.2f}s"
+                cell.update(variant=variant, sigma=sigma, buffer=tag,
+                            speedup=speed)
+                rows.append(cell)
+                print(f"  async,{variant},sigma={sigma},{tag},"
+                      f"t_virtual={cell['t_virtual']:.1f},"
+                      f"speedup={speed:.2f},gnorm={cell['gnorm']:.3e},"
+                      f"s_mean={cell['s_mean']:.2f},"
+                      f"util={cell['util']:.2f}")
+                # acceptance: under heterogeneity, not waiting for the
+                # stragglers must be faster than waiting for them
+                if sigma > 0 and frac is not None:
+                    ok &= speed > 1.0
+    # AssertionError (not SystemExit) so benchmarks/run.py's failure
+    # handling records this suite and still runs the rest
+    assert ok, ("buffered first-K failed to beat the barrier under "
+                "latency heterogeneity")
+    print("OK: buffered-first-K beats the full barrier under "
+          "heterogeneity")
+    yield rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shapes / fewer cells — the CI row")
+    args = ap.parse_args()
+    list(main(quick=args.smoke))

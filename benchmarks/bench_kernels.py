@@ -27,7 +27,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ref
-from repro.kernels.ops import (dasha_page_h_update_op,
+from repro.kernels.ops import (buffered_commit_op,
+                               dasha_page_h_update_op,
                                dasha_page_payload_blocks_op,
                                dasha_page_update_op,
                                dasha_payload_blocks_op, dasha_tail_op,
@@ -178,6 +179,22 @@ def run(d: int = 1 << 20, n: int = 8, quick: bool = False):
         ideal=ideal,
         err=_max_err([pcfus(gn, go, pbn, pbo, h, gi, coin1)],
                      [pcunf(gn, go, pbn, pbo, h, gi, coin1)]),
+        interpret=interpret))
+
+    # -- async buffered commit (K-arrival buffer -> server g, §9) --------
+    K = n
+    gsrv, mbuf = mk(40, (d,)), mk(41, (K, d))
+    wts = jnp.abs(mk(42, (K,)))
+    cunf2 = lambda g_, m_, w_: g_ + (w_ @ m_) / float(n)
+    cfus2 = lambda g_, m_, w_: buffered_commit_op(g_, m_, w_, n_nodes=n)
+    ideal = (K + 2) * d * 4.0      # K buffer rows + g read + g write
+    rows.append(_row(
+        "buffered_commit(async)",
+        t_unfused=timeit(jax.jit(cunf2), gsrv, mbuf, wts),
+        t_fused=None if interpret else timeit(jax.jit(cfus2), gsrv, mbuf,
+                                              wts),
+        b_unfused=hlo_bytes(cunf2, gsrv, mbuf, wts), ideal=ideal,
+        err=_max_err([cfus2(gsrv, mbuf, wts)], [cunf2(gsrv, mbuf, wts)]),
         interpret=interpret))
 
     hkw = dict(b=kw["b"], pa=kw["pa"], p_page=0.125)

@@ -30,14 +30,16 @@ def main() -> None:
     args, _ = ap.parse_known_args()
     quick = not args.full
 
-    from benchmarks import (bench_batch_effect, bench_comm, bench_kernels,
-                            bench_methods, bench_pa_sweep, roofline)
+    from benchmarks import (bench_async, bench_batch_effect, bench_comm,
+                            bench_kernels, bench_methods, bench_pa_sweep,
+                            roofline)
     suites = {
         "pa_sweep": bench_pa_sweep.main,
         "methods": bench_methods.main,
         "comm": bench_comm.main,
         "batch_effect": bench_batch_effect.main,
         "kernels": bench_kernels.main,
+        "async": bench_async.main,
         "roofline": roofline.main,
     }
     if args.only:

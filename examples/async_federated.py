@@ -1,0 +1,96 @@
+"""Async federated DASHA-PP: time-to-accuracy instead of
+rounds-to-accuracy (DESIGN.md §9).
+
+A heterogeneous fleet (lognormal compute, bandwidth-proportional
+uplink, dropouts) runs DASHA-PP-MVR under three server policies:
+
+* full barrier            — wait for the whole sampled cohort,
+* buffered first-K        — commit the first K arrivals per step,
+* buffered + dropouts     — same, with 10% of jobs lost and rejoining.
+
+Same dispatch budget everywhere; what changes is how long the virtual
+clock says it took and how stale the committed work is.
+
+    PYTHONPATH=src python examples/async_federated.py [--smoke]
+
+Writes trajectories + staleness histograms to results/async/.
+"""
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (LogisticSigmoidProblem, RandK, SNice,
+                        make_synthetic_classification)
+from repro.core.dasha_pp import DashaPPConfig
+from repro.fl import AsyncConfig, AsyncDashaServer, LognormalLatency
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="few rounds (CI)")
+    ap.add_argument("--out", default="results/async")
+    args = ap.parse_args()
+
+    n, m, d = 20, 12, 60
+    rounds = 60 if args.smoke else 600
+    feats, y = make_synthetic_classification(jax.random.key(0), n, m, d)
+    prob = LogisticSigmoidProblem(feats, y)
+    comp = RandK(k=d // 20)
+    samp = SNice(n=n, s=10)                 # 50% cohort per round
+    cfg = DashaPPConfig("mvr", gamma=0.05, a=0.1, b=0.3, batch_size=2)
+    lat = lambda drop: LognormalLatency(
+        compute_s=1.0, sigma=0.8, client_sigma=0.8,
+        bandwidth_bps=2e5, bandwidth_sigma=0.4,
+        dropout=drop, rejoin_s=4.0, seed=11)
+
+    policies = {
+        "barrier": (AsyncConfig(buffer_size=None), lat(0.0)),
+        "first-5": (AsyncConfig(buffer_size=5), lat(0.0)),
+        "first-5+dropout": (AsyncConfig(buffer_size=5, max_staleness=20),
+                            lat(0.10)),
+    }
+    os.makedirs(args.out, exist_ok=True)
+    results, t_barrier = {}, None
+    for name, (acfg, latency) in policies.items():
+        srv = AsyncDashaServer(prob, comp, samp, cfg, acfg, latency)
+        _, res = srv.run(jax.random.key(1), jnp.zeros(d), rounds)
+        if name == "barrier":
+            t_barrier = res.total_time
+        results[name] = {
+            "t_virtual": res.total_time,
+            "speedup_vs_barrier": t_barrier / res.total_time,
+            "final_gnorm_sq": float(np.median(
+                res.grad_norm_sq[-max(1, rounds // 10):])),
+            "staleness_hist": {str(k): v
+                               for k, v in res.staleness_hist.items()},
+            "utilization_mean": float(np.mean(res.utilization)),
+            "dropped": res.dropped,
+            "mbits_on_wire": res.bits_cum[-1] / 1e6,
+            "time": res.time[:: max(1, rounds // 100)].tolist(),
+            "grad_norm_sq": res.grad_norm_sq[
+                :: max(1, rounds // 100)].tolist(),
+        }
+        r = results[name]
+        print(f"{name:16s} t={r['t_virtual']:8.1f}s "
+              f"({r['speedup_vs_barrier']:.2f}x)  "
+              f"gnorm^2={r['final_gnorm_sq']:.3e}  "
+              f"util={r['utilization_mean']:.2f}  "
+              f"dropped={r['dropped']}  "
+              f"stale[s>0]={sum(v for k, v in res.staleness_hist.items() if k > 0)}")
+
+    assert results["first-5"]["speedup_vs_barrier"] > 1.0, \
+        "buffered first-K should beat the barrier on this fleet"
+    with open(os.path.join(args.out, "async_federated.json"), "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"\nwrote {args.out}/async_federated.json")
+    print("OK: same dispatch budget, wall-clock set by the K-th "
+          "arrival, not the slowest straggler")
+
+
+if __name__ == "__main__":
+    main()

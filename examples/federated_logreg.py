@@ -11,12 +11,17 @@ Writes per-method gradient-norm trajectories to results/federated/.
 import argparse
 import json
 import os
+import sys
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import (constants_of, gamma_grid_around,
+# repo root (for benchmarks.common) — the example lives in examples/
+sys.path.insert(
+    0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.common import (constants_of, gamma_grid_around,  # noqa: E402
                                make_paper_problem, run_method)
 from repro.core import (Frecon, FreconConfig, Marina, MarinaConfig, RandK,
                         SNice, dasha_page, dasha_pp_page, theory)

@@ -54,6 +54,23 @@ class StepMetrics(NamedTuple):
     x_norm: Array              # ||x^t|| — detects escape to flat tails
 
 
+class DispatchOutputs(NamedTuple):
+    """Everything one round of client work produces BEFORE the server
+    applies it (Alg. 1 lines 4-11).  The sync :meth:`DashaPP.step`
+    commits all of it immediately; the async runtime
+    (:mod:`repro.fl.server`) defers each node's row to its virtual
+    arrival time — both consume this same dispatch, which is what makes
+    the async sync-limit parity a structural property rather than a
+    reimplementation (DESIGN.md §9)."""
+    x_new: Array          # (d,)   x^{t+1}
+    mask: Array           # (n,)   participation indicator
+    m_i: Array            # (n, d) compressed uplink messages (masked)
+    h_new: Array          # (n, d) tracker step (rows of non-participants
+    #        equal the old h_i — line 10's mask is already applied)
+    h_ij_delta: Optional[Array]   # (n, m, d) component-tracker increment
+    oracle_calls: Array
+
+
 @dataclasses.dataclass(frozen=True)
 class DashaPPConfig:
     variant: str                      # gradient | page | finite_mvr | mvr
@@ -107,8 +124,13 @@ class DashaPP:
             step=jnp.zeros((), jnp.int32))
 
     # ------------------------------------------------------------------
-    def step(self, key: Array, state: DashaPPState
-             ) -> Tuple[DashaPPState, StepMetrics]:
+    def dispatch(self, key: Array, state: DashaPPState,
+                 mask: Optional[Array] = None) -> DispatchOutputs:
+        """Alg. 1 lines 4-11: the model broadcast and all client-side
+        work of one round, WITHOUT applying it to the server estimators.
+        ``mask`` overrides the sampler draw (the async runtime passes
+        ``sampled & idle``); ``None`` draws from ``self.sampler`` with
+        the canonical ``k_part`` — exactly what :meth:`step` commits."""
         p, cfg, C = self.problem, self.cfg, self.compressor
         rule = variants.get_rule(cfg.variant)
         pa = self.sampler.p_a
@@ -118,7 +140,8 @@ class DashaPP:
         x_new = state.x - cfg.gamma * state.g
 
         # Lines 7-8: participation mask.
-        mask = self.sampler.sample(k_part)             # (n,) bool
+        if mask is None:
+            mask = self.sampler.sample(k_part)         # (n,) bool
         maskf = mask[:, None].astype(state.x.dtype)
 
         # Line 9 oracles: the rule evaluates what it needs (full pair /
@@ -145,9 +168,9 @@ class DashaPP:
             h_new, payload = variants.control_variate_tail(
                 k_i, state.h_i, state.g_i, a=cfg.a, pa=pa, part=maskf)
 
-        h_ij_new = None
+        h_ij_delta = None
         if rule.component_trackers:
-            h_ij_new = state.h_ij + maskf[:, :, None] * (k_ij / pa)
+            h_ij_delta = maskf[:, :, None] * (k_ij / pa)
 
         # Line 11: m_i = C_i(payload).  Node i's key is the leaf-0 key of
         # the shared derivation (Assumption 7; matches the sharded
@@ -158,21 +181,36 @@ class DashaPP:
         m_i = jax.vmap(C.compress)(node_keys, payload)
         m_i = maskf * m_i
 
-        # Lines 12, 19.
-        g_i_new = state.g_i + m_i
-        g_new = state.g + jnp.mean(m_i, axis=0)
+        return DispatchOutputs(x_new=x_new, mask=mask, m_i=m_i,
+                               h_new=h_new, h_ij_delta=h_ij_delta,
+                               oracle_calls=calls)
 
-        n_part = jnp.sum(mask)
+    # ------------------------------------------------------------------
+    def step(self, key: Array, state: DashaPPState
+             ) -> Tuple[DashaPPState, StepMetrics]:
+        p, C = self.problem, self.compressor
+        out = self.dispatch(key, state)
+
+        # Lines 12, 19: the synchronous commit — every dispatched row
+        # lands in the same round it was produced.
+        g_i_new = state.g_i + out.m_i
+        g_new = state.g + jnp.mean(out.m_i, axis=0)
+        h_ij_new = None
+        if out.h_ij_delta is not None:
+            h_ij_new = state.h_ij + out.h_ij_delta
+
+        n_part = jnp.sum(out.mask)
         metrics = StepMetrics(
             loss=p.loss(state.x),
             grad_norm_sq=jnp.sum(p.full_grad(state.x) ** 2),
             bits_sent=n_part * C.wire_bits(p.d),
-            grad_oracle_calls=calls,
+            grad_oracle_calls=out.oracle_calls,
             participants=n_part,
             x_norm=jnp.linalg.norm(state.x),
         )
-        new_state = DashaPPState(x=x_new, g=g_new, g_i=g_i_new, h_i=h_new,
-                                 h_ij=h_ij_new, step=state.step + 1)
+        new_state = DashaPPState(x=out.x_new, g=g_new, g_i=g_i_new,
+                                 h_i=out.h_new, h_ij=h_ij_new,
+                                 step=state.step + 1)
         return new_state, metrics
 
     # ------------------------------------------------------------------

@@ -101,6 +101,16 @@ class ShardedDashaConfig:
     # "finite_mvr" component gradients + indices and h_ij state.
     variant: str = "mvr"
     p_page: float = 1.0            # page only: full-pass probability
+    # Wire format of the sparse_allgather aggregation (DESIGN.md §8):
+    #   block_randk — kb of nb (block_size,)-blocks, unbiased (default);
+    #   topk        — ceil(ratio * d_local) largest coordinates (biased
+    #                 baseline; coordinate-level (value, index) wire);
+    #   dithering   — QSGD random dithering: dense but quantized to
+    #                 ``dithering_levels`` levels (+ norm); the ratio is
+    #                 ignored for the wire size but must stay non-None
+    #                 to enable the compressed path.
+    wire_format: str = "block_randk"
+    dithering_levels: int = 4
     # Dispatch the fused Pallas update path (kernels/, DESIGN.md §6) in
     # every aggregation mode.  sparse_allgather additionally fuses
     # BlockRandK into the update: the line-11 payload is evaluated only
@@ -112,6 +122,22 @@ class ShardedDashaConfig:
 
     def __post_init__(self):
         variants.get_rule(self.variant)   # raises on unknown names
+        if self.wire_format not in variants.WIRE_FORMATS:
+            raise ValueError(
+                f"unknown wire_format {self.wire_format!r}; choose from "
+                f"{sorted(variants.WIRE_FORMATS)}")
+        if self.wire_format != "block_randk":
+            if self.aggregation != "sparse_allgather":
+                raise ValueError(
+                    f"wire_format {self.wire_format!r} requires the "
+                    "sparse_allgather aggregation (dense_psum moves "
+                    "dense vectors regardless)")
+            if self.compression_ratio is None:
+                raise ValueError(
+                    f"wire_format {self.wire_format!r} requires a "
+                    "non-None compression_ratio — ratio None is the "
+                    "dense uncompressed baseline and would silently "
+                    "bypass the requested wire format")
 
     @property
     def compressed(self) -> bool:
@@ -226,15 +252,29 @@ class ShardedDasha:
             g=g0, g_i=grads0, h_i=grads0,
             step=jnp.zeros((), jnp.int32), h_ij=h_ij0)
 
-    def init_zero(self, params: PyTree) -> ShardedDashaState:
+    def init_zero(self, params: PyTree,
+                  num_components: Optional[int] = None
+                  ) -> ShardedDashaState:
         """Zero-initialized variant (g_i^0 = h_i^0 = 0) — admissible for
         MVR (Theorem 4 allows any h^0; adds a transient O(||∇f(x^0)||²/bT)
-        term).  Cheaper when an extra init pass is undesirable."""
+        term).  Cheaper when an extra init pass is undesirable.
+        ``finite_mvr`` additionally zero-inits the (n, m, *shape)
+        component trackers; pass ``num_components`` = m."""
         zeros_node = jax.tree.map(
             lambda p: jnp.zeros((self.n_nodes,) + p.shape, p.dtype), params)
         zeros = jax.tree.map(lambda p: jnp.zeros_like(p), params)
+        h_ij = None
+        if self.rule.component_trackers:
+            if num_components is None:
+                raise ValueError(
+                    f"variant {self.cfg.variant!r} needs num_components "
+                    "(= m) to size the h_ij trackers")
+            h_ij = jax.tree.map(
+                lambda p: jnp.zeros(
+                    (self.n_nodes, num_components) + p.shape, p.dtype),
+                params)
         return ShardedDashaState(g=zeros, g_i=zeros_node, h_i=zeros_node,
-                                 step=jnp.zeros((), jnp.int32))
+                                 step=jnp.zeros((), jnp.int32), h_ij=h_ij)
 
     # -- server ----------------------------------------------------------
     def server_step(self, params: PyTree, state: ShardedDashaState) -> PyTree:
@@ -271,7 +311,9 @@ class ShardedDasha:
             total += shards * variants.message_bits(
                 max(1, d_leaf // shards), aggregation=cfg.aggregation,
                 compression_ratio=cfg.compression_ratio,
-                block_size=cfg.block_size)
+                block_size=cfg.block_size,
+                wire_format=cfg.wire_format,
+                dithering_levels=cfg.dithering_levels)
         return total
 
     # -- participation ----------------------------------------------------
@@ -413,19 +455,22 @@ class ShardedDasha:
 
                 lkey = variants.leaf_node_key(k_comp, li, node_idx)
 
-                def jnp_update(ox=ox, fh=fh, fgi=fgi):
-                    """Lines 9-11 over the full local vector (jnp)."""
+                def dense_update(ox=ox, fh=fh, fgi=fgi):
+                    """Lines 9-11 over the full local vector (fused
+                    Pallas or jnp) -> (h_new, dense payload).  Every
+                    wire below consumes this EXCEPT the BlockRandK
+                    sparse path, whose fused form evaluates the payload
+                    only at the selected blocks."""
+                    if cfg.use_pallas:
+                        return rule.fused_flat(ox, fh, fgi, partf,
+                                               interpret=interp, **hp)
                     k = rule.k(ox, fh, b=cfg.b, p_page=cfg.p_page)
                     return variants.control_variate_tail(
                         k, fh, fgi, a=cfg.a, pa=pa, part=partf)
 
                 # ---- lines 10-11 + compress + aggregate --------------
                 if cfg.compression_ratio is None:
-                    if cfg.use_pallas:
-                        fh_new, payload = rule.fused_flat(
-                            ox, fh, fgi, partf, interpret=interp, **hp)
-                    else:
-                        fh_new, payload = jnp_update()
+                    fh_new, payload = dense_update()
                     m_i = partf * payload
                     total = jax.lax.psum(m_i, data_axes)
                     delta = total / self.n_nodes
@@ -436,16 +481,45 @@ class ShardedDasha:
                     # The compress step is already dense here, so
                     # BlockRandK has no traffic to save and stays jnp
                     # in both paths.
-                    if cfg.use_pallas:
-                        fh_new, payload = rule.fused_flat(
-                            ox, fh, fgi, partf, interpret=interp, **hp)
-                    else:
-                        fh_new, payload = jnp_update()
+                    fh_new, payload = dense_update()
                     m_i = partf * block_randk_dense(lkey, payload, kb, bs)
                     total = jax.lax.psum(m_i, data_axes)
                     delta = total / self.n_nodes
                     fgi_new = fgi + m_i
-                else:  # sparse_allgather — the communication saving
+                elif cfg.wire_format == "topk":
+                    # Coordinate-level TopK wire: ceil(ratio * d_local)
+                    # largest-|payload| coordinates as (value, index)
+                    # pairs.  Biased baseline — needs the dense payload,
+                    # so the fused path stops at the update (no
+                    # never-materialize win to fuse into).
+                    from repro.core.compressors import TopK
+                    kk = max(1, min(d_loc, math.ceil(
+                        cfg.compression_ratio * d_loc)))
+                    fh_new, payload = dense_update()
+                    vals, cidx = TopK(k=kk).compress_sparse(lkey, payload)
+                    vals = partf * vals
+                    all_vals = jax.lax.all_gather(vals, data_axes,
+                                                  tiled=False)
+                    all_idx = jax.lax.all_gather(cidx, data_axes,
+                                                 tiled=False)
+                    delta = jnp.zeros_like(fg).at[
+                        all_idx.reshape(-1)].add(
+                        all_vals.reshape(-1)) / self.n_nodes
+                    fgi_new = fgi.at[cidx].add(vals)
+                elif cfg.wire_format == "dithering":
+                    # QSGD wire: dense message, quantized coordinates.
+                    # The all-gather carries what the server would
+                    # decode from (norm, sign, level) packets.
+                    from repro.core.compressors import RandomDithering
+                    q = RandomDithering(s=cfg.dithering_levels)
+                    fh_new, payload = dense_update()
+                    m_i = partf * q.compress(lkey, payload)
+                    all_m = jax.lax.all_gather(m_i, data_axes,
+                                               tiled=False)
+                    delta = jnp.sum(all_m.reshape(-1, d_loc),
+                                    axis=0) / self.n_nodes
+                    fgi_new = fgi + m_i
+                else:  # sparse_allgather, BlockRandK — the paper's wire
                     bs, nb, kb = block_plan(d_loc, cfg.block_size,
                                             cfg.compression_ratio)
                     if cfg.use_pallas:
@@ -460,7 +534,7 @@ class ShardedDasha:
                             ox, fh, fgi, partf, bidx, scale=nb / kb,
                             block_size=bs, interpret=interp, **hp)
                     else:
-                        fh_new, payload = jnp_update()
+                        fh_new, payload = dense_update()   # jnp here
                         vals, bidx = block_randk_select(lkey, payload,
                                                         kb, bs)
                     vals = partf * vals
@@ -518,4 +592,6 @@ class ShardedDasha:
         return variants.uplink_bits_per_node(
             d_total, aggregation=cfg.aggregation,
             compression_ratio=cfg.compression_ratio,
-            block_size=cfg.block_size, p_a=cfg.p_a)
+            block_size=cfg.block_size, p_a=cfg.p_a,
+            wire_format=cfg.wire_format,
+            dithering_levels=cfg.dithering_levels)

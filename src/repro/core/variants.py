@@ -194,30 +194,51 @@ def block_randk_dense(key: Array, flat: Array, k_blocks: int,
 FLOAT_BITS = 32.0
 INDEX_BITS = 32.0
 
+WIRE_FORMATS = ("block_randk", "topk", "dithering")
+
 
 def message_bits(d: int, *, aggregation: str,
                  compression_ratio: Optional[float],
-                 block_size: int) -> float:
+                 block_size: int, wire_format: str = "block_randk",
+                 dithering_levels: int = 4) -> float:
     """Uplink bits one participating node pays to send one ``d``-leaf
-    message.  Only ``sparse_allgather`` has a sparse wire format:
+    message.  Only ``sparse_allgather`` has a compressed wire format:
     ``dense_psum`` all-reduces *dense* vectors (the BlockRandK zeros
     still cross the wire) and ``compression_ratio=None`` is the
-    uncompressed baseline."""
+    uncompressed baseline.  Wire formats (``ShardedDashaConfig.
+    wire_format``):
+
+    * ``block_randk`` — kb blocks of (bs values + 1 index);
+    * ``topk``        — ceil(ratio*d) coordinate (value, index) pairs;
+    * ``dithering``   — dense but quantized: one ||x|| float plus
+      sign+level bits per coordinate (the ratio is ignored — the
+      saving is bits-per-coordinate, not sparsity).
+    """
     if compression_ratio is None or aggregation != "sparse_allgather":
         return d * FLOAT_BITS
+    if wire_format == "dithering":
+        return FLOAT_BITS + d * (
+            1 + math.ceil(math.log2(dithering_levels + 1)))
+    if wire_format == "topk":
+        k = max(1, math.ceil(compression_ratio * d))
+        return k * (FLOAT_BITS + INDEX_BITS)
     bs, _, kb = block_plan(d, block_size, compression_ratio)
     return kb * (bs * FLOAT_BITS + INDEX_BITS)
 
 
 def uplink_bits_per_node(d_total: int, *, aggregation: str,
                          compression_ratio: Optional[float],
-                         block_size: int, p_a: float = 1.0) -> float:
+                         block_size: int, p_a: float = 1.0,
+                         wire_format: str = "block_randk",
+                         dithering_levels: int = 4) -> float:
     """Expected uplink bits per node per round (Tables 1-2 metric):
     a node participates with probability ``p_a`` and then pays
     :func:`message_bits`."""
     return p_a * message_bits(d_total, aggregation=aggregation,
                               compression_ratio=compression_ratio,
-                              block_size=block_size)
+                              block_size=block_size,
+                              wire_format=wire_format,
+                              dithering_levels=dithering_levels)
 
 
 # ----------------------------------------------------------------------
@@ -414,9 +435,11 @@ class FiniteMvrRule(VariantRule):
     oracle = ("component gradient pair at a without-replacement "
               "minibatch, scattered over (m,) trackers")
     component_trackers = True
-    # Needs per-component trackers h_ij of shape (n, m, *param) — only
-    # meaningful for problem-scale runs, not the LM trainer.
-    trainer_supported = False
+    # Needs per-component trackers h_ij of shape (n, m, *param): the LM
+    # trainer treats each node's (fixed) batch examples as the m
+    # components and threads (n, B, *param) per-example gradients +
+    # component_idx through the engine (training/trainer.py).
+    trainer_supported = True
 
     def k(self, ox, h, *, b, p_page=1.0):
         return ox.k

@@ -1,0 +1,20 @@
+"""repro.fl — event-driven asynchronous federated runtime (DESIGN.md §9).
+
+Layout:
+    events.py    deterministic virtual-time event queue (replayable log)
+    latency.py   per-client latency models (constant, lognormal,
+                 bandwidth-proportional network, dropout/rejoin)
+    server.py    AsyncDashaServer: buffered first-K, staleness-aware
+                 DASHA-PP over the shared variant-rule layer
+"""
+from repro.fl.events import ARRIVAL, REJOIN, Event, EventQueue
+from repro.fl.latency import (ConstantLatency, JobTiming, LatencyModel,
+                              LognormalLatency, make_latency)
+from repro.fl.server import AsyncConfig, AsyncDashaServer, AsyncRunResult
+
+__all__ = [
+    "ARRIVAL", "REJOIN", "Event", "EventQueue",
+    "ConstantLatency", "JobTiming", "LatencyModel", "LognormalLatency",
+    "make_latency",
+    "AsyncConfig", "AsyncDashaServer", "AsyncRunResult",
+]

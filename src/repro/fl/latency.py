@@ -1,0 +1,122 @@
+"""Per-client latency models for the async federated runtime.
+
+A model prices one dispatched job in *virtual seconds*:
+
+    compute_s  — local gradient/compression work,
+    network_s  — ``uplink_bits / bandwidth``, with the bits coming from
+                 the engine's wire accounting (``Compressor.wire_bits``,
+                 which delegates to :func:`repro.core.variants.
+                 message_bits` for the sharded wire formats) — so the
+                 communication savings the paper claims show up as
+                 virtual wall-clock, not just counters,
+    dropped    — the client accepted the job but never delivers
+                 (network partition / preemption); it rejoins the idle
+                 pool ``rejoin_s`` after its compute would have ended.
+
+Determinism: every draw comes from ``np.random.default_rng((seed,
+client, dispatch_idx))`` — keyed by *position*, not call order — so a
+replay with the same seed prices every job identically regardless of
+event interleaving (the replay contract of DESIGN.md §9).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class JobTiming:
+    compute_s: float
+    network_s: float
+    dropped: bool
+    rejoin_s: float
+
+
+@dataclasses.dataclass(frozen=True)
+class LatencyModel:
+    """Base: constant compute, optional bandwidth and dropout — the
+    zero-jitter sync limit when left at defaults."""
+
+    compute_s: float = 1.0
+    bandwidth_bps: Optional[float] = None   # None => network time 0
+    dropout: float = 0.0                    # Prob(job never arrives)
+    rejoin_s: float = 5.0                   # idle-again delay after a drop
+    seed: int = 0
+
+    def _rng(self, client: int, dispatch_idx: int) -> np.random.Generator:
+        return np.random.default_rng(
+            (self.seed, int(client), int(dispatch_idx)))
+
+    # -- hooks subclasses override ------------------------------------
+    def _compute(self, client: int, rng: np.random.Generator) -> float:
+        return self.compute_s
+
+    def _bandwidth(self, client: int) -> Optional[float]:
+        return self.bandwidth_bps
+
+    # -- the API the event loop consumes ------------------------------
+    def job(self, client: int, dispatch_idx: int,
+            uplink_bits: float) -> JobTiming:
+        rng = self._rng(client, dispatch_idx)
+        compute = float(self._compute(client, rng))
+        bw = self._bandwidth(client)
+        network = float(uplink_bits / bw) if bw else 0.0
+        dropped = bool(self.dropout > 0.0
+                       and rng.random() < self.dropout)
+        return JobTiming(compute_s=compute, network_s=network,
+                         dropped=dropped, rejoin_s=self.rejoin_s)
+
+
+@dataclasses.dataclass(frozen=True)
+class ConstantLatency(LatencyModel):
+    """Alias for the base model: every client takes exactly
+    ``compute_s`` — the sync-limit anchor of the parity tests."""
+
+
+@dataclasses.dataclass(frozen=True)
+class LognormalLatency(LatencyModel):
+    """Heterogeneous fleet: client ``i``'s speed is a *fixed* lognormal
+    multiplier (slow phones stay slow), and each dispatch adds lognormal
+    jitter on top.  ``sigma`` controls per-dispatch jitter,
+    ``client_sigma`` the persistent spread across the fleet,
+    ``bandwidth_sigma`` the spread of per-client uplink bandwidth."""
+
+    sigma: float = 0.5
+    client_sigma: float = 0.5
+    bandwidth_sigma: float = 0.0
+
+    # Salts live far above any dispatch index, so per-client persistent
+    # draws never collide with per-dispatch streams.
+    _SALT_COMPUTE = 2 ** 62
+    _SALT_BANDWIDTH = 2 ** 62 + 1
+
+    def _client_scale(self, client: int, sigma: float,
+                      salt: int) -> float:
+        rng = np.random.default_rng((self.seed, int(client), salt))
+        return float(np.exp(sigma * rng.standard_normal()))
+
+    def _compute(self, client: int, rng: np.random.Generator) -> float:
+        persistent = self._client_scale(client, self.client_sigma,
+                                        salt=self._SALT_COMPUTE)
+        jitter = float(np.exp(self.sigma * rng.standard_normal()
+                              - 0.5 * self.sigma ** 2))
+        return self.compute_s * persistent * jitter
+
+    def _bandwidth(self, client: int) -> Optional[float]:
+        if self.bandwidth_bps is None:
+            return None
+        if self.bandwidth_sigma == 0.0:
+            return self.bandwidth_bps
+        return self.bandwidth_bps / self._client_scale(
+            client, self.bandwidth_sigma, salt=self._SALT_BANDWIDTH)
+
+
+def make_latency(name: str, **kwargs) -> LatencyModel:
+    if name == "constant":
+        return ConstantLatency(**kwargs)
+    if name == "lognormal":
+        return LognormalLatency(**kwargs)
+    raise ValueError(f"unknown latency model {name!r}; "
+                     "choose from ['constant', 'lognormal']")

@@ -1,0 +1,297 @@
+"""AsyncDashaServer: buffered, staleness-aware DASHA-PP over virtual
+time (DESIGN.md §9).
+
+The sync engines wait for every sampled node each round; this server
+does not.  One *dispatch* is exactly :meth:`repro.core.dasha_pp.DashaPP.
+dispatch` — Alg. 1 lines 4-11 through the shared variant-rule layer and
+fused kernels — but the per-node results are delivered by the event
+queue at their latency-priced virtual arrival times, and the server
+commits a buffer of the **first K arrivals** per step (FedBuff-style;
+``buffer_size=None`` waits for the full cohort = the barrier baseline).
+
+Staleness: a contribution dispatched at round ``r`` and committed at
+round ``t`` has staleness ``s = t - r``.  Its compressed increment is
+applied with weight ``w(s) = (1 + s) ** -staleness_exponent`` to BOTH
+``g_i`` and ``g`` (preserving the ``g = mean_i g_i`` estimator
+invariant); the node trackers ``h_i`` (and ``h_ij``) are applied
+unweighted — they are the *client's* local state, already computed.
+Contributions older than ``max_staleness`` are discarded whole.
+
+Sync-limit parity contract (tests/test_fl.py): zero latency jitter +
+``buffer_size`` = cohort size ⇒ every dispatch commits in its own round
+with ``s = 0`` and ``w = 1``, and the trajectory equals
+:meth:`DashaPP.run` allclose for all four variants — the async runtime
+is an anchored generalization, not a fork.
+
+Participation is an *arrival process*: each round the existing
+:class:`~repro.core.participation.ParticipationSampler` draws the
+cohort with the canonical ``k_part`` key; sampled-but-busy clients
+(still computing, or dropped and awaiting rejoin) skip the round,
+which the trace records.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import Counter
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import variants
+from repro.core.compressors import Compressor
+from repro.core.dasha_pp import DashaPP, DashaPPConfig, DashaPPState
+from repro.core.participation import ParticipationSampler
+from repro.fl.events import ARRIVAL, REJOIN, EventQueue
+from repro.fl.latency import LatencyModel
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncConfig:
+    """Server-side async policy (the latency model is runtime, not
+    config)."""
+    buffer_size: Optional[int] = None   # K arrivals per step; None=barrier
+    staleness_exponent: float = 0.5     # w(s) = (1+s)^-rho (FedBuff uses 1/2)
+    max_staleness: Optional[int] = None  # discard contributions older
+    use_pallas: bool = False            # buffered-commit kernel (ops.py)
+
+    def __post_init__(self):
+        if self.buffer_size is not None and self.buffer_size < 1:
+            raise ValueError("buffer_size must be >= 1 (or None)")
+
+
+class _Job(NamedTuple):
+    round_idx: int
+    m: np.ndarray          # (d,) compressed message
+    h: np.ndarray          # (d,) tracker row after the client's update
+    hij: Optional[np.ndarray]   # (m, d) component-tracker delta
+
+
+@dataclasses.dataclass
+class AsyncRunResult:
+    """Per-server-step trajectories + end-of-run trace aggregates."""
+    time: np.ndarray            # virtual wall-clock after each commit
+    loss: np.ndarray            # f(x) after each commit
+    grad_norm_sq: np.ndarray    # ||∇f(x)||² after each commit
+    committed: np.ndarray       # arrivals applied per step
+    participants: np.ndarray    # dispatched cohort size per round
+    skipped_busy: np.ndarray    # sampled-but-busy clients per round
+    staleness_mean: np.ndarray
+    staleness_max: np.ndarray
+    bits_cum: np.ndarray        # cumulative uplink bits on the wire
+    staleness_hist: Dict[int, int]
+    utilization: np.ndarray     # (n,) busy-fraction of virtual time
+    dropped: int                # jobs lost to dropout
+    discarded_stale: int        # arrivals beyond max_staleness
+    total_time: float
+    event_log: List[Tuple[float, int, str, int, int]]
+
+
+class AsyncDashaServer:
+    """Event-driven DASHA-PP.  ``run(key, x0, num_rounds)`` plays the
+    whole schedule and returns ``(final_state, AsyncRunResult)``."""
+
+    def __init__(self, problem, compressor: Compressor,
+                 sampler: ParticipationSampler, config: DashaPPConfig,
+                 async_config: AsyncConfig, latency: LatencyModel):
+        self.engine = DashaPP(problem, compressor, sampler, config)
+        self.problem = problem
+        self.compressor = compressor
+        self.sampler = sampler
+        self.cfg = config
+        self.acfg = async_config
+        self.latency = latency
+        self.rule = variants.get_rule(config.variant)
+        self._dispatch = jax.jit(self.engine.dispatch)
+        self._commit = jax.jit(self._commit_impl)
+        self._measure = jax.jit(
+            lambda x: (problem.loss(x),
+                       jnp.sum(problem.full_grad(x) ** 2)))
+
+    # -- the buffered server step (fixed capacity n: pad with valid=0) --
+    def _commit_impl(self, state: DashaPPState, idx: Array, valid: Array,
+                     w: Array, m_rows: Array, h_rows: Array,
+                     hij_rows: Optional[Array]) -> DashaPPState:
+        n = self.problem.n
+        wv = w * valid
+        if self.acfg.use_pallas:
+            from repro.kernels import ops
+            g = ops.buffered_commit_op(state.g, m_rows, wv,
+                                       n_nodes=n).astype(state.g.dtype)
+        else:
+            g = state.g + (wv @ m_rows) / n
+        # Scatter-adds are duplicate-safe (padding rows carry weight 0);
+        # the tracker "set" is expressed as a masked delta-add for the
+        # same reason.
+        g_i = state.g_i.at[idx].add(wv[:, None] * m_rows)
+        h_i = state.h_i.at[idx].add(
+            valid[:, None] * (h_rows - state.h_i[idx]))
+        h_ij = state.h_ij
+        if hij_rows is not None:
+            h_ij = state.h_ij.at[idx].add(valid[:, None, None] * hij_rows)
+        return state._replace(g=g, g_i=g_i, h_i=h_i, h_ij=h_ij)
+
+    # -- the event loop -------------------------------------------------
+    def run(self, key: Array, x0: Array, num_rounds: int,
+            b_init: Optional[int] = None
+            ) -> Tuple[DashaPPState, AsyncRunResult]:
+        n, d = self.problem.n, self.problem.d
+        K = self.acfg.buffer_size
+        rho = self.acfg.staleness_exponent
+        has_hij = self.rule.component_trackers
+        wire_bits = float(self.compressor.wire_bits(d))
+
+        init_key, run_key = jax.random.split(key)
+        state = self.engine.init(init_key, x0, b_init=b_init)
+
+        q = EventQueue()
+        now = 0.0
+        idle = np.ones(n, bool)
+        jobs: Dict[int, _Job] = {}
+        outstanding = 0               # undelivered ARRIVAL events
+        # (client, start, duration) busy windows — clipped to the final
+        # virtual clock at the end, so utilization stays in [0, 1] even
+        # when a dropped job's window outlives the run
+        busy: List[Tuple[int, float, float]] = []
+        bits_total = 0.0
+        dropped = discarded = 0
+        hist: Counter = Counter()
+        rows: List[Dict[str, Any]] = []
+
+        def collect(target: int):
+            """Pop events until ``target`` arrivals are in hand (rejoins
+            processed inline); returns the arrival events."""
+            nonlocal now, outstanding
+            got = []
+            while len(got) < target:
+                ev = q.pop()
+                now = max(now, ev.time)
+                if ev.kind == REJOIN:
+                    idle[ev.client] = True
+                    continue
+                outstanding -= 1
+                got.append(ev)
+            return got
+
+        def commit(arrivals, round_now: int):
+            nonlocal bits_total, discarded
+            buf_idx = np.zeros(n, np.int32)
+            buf_valid = np.zeros(n, np.float32)
+            buf_w = np.zeros(n, np.float32)
+            buf_m = np.zeros((n, d), np.float32)
+            buf_h = np.zeros((n, d), np.float32)
+            buf_hij = (np.zeros((n, self.problem.m, d), np.float32)
+                       if has_hij else None)
+            stale = []
+            for slot, ev in enumerate(arrivals):
+                job = jobs.pop(ev.client)
+                idle[ev.client] = True
+                bits_total += wire_bits
+                s = round_now - job.round_idx
+                if (self.acfg.max_staleness is not None
+                        and s > self.acfg.max_staleness):
+                    discarded += 1
+                    continue
+                hist[s] += 1
+                stale.append(s)
+                buf_idx[slot] = ev.client
+                buf_valid[slot] = 1.0
+                buf_w[slot] = (1.0 + s) ** -rho
+                buf_m[slot] = job.m
+                buf_h[slot] = job.h
+                if has_hij:
+                    buf_hij[slot] = job.hij
+            new_state = self._commit(
+                state, jnp.asarray(buf_idx), jnp.asarray(buf_valid),
+                jnp.asarray(buf_w), jnp.asarray(buf_m),
+                jnp.asarray(buf_h),
+                jnp.asarray(buf_hij) if has_hij else None)
+            return new_state, stale
+
+        for t in range(num_rounds):
+            key_t = jax.random.fold_in(run_key, t)
+            k_part, _, _ = variants.round_keys(key_t)
+            sampled = np.asarray(self.sampler.sample(k_part))
+            eff = sampled & idle
+            skipped = int((sampled & ~idle).sum())
+
+            out = self._dispatch(key_t, state, jnp.asarray(eff))
+            m_np = np.asarray(out.m_i, np.float32)
+            h_np = np.asarray(out.h_new, np.float32)
+            hij_np = (np.asarray(out.h_ij_delta, np.float32)
+                      if has_hij else None)
+            for i in np.nonzero(eff)[0]:
+                timing = self.latency.job(int(i), t, wire_bits)
+                idle[i] = False
+                if timing.dropped:
+                    dropped += 1
+                    busy.append((int(i), now, timing.compute_s))
+                    q.push(now + timing.compute_s + timing.rejoin_s,
+                           REJOIN, int(i), t)
+                else:
+                    dur = timing.compute_s + timing.network_s
+                    busy.append((int(i), now, dur))
+                    jobs[int(i)] = _Job(t, m_np[i], h_np[i],
+                                        hij_np[i] if has_hij else None)
+                    q.push(now + dur, ARRIVAL, int(i), t)
+                    outstanding += 1
+            state = state._replace(x=out.x_new, step=state.step + 1)
+
+            target = outstanding if K is None else min(K, outstanding)
+            stale: List[int] = []
+            if target == 0 and len(q):
+                # Nothing in flight and nobody dispatchable (all
+                # sampled clients await rejoin) — the heap can only
+                # hold rejoins, so advance the clock by one event and
+                # let the fleet recover instead of idling out the run.
+                ev = q.pop()
+                now = max(now, ev.time)
+                idle[ev.client] = True
+            elif target > 0:
+                arrivals = collect(target)
+                state, stale = commit(arrivals, t)
+            loss, gnsq = self._measure(state.x)
+            rows.append(dict(
+                time=now, loss=float(loss), gnsq=float(gnsq),
+                committed=len(stale), participants=int(eff.sum()),
+                skipped=skipped, bits=bits_total,
+                s_mean=float(np.mean(stale)) if stale else 0.0,
+                s_max=int(max(stale)) if stale else 0))
+
+        # Drain: every in-flight arrival eventually lands (chunks of K).
+        t_last = num_rounds - 1
+        while outstanding:
+            chunk = outstanding if K is None else min(K, outstanding)
+            arrivals = collect(chunk)
+            state, stale = commit(arrivals, t_last)
+            loss, gnsq = self._measure(state.x)
+            rows.append(dict(
+                time=now, loss=float(loss), gnsq=float(gnsq),
+                committed=len(stale), participants=0, skipped=0,
+                bits=bits_total,
+                s_mean=float(np.mean(stale)) if stale else 0.0,
+                s_max=int(max(stale)) if stale else 0))
+
+        total = max(now, 1e-12)
+        busy_s = np.zeros(n)
+        for client, start, dur in busy:
+            busy_s[client] += max(0.0, min(start + dur, total) - start)
+        col = lambda k, dt: np.asarray([r[k] for r in rows], dtype=dt)
+        result = AsyncRunResult(
+            time=col("time", np.float64),
+            loss=col("loss", np.float64),
+            grad_norm_sq=col("gnsq", np.float64),
+            committed=col("committed", np.int64),
+            participants=col("participants", np.int64),
+            skipped_busy=col("skipped", np.int64),
+            staleness_mean=col("s_mean", np.float64),
+            staleness_max=col("s_max", np.int64),
+            bits_cum=col("bits", np.float64),
+            staleness_hist=dict(sorted(hist.items())),
+            utilization=busy_s / total,
+            dropped=dropped, discarded_stale=discarded,
+            total_time=now, event_log=q.log_tuples())
+        return state, result

@@ -30,6 +30,12 @@ Kernel family (one per ``k_i`` rule of Algorithm 1, DESIGN.md §6):
   scalar-prefetch block gather that computes the Alg. 1 line-11 payload
   *only at the BlockRandK-selected blocks*, so the dense payload never
   round-trips through HBM.
+* :func:`buffered_commit_pallas` — the async server-step commit
+  (DESIGN.md §9): ``g += (1/n) sum_k w_k m_k`` over the ``(K, D)``
+  arrival buffer with per-contribution staleness weights, one pass —
+  the buffer rows stream through VMEM once and the weighted reduction
+  stays in-register instead of XLA materializing the ``(K, D)``
+  scaled intermediate.
 
 Tiling: inputs are reshaped to (rows, 128) lanes; the grid walks row
 tiles of ``block_rows`` (default 512 rows = 256 KB/operand in VMEM ->
@@ -374,6 +380,61 @@ def dasha_page_h_update_pallas(gn: Array, go: Array, bn: Array, bo: Array,
         interpret=interpret,
     )(part, coin2, gn2, go2, bn2, bo2, h2)
     return _unprep_flat(hn2, d)
+
+
+# ----------------------------------------------------------------------
+# Async buffered commit (DESIGN.md §9)
+# ----------------------------------------------------------------------
+
+def _buffered_commit_kernel(w_ref, g_ref, m_ref, out_ref, *, inv_n: float):
+    # m tile: (K, block_rows, LANES); w: (K, 1) staleness weights.
+    w = w_ref[...]                          # (K, 1)
+    m = m_ref[...]
+    acc = jnp.sum(m * w[:, :, None], axis=0)
+    out_ref[...] = g_ref[...] + inv_n * acc
+
+
+def _commit_block_rows(k: int, budget_bytes: int = 4 << 20) -> int:
+    """Largest multiple-of-8 row tile such that the (K + 2) operands of
+    one grid step fit the VMEM budget."""
+    rows = budget_bytes // ((k + 2) * LANES * 4)
+    return max(8, min(DEFAULT_BLOCK_ROWS, (rows // 8) * 8))
+
+
+@functools.partial(jax.jit, static_argnames=("inv_n", "interpret"))
+def buffered_commit_pallas(g: Array, m_buf: Array, weights: Array, *,
+                           inv_n: float, interpret: bool = True) -> Array:
+    """The async server step (DESIGN.md §9): commit a buffer of ``K``
+    arrived messages into the server estimator in one fused pass,
+
+        g_new = g + (1/n) * sum_k weights[k] * m_buf[k],
+
+    with ``weights`` the per-contribution staleness weights ``w(s)``.
+    ``g`` is flat (D,), ``m_buf`` (K, D), ``weights`` (K,) — all
+    float32.  The grid walks row tiles; each step streams the K buffer
+    rows of that tile through VMEM once and reduces in-register."""
+    (d,) = g.shape
+    kk = int(m_buf.shape[0])
+    block_rows = _commit_block_rows(kk)
+    rows_pad, pad = _pad_rows(d, block_rows)
+    g2 = _prep_flat(g, rows_pad, pad)
+    m2 = jnp.pad(m_buf, ((0, 0), (0, pad))).reshape(kk, rows_pad, LANES)
+    w2 = jnp.reshape(weights.astype(jnp.float32), (kk, 1))
+    grid = (rows_pad // block_rows,)
+
+    tile = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
+    buf_tile = pl.BlockSpec((kk, block_rows, LANES), lambda i: (0, i, 0))
+    wspec = pl.BlockSpec((kk, 1), lambda i: (0, 0))
+
+    out = pl.pallas_call(
+        functools.partial(_buffered_commit_kernel, inv_n=inv_n),
+        grid=grid,
+        in_specs=[wspec, tile, buf_tile],
+        out_specs=tile,
+        out_shape=jax.ShapeDtypeStruct((rows_pad, LANES), jnp.float32),
+        interpret=interpret,
+    )(w2, g2, m2)
+    return _unprep_flat(out, d)
 
 
 def _payload_blocks_kernel(idx_ref, gn_ref, go_ref, h_ref, gi_ref, out_ref,

@@ -12,7 +12,8 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.dasha_update import (dasha_h_update_pallas,
+from repro.kernels.dasha_update import (buffered_commit_pallas,
+                                        dasha_h_update_pallas,
                                         dasha_page_h_update_pallas,
                                         dasha_page_payload_blocks_pallas,
                                         dasha_page_update_batched_pallas,
@@ -144,6 +145,17 @@ def dasha_page_payload_blocks_op(gn: Array, go: Array, bn: Array,
         jnp.asarray(coin, jnp.float32),
         b=float(b), a=float(a), pa=float(pa), p_page=float(p_page),
         scale=float(scale), block_size=int(block_size), interpret=interp)
+
+
+def buffered_commit_op(g: Array, m_buf: Array, weights: Array, *,
+                       n_nodes: int, interpret: bool | None = None
+                       ) -> Array:
+    """Async server-step commit: ``g + (1/n_nodes) * (weights @ m_buf)``
+    fused into one pass over the (K, D) arrival buffer (DESIGN.md §9)."""
+    interp = _interpret_default() if interpret is None else interpret
+    return buffered_commit_pallas(
+        *_f32(g, m_buf, weights), inv_n=1.0 / float(n_nodes),
+        interpret=interp)
 
 
 def block_gather_op(x_blocks: Array, block_idx: Array, *, scale: float,

@@ -22,13 +22,16 @@ def main():
     ap.add_argument("--ratio", type=float, default=1 / 64)
     ap.add_argument("--aggregation", default="sparse_allgather")
     ap.add_argument("--variant", default="mvr",
-                    choices=["mvr", "gradient", "page"],
-                    help="k_i rule (core/variants.py); finite_mvr needs "
-                         "per-component trackers and has no LM trainer path")
+                    choices=["mvr", "gradient", "page", "finite_mvr"],
+                    help="k_i rule (core/variants.py); gradient and "
+                         "finite_mvr are fixed-batch finite-sum settings")
     ap.add_argument("--p-page", type=float, default=1 / 8,
                     help="page variant: full-pass probability")
     ap.add_argument("--page-mini-batch", type=int, default=1,
                     help="page variant: per-node minibatch examples")
+    ap.add_argument("--component-batch", type=int, default=1,
+                    help="finite_mvr variant: components (examples) "
+                         "sampled per node per round")
     ap.add_argument("--use-pallas", action="store_true",
                     help="fused Pallas update path (DESIGN.md §6)")
     ap.add_argument("--server", choices=["paper", "adamw"], default="paper")
@@ -82,19 +85,23 @@ def main():
               else adamw_server(lr=3e-4))
     trainer = Trainer(model, mesh, TrainerConfig(
         dasha=dcfg, server=server,
-        page_mini_batch=args.page_mini_batch))
+        page_mini_batch=args.page_mini_batch,
+        num_components=(gbatch // n if args.variant == "finite_mvr"
+                        else None),
+        component_batch=args.component_batch))
     state = trainer.init(jax.random.key(0))
 
     data = DataConfig(seq_len=seq, global_batch=gbatch, num_nodes=n,
                       vocab_size=cfg.vocab_size)
 
     def batches():
-        # The gradient variant (Alg. 2) is the deterministic full-local-
-        # gradient setting: each node's dataset is FIXED across rounds
-        # (this is also what makes the trainer's old-grad cache exact).
+        # The gradient and finite_mvr variants (Algs. 2/4) are finite-
+        # sum settings: each node's dataset is FIXED across rounds
+        # (this is also what makes the gradient old-grad cache exact,
+        # and what makes the finite_mvr h_ij trackers track anything).
         # Streaming fresh batches would break the correlated gn/go pair;
         # use mvr/page for stochastic data.
-        if args.variant == "gradient":
+        if args.variant in ("gradient", "finite_mvr"):
             fixed = make_batch(cfg, data, 0, dtype=cfg.dtype)
             while True:
                 yield fixed

@@ -16,8 +16,13 @@ Step order is Algorithm 1, faithfully:
            first ``page_mini_batch`` examples (two batch-shape paths in
            one step; ``lax.cond`` executes only the taken branch, so
            full-pass compute is paid only with probability p_page)
-       (``finite_mvr`` needs per-component trackers — problem-scale
-       only, rejected here; see DESIGN.md §8 support matrix)
+         * ``finite_mvr`` — each node's FIXED batch examples are the m
+           finite-sum components: per round, ``component_batch`` of
+           them are sampled without replacement (the engine's canonical
+           ``k_oracle``), per-example gradients (n, B, *param) are
+           evaluated at both points, and the engine carries the
+           (n, m, *param) component trackers ``h_ij`` in its state
+           (``TrainerConfig.num_components`` sizes them)
     3. node update: h_i, g_i, compressed messages m_i, aggregation -> g^{t+1}
 
 The whole step is one jit-able function; the dry-run lowers it with
@@ -34,8 +39,10 @@ from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.core import variants
+from repro.core.problems import sample_batch_indices
 from repro.core.sharded import (ShardedDasha, ShardedDashaConfig,
-                                ShardedDashaState, estimator_spec, node_spec,
+                                ShardedDashaState, component_spec,
+                                estimator_spec, node_spec,
                                 per_node_value_and_grads)
 from repro.data.sharding import batch_specs
 from repro.models.common import param_specs_like
@@ -82,6 +89,11 @@ class TrainerConfig:
     # batch per node (launch/train.py does) or set this to False when
     # streaming data through the gradient variant anyway.
     cache_old_grads: Optional[bool] = None
+    # finite_mvr variant (also a fixed-batch finite-sum setting):
+    # m = examples per node in every batch (sizes the h_ij trackers)
+    # and B = components sampled per round (without replacement).
+    num_components: Optional[int] = None
+    component_batch: int = 1
 
 
 class Trainer:
@@ -89,9 +101,18 @@ class Trainer:
         rule = variants.get_rule(cfg.dasha.variant)
         if not rule.trainer_supported:
             raise ValueError(
-                f"variant {cfg.dasha.variant!r} ({rule.algorithm}) needs "
-                "per-component trackers and is not supported by the LM "
-                "trainer; use ShardedDasha directly (DESIGN.md §8)")
+                f"variant {cfg.dasha.variant!r} ({rule.algorithm}) is "
+                "not supported by the LM trainer (DESIGN.md §8)")
+        if rule.component_trackers:
+            if cfg.num_components is None:
+                raise ValueError(
+                    "finite_mvr needs TrainerConfig.num_components "
+                    "(= examples per node in every batch) to size the "
+                    "h_ij component trackers")
+            if not (1 <= cfg.component_batch <= cfg.num_components):
+                raise ValueError(
+                    f"need 1 <= component_batch <= num_components, got "
+                    f"{cfg.component_batch} / {cfg.num_components}")
         self.model = model
         self.mesh = mesh
         self.cfg = cfg
@@ -115,6 +136,11 @@ class Trainer:
         espec = jax.tree.map(
             lambda s: estimator_spec(s, axes), ps,
             is_leaf=lambda x: isinstance(x, P))
+        hij_spec = None
+        if self.rule.component_trackers:
+            hij_spec = jax.tree.map(
+                lambda s: component_spec(s, axes), ps,
+                is_leaf=lambda x: isinstance(x, P))
         params_shape = jax.eval_shape(self.model.init_params,
                                       jax.random.key(0))
         opt_state_shape = jax.eval_shape(self.cfg.server.init, params_shape)
@@ -125,7 +151,8 @@ class Trainer:
         cache_spec = (P(lead), nspec) if self.cache_old else ()
         return TrainState(
             params=ps,
-            dasha=ShardedDashaState(g=espec, g_i=nspec, h_i=nspec, step=P()),
+            dasha=ShardedDashaState(g=espec, g_i=nspec, h_i=nspec,
+                                    step=P(), h_ij=hij_spec),
             opt=opt_spec,
             step=P(),
             cache=cache_spec)
@@ -136,7 +163,8 @@ class Trainer:
 
     def _init_abstract(self, key: Array) -> TrainState:
         params = self.model.init_params(key)
-        dasha = self.engine.init_zero(params)
+        dasha = self.engine.init_zero(
+            params, num_components=self.cfg.num_components)
         opt = self.cfg.server.init(params)
         cache = ()
         if self.cache_old:
@@ -206,6 +234,34 @@ class Trainer:
             (losses_new, losses_old, g_new, g_old, b_new,
              b_old) = jax.lax.cond(coin, full_pass, mini_pass, None)
             node_kwargs = dict(mini_new=b_new, mini_old=b_old)
+        elif self.rule.component_trackers:   # finite_mvr: per-example pair
+            n, m_comp, B = (eng.n_nodes, cfg.num_components,
+                            cfg.component_batch)
+            # Alg. 4 randomness: the engine's canonical k_oracle draws
+            # the without-replacement component indices (same derivation
+            # node_update consumes for its own bookkeeping).
+            _, k_oracle, _ = variants.round_keys(key, state.dasha.step)
+            idx = sample_batch_indices(k_oracle, n, m_comp, B,
+                                       replace=False)
+            sel = jax.tree.map(
+                lambda x: jnp.take_along_axis(
+                    x, idx.reshape(idx.shape + (1,) * (x.ndim - 2)),
+                    axis=1),
+                batch)
+
+            def comp_loss(p, example):
+                # one example, re-batched to size 1 for the model loss
+                return model.loss(
+                    p, jax.tree.map(lambda v: v[None], example))
+
+            vg = jax.vmap(jax.vmap(jax.value_and_grad(comp_loss),
+                                   in_axes=(None, 0)),
+                          in_axes=(None, 0))
+            losses_new_c, g_new = vg(params_new, sel)   # (n, B, *param)
+            losses_old_c, g_old = vg(state.params, sel)
+            losses_new = jnp.mean(losses_new_c, axis=1)
+            losses_old = jnp.mean(losses_old_c, axis=1)
+            node_kwargs = dict(component_idx=idx)
         elif self.cache_old:                 # gradient: reuse old grads
             losses_new, g_new = per_node_value_and_grads(
                 node_loss, params_new, batch)

@@ -1,0 +1,283 @@
+"""The async federated runtime (repro/fl, DESIGN.md §9): sync-limit
+parity against the reference engine, replay determinism, buffered
+first-K vs barrier wall-clock, staleness semantics, dropout/rejoin,
+latency-model determinism, and the buffered-commit kernel."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (LogisticSigmoidProblem, RandK, RandomDithering,
+                        SNice, TopK, make_synthetic_classification)
+from repro.core.dasha_pp import DashaPP, DashaPPConfig
+from repro.fl import (ARRIVAL, REJOIN, AsyncConfig, AsyncDashaServer,
+                      ConstantLatency, EventQueue, LognormalLatency,
+                      make_latency)
+
+N, M, D, B = 6, 5, 16, 2
+
+
+@pytest.fixture(scope="module")
+def fl_problem():
+    feats, y = make_synthetic_classification(jax.random.key(0),
+                                             n_nodes=N, m_per_node=M, d=D)
+    return LogisticSigmoidProblem(feats, y)
+
+
+def _cfg(variant, use_pallas=False):
+    return DashaPPConfig(variant, gamma=0.02, a=0.1, b=0.3, p_page=0.4,
+                         batch_size=B, use_pallas=use_pallas)
+
+
+def _run_sync(prob, cfg, rounds=8):
+    alg = DashaPP(prob, RandK(k=4), SNice(n=N, s=3), cfg)
+    return jax.jit(lambda k: alg.run(k, jnp.zeros(D), rounds))(
+        jax.random.key(7))[0]
+
+
+def _run_async(prob, cfg, acfg, latency, rounds=8, key=7):
+    srv = AsyncDashaServer(prob, RandK(k=4), SNice(n=N, s=3), cfg, acfg,
+                           latency)
+    return srv.run(jax.random.key(key), jnp.zeros(D), rounds)
+
+
+# ----------------------------------------------------------------------
+# Acceptance: sync-limit parity
+# ----------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("variant",
+                         ["gradient", "mvr", "page", "finite_mvr"])
+def test_sync_limit_parity(fl_problem, variant):
+    """Zero latency jitter + buffer = cohort size (and the barrier)
+    reproduce the DashaPP trajectory allclose — every variant."""
+    st_ref = _run_sync(fl_problem, _cfg(variant))
+    for K in (3, None):   # 3 == the s-nice cohort size; None == barrier
+        st, res = _run_async(fl_problem, _cfg(variant),
+                             AsyncConfig(buffer_size=K),
+                             ConstantLatency())
+        for name, a, b in [("x", st_ref.x, st.x), ("g", st_ref.g, st.g),
+                           ("h_i", st_ref.h_i, st.h_i),
+                           ("g_i", st_ref.g_i, st.g_i)]:
+            np.testing.assert_allclose(
+                np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-6,
+                err_msg=f"{variant}/K={K}/{name}")
+        if variant == "finite_mvr":
+            np.testing.assert_allclose(np.asarray(st_ref.h_ij),
+                                       np.asarray(st.h_ij),
+                                       rtol=1e-4, atol=1e-6)
+        # every commit is fresh in the sync limit
+        assert set(res.staleness_hist) == {0}
+        assert res.skipped_busy.sum() == 0
+
+
+@pytest.mark.parametrize("variant", ["gradient", "page"])
+def test_sync_limit_parity_pallas(fl_problem, variant):
+    """Fused dispatch + buffered-commit kernel path, same contract."""
+    st_ref = _run_sync(fl_problem, _cfg(variant, use_pallas=True))
+    st, _ = _run_async(fl_problem, _cfg(variant, use_pallas=True),
+                       AsyncConfig(buffer_size=3, use_pallas=True),
+                       ConstantLatency())
+    np.testing.assert_allclose(np.asarray(st_ref.x), np.asarray(st.x),
+                               rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(st_ref.g_i), np.asarray(st.g_i),
+                               rtol=1e-4, atol=1e-6)
+
+
+# ----------------------------------------------------------------------
+# Acceptance: replay determinism
+# ----------------------------------------------------------------------
+
+
+def test_replay_determinism(fl_problem):
+    """Same seed ⇒ identical event log and bitwise-identical iterate."""
+    lat = LognormalLatency(sigma=1.0, client_sigma=1.0, dropout=0.1,
+                           bandwidth_bps=1e4, seed=3)
+    runs = [_run_async(fl_problem, _cfg("mvr"),
+                       AsyncConfig(buffer_size=2), lat, rounds=15,
+                       key=5) for _ in range(2)]
+    (s1, r1), (s2, r2) = runs
+    assert r1.event_log == r2.event_log
+    assert len(r1.event_log) > 0
+    np.testing.assert_array_equal(np.asarray(s1.x), np.asarray(s2.x))
+    np.testing.assert_array_equal(r1.time, r2.time)
+
+
+def test_different_seed_different_schedule(fl_problem):
+    lat = LognormalLatency(sigma=1.0, client_sigma=1.0, seed=3)
+    _, r1 = _run_async(fl_problem, _cfg("mvr"),
+                       AsyncConfig(buffer_size=2), lat, rounds=10, key=5)
+    _, r2 = _run_async(fl_problem, _cfg("mvr"),
+                       AsyncConfig(buffer_size=2), lat, rounds=10, key=6)
+    assert r1.event_log != r2.event_log
+
+
+# ----------------------------------------------------------------------
+# Acceptance: buffered first-K beats the barrier under heterogeneity
+# ----------------------------------------------------------------------
+
+
+def test_buffered_beats_barrier_wallclock(fl_problem):
+    lat = LognormalLatency(sigma=1.0, client_sigma=1.0, seed=3)
+    _, res_buf = _run_async(fl_problem, _cfg("mvr"),
+                            AsyncConfig(buffer_size=1), lat, rounds=30)
+    _, res_bar = _run_async(fl_problem, _cfg("mvr"), AsyncConfig(),
+                            lat, rounds=30)
+    assert res_buf.total_time < res_bar.total_time
+    # the price: stale commits exist (and are logged)
+    assert any(s > 0 for s in res_buf.staleness_hist)
+    assert all(s == 0 for s in res_bar.staleness_hist)
+    # conservation: every dispatched job eventually commits (no drops
+    # here), even though the buffered server dispatches fewer jobs —
+    # clients rejoin the pool only when their contribution lands
+    for res in (res_buf, res_bar):
+        assert res.committed.sum() == res.participants.sum()
+
+
+def test_async_converges_under_heterogeneity(fl_problem):
+    lat = LognormalLatency(sigma=0.8, client_sigma=0.8, seed=2)
+    _, res = _run_async(fl_problem, _cfg("mvr"),
+                        AsyncConfig(buffer_size=2,
+                                    staleness_exponent=0.5),
+                        lat, rounds=400)
+    g = res.grad_norm_sq
+    assert np.all(np.isfinite(g))
+    # staleness weighting leaves a bias floor, so the bar is looser
+    # than the sync engines': a 5x decrease without blowup
+    assert np.median(g[-40:]) < 0.2 * g[0], (g[0], np.median(g[-40:]))
+
+
+# ----------------------------------------------------------------------
+# Staleness semantics, dropout/rejoin
+# ----------------------------------------------------------------------
+
+
+def test_max_staleness_discards(fl_problem):
+    lat = LognormalLatency(sigma=1.5, client_sigma=1.5, seed=4)
+    _, unl = _run_async(fl_problem, _cfg("mvr"),
+                        AsyncConfig(buffer_size=1), lat, rounds=40)
+    _, cap = _run_async(fl_problem, _cfg("mvr"),
+                        AsyncConfig(buffer_size=1, max_staleness=1),
+                        lat, rounds=40)
+    assert unl.discarded_stale == 0
+    assert cap.discarded_stale > 0
+    assert max(cap.staleness_hist) <= 1
+
+
+def test_dropout_and_rejoin(fl_problem):
+    lat = LognormalLatency(sigma=0.5, client_sigma=0.5, dropout=0.3,
+                           rejoin_s=2.0, bandwidth_bps=1e4, seed=9)
+    st, res = _run_async(fl_problem, _cfg("mvr"),
+                         AsyncConfig(buffer_size=2), lat, rounds=30)
+    assert res.dropped > 0
+    kinds = [e[2] for e in res.event_log]
+    assert REJOIN in kinds and ARRIVAL in kinds
+    # dropped jobs never commit: commits + drops == dispatches
+    assert res.committed.sum() + res.dropped == res.participants.sum()
+    assert np.all(np.isfinite(res.loss))
+    assert np.all(np.isfinite(np.asarray(st.x)))
+    # dropped jobs' busy windows are clipped at the final clock
+    assert np.all(res.utilization >= 0) and np.all(res.utilization <= 1)
+
+
+def test_busy_clients_skip_sampling(fl_problem):
+    """With a 1-deep buffer and long jobs, sampled-but-busy clients are
+    recorded as skipped, and utilization stays in [0, 1]."""
+    lat = LognormalLatency(sigma=1.0, client_sigma=1.0, seed=3)
+    _, res = _run_async(fl_problem, _cfg("mvr"),
+                        AsyncConfig(buffer_size=1), lat, rounds=30)
+    assert res.skipped_busy.sum() > 0
+    assert np.all(res.utilization >= 0) and np.all(res.utilization <= 1)
+
+
+def test_bits_on_wire_accounting(fl_problem):
+    """Every committed or in-flight-delivered message pays exactly the
+    compressor's wire_bits; dropped jobs pay nothing."""
+    comp = RandK(k=4)
+    lat = LognormalLatency(sigma=0.7, client_sigma=0.7, dropout=0.2,
+                           seed=5)
+    srv = AsyncDashaServer(fl_problem, comp, SNice(n=N, s=3),
+                           _cfg("mvr"), AsyncConfig(buffer_size=2), lat)
+    _, res = srv.run(jax.random.key(3), jnp.zeros(D), 25)
+    arrivals = sum(1 for e in res.event_log if e[2] == ARRIVAL)
+    assert res.bits_cum[-1] == arrivals * comp.wire_bits(D)
+
+
+@pytest.mark.parametrize("comp", [TopK(k=4), RandomDithering(s=4)])
+def test_async_transport_topk_and_dithering(fl_problem, comp):
+    """The async client transport runs the TopK / RandomDithering wire
+    formats end-to-end with their own bit accounting."""
+    srv = AsyncDashaServer(fl_problem, comp, SNice(n=N, s=3),
+                           _cfg("mvr"), AsyncConfig(buffer_size=2),
+                           LognormalLatency(sigma=0.5, client_sigma=0.5,
+                                            bandwidth_bps=1e5, seed=1))
+    st, res = srv.run(jax.random.key(2), jnp.zeros(D), 20)
+    assert np.all(np.isfinite(res.loss))
+    arrivals = sum(1 for e in res.event_log if e[2] == ARRIVAL)
+    assert res.bits_cum[-1] == pytest.approx(
+        arrivals * comp.wire_bits(D))
+
+
+# ----------------------------------------------------------------------
+# Components: event queue, latency models, buffered-commit kernel
+# ----------------------------------------------------------------------
+
+
+def test_event_queue_deterministic_order():
+    q = EventQueue()
+    q.push(2.0, ARRIVAL, client=1, round_idx=0)
+    q.push(1.0, ARRIVAL, client=2, round_idx=0)
+    q.push(1.0, REJOIN, client=3, round_idx=0)   # tie: later seq
+    e1, e2 = q.pop(), q.pop()
+    # earliest time first; ties break by push order (seq)
+    assert (e1.time, e1.client) == (1.0, 2)
+    assert (e2.time, e2.client) == (1.0, 3)
+    assert q.pop().time == 2.0
+    assert len(q) == 0
+    assert q.log_tuples()[0] == (1.0, 1, ARRIVAL, 2, 0)
+
+
+def test_latency_models_deterministic_and_positional():
+    lat = LognormalLatency(sigma=0.5, client_sigma=0.5,
+                           bandwidth_bps=1e5, bandwidth_sigma=0.3,
+                           dropout=0.2, seed=7)
+    a = lat.job(3, 11, uplink_bits=1e4)
+    b = lat.job(3, 11, uplink_bits=1e4)
+    assert a == b                              # keyed by position
+    assert a != lat.job(3, 12, uplink_bits=1e4)
+    assert a != lat.job(4, 11, uplink_bits=1e4)
+    assert a.compute_s > 0 and a.network_s > 0
+    const = ConstantLatency(compute_s=2.0)
+    t = const.job(0, 0, uplink_bits=1e6)
+    assert t.compute_s == 2.0 and t.network_s == 0.0 and not t.dropped
+    assert isinstance(make_latency("lognormal", sigma=0.1),
+                      LognormalLatency)
+    with pytest.raises(ValueError):
+        make_latency("bogus")
+
+
+def test_lognormal_fleet_is_persistently_heterogeneous():
+    lat = LognormalLatency(sigma=0.0, client_sigma=1.0, seed=0)
+    speeds = [lat.job(i, 0, 0.0).compute_s for i in range(10)]
+    assert len(set(np.round(speeds, 9))) > 5     # clients differ
+    again = [lat.job(i, 1, 0.0).compute_s for i in range(10)]
+    np.testing.assert_allclose(speeds, again)    # but persistently
+
+
+def test_buffered_commit_kernel_matches_jnp():
+    from repro.kernels.ops import buffered_commit_op
+    key = jax.random.key(0)
+    for kk, d in ((3, 50), (8, 1000), (1, 7)):
+        g = jax.random.normal(jax.random.fold_in(key, d), (d,))
+        m = jax.random.normal(jax.random.fold_in(key, d + 1), (kk, d))
+        w = jax.random.uniform(jax.random.fold_in(key, d + 2), (kk,))
+        got = buffered_commit_op(g, m, w, n_nodes=6)
+        want = g + (w @ m) / 6.0
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_async_config_validation():
+    with pytest.raises(ValueError):
+        AsyncConfig(buffer_size=0)
+    AsyncConfig(buffer_size=None)   # barrier is fine

@@ -389,6 +389,150 @@ print('OK')
 
 
 @pytest.mark.slow
+def test_trainer_finite_mvr_component_trackers():
+    """finite_mvr satellite: the trainer threads (n, B, *param)
+    per-example gradients + component_idx through the engine's h_ij
+    trackers.  Parity anchor: with B = m (all components every round,
+    zero-init trackers) the Alg. 4 update reduces EXACTLY to the Alg. 2
+    gradient rule — mean_j h_ij ≡ h_i by induction — so the finite_mvr
+    trainer must reproduce the gradient-variant trajectory; B < m must
+    run, stay finite, and account bits."""
+    out = run_sub("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.compat import make_mesh, use_mesh
+from repro.models import Model, get_smoke_config
+from repro.core.sharded import ShardedDashaConfig
+from repro.training.trainer import Trainer, TrainerConfig
+from repro.training.optim import adamw_server
+from repro.data.sharding import place_batch
+
+mesh = make_mesh((4, 2), ('data', 'model'))
+cfg = get_smoke_config('granite-3-2b').with_overrides(vocab_size=64)
+model = Model(cfg)
+toks = jnp.tile(jnp.arange(32) % 7, (4, 2, 1)).astype(jnp.int32)
+batch = {'tokens': toks}
+
+def run(variant, steps, **tkw):
+    dcfg = ShardedDashaConfig(gamma=0.0, a=0.02, b=0.9, p_a=0.5,
+                              sampler='independent', compression_ratio=0.1,
+                              block_size=64, data_axes=('data',),
+                              variant=variant)
+    tr = Trainer(model, mesh, TrainerConfig(
+        dasha=dcfg, server=adamw_server(lr=3e-3, warmup=5), **tkw))
+    state = tr.init(jax.random.key(0))
+    step = tr.jit_train_step(batch)
+    mets = []
+    with use_mesh(mesh):
+        placed = place_batch(batch, mesh, ('data',))
+        for i in range(steps):
+            state, m = step(state, placed, jax.random.key(i))
+            mets.append((float(m.loss), float(m.grad_norm),
+                         float(m.bits_sent), float(m.participants)))
+    return mets, state
+
+m_fin, st_f = run('finite_mvr', 6, num_components=2, component_batch=2)
+m_grad, st_g = run('gradient', 6)
+for a, b in zip(m_fin, m_grad):
+    np.testing.assert_allclose(a, b, rtol=1e-4)
+for a, b in zip(jax.tree.leaves(st_f.params), jax.tree.leaves(st_g.params)):
+    # per-example vs full-batch vjp sum order, amplified through adamw:
+    # loose-ish atol, still trajectory-tight
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-3, atol=2e-4)
+assert st_f.dasha.h_ij is not None
+print('B=m parity ok', m_fin[-1])
+
+m1, _ = run('finite_mvr', 6, num_components=2, component_batch=1)
+assert all(np.isfinite(v) for row in m1 for v in row)
+per_node = {row[2] / row[3] for row in m1 if row[3] > 0}
+assert len(per_node) == 1, per_node
+print('B<m ok', m1[-1])
+print('OK')
+""")
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_wire_formats_parity_and_bits():
+    """TopK / RandomDithering wire formats in the sharded sparse wire
+    (satellite): with matched keys they reproduce the reference DashaPP
+    run with the corresponding reference compressor, jnp and pallas,
+    and bits_sent follows the per-format accounting."""
+    out = run_sub("""
+import math
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.compat import make_mesh, use_mesh
+from repro.core import RandomDithering, SNice, TopK, variants
+from repro.core.dasha_pp import DashaPP, DashaPPConfig
+from repro.core.sharded import ShardedDasha, ShardedDashaConfig
+from repro.core.problems import (LogisticSigmoidProblem,
+                                 make_synthetic_classification,
+                                 sample_batch_indices)
+
+n, m, d, B, T = 4, 6, 32, 2, 8
+feats, y = make_synthetic_classification(jax.random.key(0), n_nodes=n,
+                                         m_per_node=m, d=d)
+prob = LogisticSigmoidProblem(feats, y)
+mesh = make_mesh((4,), ('data',))
+RUN = jax.random.key(42)
+x0 = jnp.zeros(d)
+samp = SNice(n=n, s=2)
+gamma, a, b, ratio = 0.05, 0.1, 0.3, 0.25
+
+def ref_run(compressor):
+    alg = DashaPP(prob, compressor, samp,
+                  DashaPPConfig('mvr', gamma=gamma, a=a, b=b,
+                                batch_size=B))
+    st = alg.init(jax.random.key(0), x0)
+    step = jax.jit(alg.step)
+    for t in range(T):
+        st, _ = step(jax.random.fold_in(RUN, t), st)
+    return st
+
+def sharded_run(wire, pallas):
+    cfg = ShardedDashaConfig(gamma=gamma, a=a, b=b, p_a=0.5,
+                             sampler='s_nice', compression_ratio=ratio,
+                             block_size=8, aggregation='sparse_allgather',
+                             data_axes=('data',), variant='mvr',
+                             wire_format=wire, use_pallas=pallas)
+    eng = ShardedDasha(mesh, {'w': P()}, cfg)
+    @jax.jit
+    def round_fn(x, st, key):
+        xn = eng.server_step(x, st)
+        _, k_oracle, _ = variants.round_keys(key, st.step)
+        idx = sample_batch_indices(k_oracle, n, m, B, replace=True)
+        gn = {'w': prob.batch_grad(xn['w'], idx)}
+        go = {'w': prob.batch_grad(x['w'], idx)}
+        st2, met = eng.node_update(gn, go, st, key)
+        return xn, st2, met
+    with use_mesh(mesh):
+        st = eng.init({'w': prob.grad(x0)})
+        x = {'w': x0}
+        for t in range(T):
+            x, st, met = round_fn(x, st, RUN)
+    return x['w'], st, met, eng
+
+for wire, comp in [('topk', TopK(k=max(1, math.ceil(ratio * d)))),
+                   ('dithering', RandomDithering(s=4))]:
+    st_ref = ref_run(comp)
+    for pallas in (False, True):
+        x_sh, st_sh, met, eng = sharded_run(wire, pallas)
+        for name, a_, b_ in [('x', st_ref.x, x_sh),
+                             ('g', st_ref.g, st_sh.g['w']),
+                             ('g_i', st_ref.g_i, st_sh.g_i['w'])]:
+            np.testing.assert_allclose(
+                np.asarray(a_), np.asarray(b_), rtol=1e-4, atol=1e-5,
+                err_msg=f'{wire}/pallas={pallas}/{name}')
+        per_node = eng.uplink_bits_per_round(d) / eng.cfg.p_a
+        assert float(met.bits_sent) == float(met.participants) * per_node
+        print('wire ok', wire, pallas)
+print('OK')
+""", devices=4)
+    assert "OK" in out
+
+
+@pytest.mark.slow
 def test_full_trainer_loss_decreases_on_learnable_data():
     """End-to-end Trainer on a tiny LM whose data is learnable (constant
     token pattern) — loss must drop."""

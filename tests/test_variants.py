@@ -24,7 +24,7 @@ def test_registry_contents():
     page = variants.get_rule("page")
     assert page.needs_coin and page.needs_minibatch
     fin = variants.get_rule("finite_mvr")
-    assert fin.component_trackers and not fin.trainer_supported
+    assert fin.component_trackers and fin.trainer_supported
     for name in ("gradient", "mvr"):
         r = variants.get_rule(name)
         assert not (r.needs_coin or r.component_trackers)
