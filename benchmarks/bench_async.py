@@ -14,7 +14,14 @@ for everyone.  Reported per row:
 * ``s_mean``      — mean commit staleness (the price of not waiting),
 * ``util``        — mean client busy-fraction.
 
-    PYTHONPATH=src python benchmarks/bench_async.py [--smoke]
+    PYTHONPATH=src python benchmarks/bench_async.py [--smoke] [--sharded]
+
+``--sharded`` additionally compares barrier vs gang-scheduled cohorts
+on the sharded LM TRAINER (DESIGN.md §10) by driving
+``repro.launch.async_sharded_train`` in subprocesses (the host mesh
+needs XLA_FLAGS set before jax imports, which this process has already
+done) and asserts the flight-buffered scheduler beats the barrier in
+virtual wall-clock on a heterogeneous fleet.
 """
 from __future__ import annotations
 
@@ -109,9 +116,64 @@ def main(quick: bool = True):
     yield rows
 
 
+def _run_sharded_cell(buffer: int, rounds: int, sigma: float) -> dict:
+    """One barrier-vs-gang cell on the LM trainer, via the CLI in a
+    subprocess (a fresh process so --smoke can set the host-mesh
+    XLA_FLAGS before jax initializes)."""
+    import re
+    import subprocess
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+        + (os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""))
+    cmd = [sys.executable, "-m", "repro.launch.async_sharded_train",
+           "--smoke", "--rounds", str(rounds), "--buffer", str(buffer),
+           "--latency", "lognormal", "--sigma", str(sigma),
+           "--variant", "mvr", "--seed", "3"]
+    out = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                         timeout=900)
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    m = re.search(r"^RESULT (.*)$", out.stdout, re.M)
+    assert m, out.stdout
+    return {k: float(v) for k, v in
+            (kv.split("=") for kv in m.group(1).split())}
+
+
+def main_sharded(quick: bool = True):
+    """Gang-scheduled cohorts vs barrier on the sharded LM trainer."""
+    rounds = 10 if quick else 40
+    sigma = 1.2
+    print("# sharded trainer: gang-scheduled cohorts vs barrier "
+          "(virtual wall-clock, lognormal sigma=%.1f)" % sigma)
+    base = None
+    rows = []
+    for buffer in (0, 3):   # 0 = barrier
+        cell = _run_sharded_cell(buffer, rounds, sigma)
+        if base is None:
+            base = cell["t_virtual"]
+        speed = base / max(cell["t_virtual"], 1e-9)
+        tag = "barrier" if buffer == 0 else f"K={buffer}"
+        cell.update(buffer=tag, speedup=speed)
+        rows.append(cell)
+        print(f"  async-sharded,mvr,{tag},"
+              f"t_virtual={cell['t_virtual']:.1f},speedup={speed:.2f},"
+              f"loss={cell['loss']:.4f},s_mean={cell['s_mean']:.2f}")
+    assert rows[-1]["speedup"] > 1.0, (
+        "gang-scheduled cohorts failed to beat the barrier in virtual "
+        "wall-clock on the heterogeneous fleet")
+    print("OK: gang-scheduled cohorts beat the trainer barrier under "
+          "heterogeneity")
+    yield rows
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="small shapes / fewer cells — the CI row")
+    ap.add_argument("--sharded", action="store_true",
+                    help="also run the LM-trainer cohort comparison")
     args = ap.parse_args()
     list(main(quick=args.smoke))
+    if args.sharded:
+        list(main_sharded(quick=args.smoke))

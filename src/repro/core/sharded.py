@@ -162,6 +162,23 @@ class NodeUpdateMetrics(NamedTuple):
     bits_sent: Array      # total uplink bits this round (all nodes)
 
 
+class ShardedDispatch(NamedTuple):
+    """Everything one gang-scheduled round of client work produces
+    BEFORE the server applies it — the sharded counterpart of
+    :class:`repro.core.dasha_pp.DispatchOutputs` (DESIGN.md §10).
+
+    The sync :meth:`ShardedDasha.node_update` commits it immediately;
+    the cohort scheduler (:mod:`repro.fl.cohorts`) buffers it by
+    virtual arrival time and commits it with a staleness weight.  All
+    leaves are float32 (the update's internal precision), so a
+    deferred commit loses nothing to an intermediate cast."""
+    h_new: PyTree          # (n, *shape) tracker rows after the update
+    g_i_inc: PyTree        # (n, *shape) masked uplink increments m_i
+    g_delta: PyTree        # (*shape,)  server-estimator increment
+    h_ij_new: Optional[PyTree]   # (n, m, *shape) component trackers
+    part: Array            # (n,) float32 realized participation mask
+
+
 def _num_nodes(mesh: Mesh, data_axes: Sequence[str]) -> int:
     return int(math.prod(mesh.shape[a] for a in data_axes))
 
@@ -324,14 +341,33 @@ class ShardedDasha:
         return participation.participates(self.cfg.sampler, key, node_idx,
                                           self.n_nodes, self.cfg.p_a)
 
+    # -- host-side view of the round's participation draw ------------------
+    def participation_mask(self, key: Array, step) -> Array:
+        """The (n,) participation mask :meth:`dispatch` would draw
+        internally for ``(key, step)`` — the same
+        ``round_keys``/``participates`` derivation, vmapped over nodes,
+        so a host-side scheduler can intersect it with its own
+        idle/availability state and pass the result back as
+        ``participation_mask=`` without perturbing the randomness
+        contract (sync limit: external mask == internal draw)."""
+        k_part, _, _ = variants.round_keys(key, jnp.asarray(step))
+        return jax.vmap(
+            lambda i: participation.participates(
+                self.cfg.sampler, k_part, i, self.n_nodes, self.cfg.p_a)
+        )(jnp.arange(self.n_nodes))
+
     # -- node + aggregation ------------------------------------------------
-    def node_update(self, grads_new: PyTree, grads_old: PyTree,
-                    state: ShardedDashaState, key: Array, *,
-                    mini_new: Optional[PyTree] = None,
-                    mini_old: Optional[PyTree] = None,
-                    component_idx: Optional[Array] = None,
-                    ) -> Tuple[ShardedDashaState, NodeUpdateMetrics]:
-        """Lines 7-19 of Algorithm 1 as a shard_map over the data axes.
+    def dispatch(self, grads_new: PyTree, grads_old: PyTree,
+                 state: ShardedDashaState, key: Array, *,
+                 mini_new: Optional[PyTree] = None,
+                 mini_old: Optional[PyTree] = None,
+                 component_idx: Optional[Array] = None,
+                 participation_mask: Optional[Array] = None,
+                 ) -> Tuple[ShardedDispatch, NodeUpdateMetrics]:
+        """Lines 7-11 of Algorithm 1 as a shard_map over the data axes:
+        all client-side work of one round WITHOUT applying it to the
+        server estimators (the sharded analog of
+        :meth:`repro.core.dasha_pp.DashaPP.dispatch`).
 
         ``grads_new/old`` leaves: (n_nodes, *param_shape) per-node
         gradients at x^{t+1} and x^t — full pair (``gradient``),
@@ -339,7 +375,11 @@ class ShardedDasha:
         mini_old`` minibatch pair (``page``), or component gradients
         (n, B, *shape) + ``component_idx`` (``finite_mvr``).
 
-        Returns the new state and :class:`NodeUpdateMetrics`.
+        ``participation_mask`` overrides the internal sampler draw (the
+        cohort scheduler passes ``sampled & idle & available``); ``None``
+        draws from ``(key, state.step)`` exactly as before.
+
+        Returns ``(ShardedDispatch, NodeUpdateMetrics)``.
         """
         cfg, rule = self.cfg, self.rule
         if rule.needs_minibatch and (mini_new is None or mini_old is None):
@@ -367,6 +407,8 @@ class ShardedDasha:
                                   is_leaf=lambda x: isinstance(x, P))
 
         grad_specs = comp_specs if rule.component_trackers else node_specs
+        has_mask = participation_mask is not None
+
         operands = [grads_new, grads_old, state.h_i, state.g_i, state.g,
                     key, state.step]
         in_specs = [grad_specs, grad_specs, node_specs, node_specs,
@@ -377,11 +419,14 @@ class ShardedDasha:
         if rule.component_trackers:
             operands += [component_idx, state.h_ij]
             in_specs += [P(lead, None), comp_specs]
+        if has_mask:
+            operands += [participation_mask]
+            in_specs += [P(lead)]
 
         out_specs = [node_specs, node_specs, est_specs]
         if rule.component_trackers:
             out_specs += [comp_specs]
-        out_specs += [P()]               # participants
+        out_specs += [P(lead), P()]      # part mask, participants
 
         def update(gn, go, h_i, g_i, g, key, step, *extra):
             # Inside shard_map: leaves of gn/go/h_i/g_i are (1, *local);
@@ -392,7 +437,10 @@ class ShardedDasha:
             # to the reference engine's, so masks/coins/compressor draws
             # coincide for matched keys.
             k_part, k_oracle, k_comp = variants.round_keys(key, step)
-            part = self._participates(k_part, node_idx)
+            if has_mask:
+                part = extra[-1][0]      # local (1,) slice of the mask
+            else:
+                part = self._participates(k_part, node_idx)
             partf = part.astype(jnp.float32)
             coin = None
             if rule.needs_coin:
@@ -469,12 +517,17 @@ class ShardedDasha:
                         k, fh, fgi, a=cfg.a, pa=pa, part=partf)
 
                 # ---- lines 10-11 + compress + aggregate --------------
+                # Every branch yields the node's g_i INCREMENT (the
+                # masked compressed message m_i, dense-scattered) and
+                # the server-estimator increment delta = mean_i m_i —
+                # commit() applies them (weighted); the sync
+                # node_update applies them immediately with weight 1.
                 if cfg.compression_ratio is None:
                     fh_new, payload = dense_update()
                     m_i = partf * payload
                     total = jax.lax.psum(m_i, data_axes)
                     delta = total / self.n_nodes
-                    fgi_new = fgi + m_i
+                    gi_inc = m_i
                 elif cfg.aggregation == "dense_psum":
                     bs, nb, kb = block_plan(d_loc, cfg.block_size,
                                             cfg.compression_ratio)
@@ -485,7 +538,7 @@ class ShardedDasha:
                     m_i = partf * block_randk_dense(lkey, payload, kb, bs)
                     total = jax.lax.psum(m_i, data_axes)
                     delta = total / self.n_nodes
-                    fgi_new = fgi + m_i
+                    gi_inc = m_i
                 elif cfg.wire_format == "topk":
                     # Coordinate-level TopK wire: ceil(ratio * d_local)
                     # largest-|payload| coordinates as (value, index)
@@ -505,7 +558,7 @@ class ShardedDasha:
                     delta = jnp.zeros_like(fg).at[
                         all_idx.reshape(-1)].add(
                         all_vals.reshape(-1)) / self.n_nodes
-                    fgi_new = fgi.at[cidx].add(vals)
+                    gi_inc = jnp.zeros_like(fgi).at[cidx].add(vals)
                 elif cfg.wire_format == "dithering":
                     # QSGD wire: dense message, quantized coordinates.
                     # The all-gather carries what the server would
@@ -518,7 +571,7 @@ class ShardedDasha:
                                                tiled=False)
                     delta = jnp.sum(all_m.reshape(-1, d_loc),
                                     axis=0) / self.n_nodes
-                    fgi_new = fgi + m_i
+                    gi_inc = m_i
                 else:  # sparse_allgather, BlockRandK — the paper's wire
                     bs, nb, kb = block_plan(d_loc, cfg.block_size,
                                             cfg.compression_ratio)
@@ -547,16 +600,15 @@ class ShardedDasha:
                         jnp.zeros_like(fg),
                         all_vals.reshape(-1, bs), all_idx.reshape(-1),
                         bs) / self.n_nodes
-                    fgi_new = block_scatter_add(fgi, vals, bidx, bs)
+                    gi_inc = block_scatter_add(jnp.zeros_like(fgi),
+                                               vals, bidx, bs)
 
-                fg_new = fg + delta
-                new_h.append(fh_new.astype(th.dtype).reshape(th.shape))
-                new_gi.append(fgi_new.astype(tgi.dtype).reshape(tgi.shape))
-                new_g.append(fg_new.astype(tg.dtype).reshape(tg.shape))
+                new_h.append(fh_new.reshape(th.shape))
+                new_gi.append(gi_inc.reshape(tgi.shape))
+                new_g.append(delta.reshape(tg.shape))
                 if rule.component_trackers:
                     hl = leaves_hij[li]
-                    new_hij.append(
-                        fij_new.astype(hl.dtype).reshape(hl.shape))
+                    new_hij.append(fij_new.reshape(hl.shape))
 
             participants = jax.lax.psum(partf, data_axes)
             outs = [jax.tree.unflatten(treedef, new_h),
@@ -564,7 +616,7 @@ class ShardedDasha:
                     jax.tree.unflatten(treedef, new_g)]
             if rule.component_trackers:
                 outs.append(jax.tree.unflatten(treedef, new_hij))
-            return tuple(outs) + (participants,)
+            return tuple(outs) + (partf.reshape(1), participants)
 
         results = compat.shard_map(
             update, mesh=self.mesh, in_specs=tuple(in_specs),
@@ -572,15 +624,61 @@ class ShardedDasha:
         )(*operands)
 
         if rule.component_trackers:
-            h_new, gi_new, g_new, h_ij_new, parts = results
+            h_new, gi_inc, g_delta, h_ij_new, part, parts = results
         else:
-            h_new, gi_new, g_new, parts = results
+            h_new, gi_inc, g_delta, part, parts = results
             h_ij_new = None
-        new_state = ShardedDashaState(g=g_new, g_i=gi_new, h_i=h_new,
-                                      step=state.step + 1, h_ij=h_ij_new)
+        disp = ShardedDispatch(h_new=h_new, g_i_inc=gi_inc,
+                               g_delta=g_delta, h_ij_new=h_ij_new,
+                               part=part)
         bits = parts * self._per_node_message_bits(state.h_i)
-        return new_state, NodeUpdateMetrics(participants=parts,
-                                            bits_sent=bits)
+        return disp, NodeUpdateMetrics(participants=parts,
+                                       bits_sent=bits)
+
+    # -- the server-side apply ---------------------------------------------
+    def commit(self, state: ShardedDashaState, disp: ShardedDispatch,
+               weight=1.0) -> ShardedDashaState:
+        """Lines 12/19 of Algorithm 1 for one dispatched round: apply a
+        :class:`ShardedDispatch` to the estimators.  ``weight`` is the
+        staleness weight ``w(s)`` of the async commit (DESIGN.md §9/§10)
+        — it scales the compressed increments to BOTH ``g_i`` and ``g``
+        (preserving ``g = mean_i g_i``), while the node trackers
+        ``h_i``/``h_ij`` are *set* unweighted for participating rows
+        (they are the clients' local state, already stepped).  Leaves
+        ``state.step`` untouched — the caller owns the round counter."""
+        w = jnp.asarray(weight, jnp.float32)
+
+        def add_w(x, d):
+            return (x.astype(jnp.float32) + w * d).astype(x.dtype)
+
+        def set_rows(x, new):
+            m = disp.part.reshape((-1,) + (1,) * (x.ndim - 1)) > 0
+            return jnp.where(m, new.astype(jnp.float32),
+                             x.astype(jnp.float32)).astype(x.dtype)
+
+        g = jax.tree.map(add_w, state.g, disp.g_delta)
+        g_i = jax.tree.map(add_w, state.g_i, disp.g_i_inc)
+        h_i = jax.tree.map(set_rows, state.h_i, disp.h_new)
+        h_ij = state.h_ij
+        if disp.h_ij_new is not None:
+            h_ij = jax.tree.map(set_rows, state.h_ij, disp.h_ij_new)
+        return state._replace(g=g, g_i=g_i, h_i=h_i, h_ij=h_ij)
+
+    def node_update(self, grads_new: PyTree, grads_old: PyTree,
+                    state: ShardedDashaState, key: Array, *,
+                    mini_new: Optional[PyTree] = None,
+                    mini_old: Optional[PyTree] = None,
+                    component_idx: Optional[Array] = None,
+                    ) -> Tuple[ShardedDashaState, NodeUpdateMetrics]:
+        """Lines 7-19 of Algorithm 1: :meth:`dispatch` + immediate
+        :meth:`commit` with weight 1 — the synchronous round, exactly
+        as before the split (the async cohort runtime is a buffered
+        re-composition of the same two halves, DESIGN.md §10)."""
+        disp, metrics = self.dispatch(
+            grads_new, grads_old, state, key, mini_new=mini_new,
+            mini_old=mini_old, component_idx=component_idx)
+        new_state = self.commit(state, disp, weight=1.0)
+        return new_state._replace(step=state.step + 1), metrics
 
     # -- wire accounting ---------------------------------------------------
     def uplink_bits_per_round(self, d_total: int) -> float:

@@ -1,20 +1,36 @@
-"""repro.fl — event-driven asynchronous federated runtime (DESIGN.md §9).
+"""repro.fl — event-driven asynchronous federated runtime (DESIGN.md
+§9-§10).
 
 Layout:
     events.py    deterministic virtual-time event queue (replayable log)
     latency.py   per-client latency models (constant, lognormal,
-                 bandwidth-proportional network, dropout/rejoin)
+                 bandwidth-proportional network, dropout/rejoin) +
+                 Poisson client-availability windows
+    staleness.py staleness-weight policies (fixed power law and
+                 delay-adaptive), shared by both async runtimes
     server.py    AsyncDashaServer: buffered first-K, staleness-aware
                  DASHA-PP over the shared variant-rule layer
+    cohorts.py   CohortScheduler: gang-scheduled async cohorts for the
+                 sharded SPMD LM trainer (cohort = atomic unit of
+                 asynchrony)
 """
+from repro.fl.cohorts import (CohortConfig, CohortRunResult,
+                              CohortScheduler, train_async)
 from repro.fl.events import ARRIVAL, REJOIN, Event, EventQueue
 from repro.fl.latency import (ConstantLatency, JobTiming, LatencyModel,
-                              LognormalLatency, make_latency)
+                              LognormalLatency, PoissonAvailability,
+                              make_latency)
 from repro.fl.server import AsyncConfig, AsyncDashaServer, AsyncRunResult
+from repro.fl.staleness import (STALENESS_POLICIES, AdaptiveStaleness,
+                                PowerLawStaleness, StalenessPolicy,
+                                make_staleness)
 
 __all__ = [
     "ARRIVAL", "REJOIN", "Event", "EventQueue",
     "ConstantLatency", "JobTiming", "LatencyModel", "LognormalLatency",
-    "make_latency",
+    "PoissonAvailability", "make_latency",
     "AsyncConfig", "AsyncDashaServer", "AsyncRunResult",
+    "STALENESS_POLICIES", "AdaptiveStaleness", "PowerLawStaleness",
+    "StalenessPolicy", "make_staleness",
+    "CohortConfig", "CohortRunResult", "CohortScheduler", "train_async",
 ]

@@ -1,0 +1,311 @@
+"""Gang-scheduled asynchronous cohorts for the sharded LM trainer
+(DESIGN.md §10).
+
+The event-driven runtime of :mod:`repro.fl.server` drives the
+*reference-scale* engine: every client is an independent job, which is
+incompatible with an SPMD trainer where all nodes advance in lockstep
+inside one ``shard_map``.  This module reconciles the two: the
+**cohort** — one lockstep SPMD dispatch over the mesh — is the atomic
+unit of asynchrony.  Within a cohort everything is synchronous (one
+XLA program); across cohorts the server is free, exactly like the
+per-client runtime:
+
+* each server round *gang-schedules* one cohort: the scheduler draws
+  the participation mask host-side (``ShardedDasha.participation_mask``
+  — the same ``k_part`` derivation the sync engine consumes), intersects
+  it with its own idle/availability state, and runs
+  :meth:`repro.training.trainer.Trainer.dispatch_step` — the model
+  broadcast, the variant's gradient oracles, and Alg. 1 lines 7-11,
+  WITHOUT touching the server estimators;
+* the cohort's :class:`~repro.core.sharded.ShardedDispatch` is buffered
+  under its virtual **arrival time**: lockstep compute finishes at the
+  cohort-max compute latency, uplinks then overlap, so the cohort lands
+  at ``max_i compute_i + max_i network_i`` (priced by the same
+  :mod:`repro.fl.latency` models, with the wire bits from the engine's
+  own accounting);
+* ``buffer_cohorts`` is the cohort **flight capacity**: up to K
+  dispatched cohorts ride concurrently; once the buffer is full the
+  server commits the *first of the buffered cohorts to arrive* (one
+  cohort is the atomic commit — there is no per-client first-K inside
+  a gang), weighting each by the staleness policy
+  (:mod:`repro.fl.staleness`) and discarding cohorts older than
+  ``max_staleness`` whole.  ``None`` (or 1) = the barrier: every round
+  waits for everything outstanding — time per round is the straggler
+  cohort, the sync pricing;
+* cohort members stay busy until their cohort commits, so concurrent
+  cohorts never share a node — ``h_i`` row commits cannot conflict —
+  and a :class:`~repro.fl.latency.PoissonAvailability` process can
+  additionally gate who is dispatchable.
+
+Sync-limit parity (the §9 contract, now at trainer scale;
+tests/test_cohorts.py): zero latency jitter + the barrier buffer ⇒
+every cohort commits in its own round with ``s = 0``, ``w = 1``, and
+the trajectory reproduces the synchronous ``train()`` loop allclose —
+both loops consume :func:`repro.training.loop.round_train_key` keys,
+and the external mask equals the engine's internal draw.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import Counter
+from typing import Any, Dict, Iterator, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.sharding import place_batch
+from repro.fl.events import ARRIVAL, EventQueue
+from repro.fl.latency import LatencyModel, PoissonAvailability
+from repro.fl.staleness import make_staleness
+from repro.training.loop import round_train_key
+from repro.training.trainer import TrainState, Trainer, _tree_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class CohortConfig:
+    """Scheduler policy.  ``buffer_cohorts`` = cohort flight capacity
+    (K cohorts ride concurrently; ``None``/1 = barrier).  ``seed``
+    feeds the same :func:`~repro.training.loop.round_train_key` stream
+    the sync loop uses, which is what anchors trainer-scale parity."""
+    buffer_cohorts: Optional[int] = None   # in-flight cohorts; None=barrier
+    staleness_policy: str = "power"        # fl/staleness.py registry
+    staleness_exponent: float = 0.5
+    max_staleness: Optional[int] = None    # discard whole cohorts older
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.buffer_cohorts is not None and self.buffer_cohorts < 1:
+            raise ValueError("buffer_cohorts must be >= 1 (or None)")
+        make_staleness(self.staleness_policy)
+
+
+@dataclasses.dataclass
+class CohortRunResult:
+    """Per-server-step trajectories + end-of-run trace aggregates."""
+    time: np.ndarray             # virtual wall-clock after each step
+    loss: np.ndarray             # mean node loss at the dispatched x^{t+1}
+    grad_norm: np.ndarray        # ||g|| after the step's commits
+    committed: np.ndarray        # cohorts applied per step
+    committed_clients: np.ndarray
+    participants: np.ndarray     # dispatched cohort size per round
+    skipped_busy: np.ndarray     # sampled-but-busy nodes per round
+    skipped_offline: np.ndarray  # sampled-but-unavailable nodes per round
+    staleness_mean: np.ndarray
+    staleness_max: np.ndarray
+    bits_cum: np.ndarray         # cumulative uplink bits on the wire
+    staleness_hist: Dict[int, int]
+    discarded_stale: int         # cohorts beyond max_staleness
+    total_time: float
+    event_log: List[Tuple[float, int, str, int, int]]
+
+
+class CohortScheduler:
+    """Drives a :class:`~repro.training.trainer.Trainer` through the
+    virtual-time event stack.  ``run(state, batches, num_rounds)``
+    plays the whole schedule and returns ``(state, CohortRunResult)``."""
+
+    def __init__(self, trainer: Trainer, latency: LatencyModel,
+                 config: Optional[CohortConfig] = None,
+                 availability: Optional[PoissonAvailability] = None):
+        if getattr(latency, "dropout", 0.0) > 0.0:
+            # The gang transport is reliable by construction (ROADMAP:
+            # cohort-level mid-flight dropout is future work); silently
+            # ignoring the model's dropout would make sweeps against
+            # AsyncDashaServer incomparable, so refuse loudly.  Model
+            # unavailability with PoissonAvailability instead.
+            raise ValueError(
+                "CohortScheduler does not simulate mid-flight dropout; "
+                "use a latency model with dropout=0 (client outages are "
+                "modeled via availability=PoissonAvailability(...))")
+        self.trainer = trainer
+        self.engine = trainer.engine
+        self.latency = latency
+        self.cfg = config or CohortConfig()
+        self.availability = availability
+        self.n = self.engine.n_nodes
+        self._gnorm = jax.jit(_tree_norm)
+
+    def run(self, state: TrainState, batches: Iterator[dict],
+            num_rounds: int) -> Tuple[TrainState, CohortRunResult]:
+        cfg, n = self.cfg, self.n
+        K = cfg.buffer_cohorts
+        mesh = self.trainer.mesh
+        data_axes = self.trainer.cfg.dasha.data_axes
+        policy = make_staleness(cfg.staleness_policy,
+                                exponent=cfg.staleness_exponent)
+        # per-node uplink bits from the engine's own wire accounting —
+        # the same number the sync loop's bits_sent metric uses
+        wire_per_node = self.engine._per_node_message_bits(state.dasha.h_i)
+
+        batch = next(batches)
+        dispatch_fn = self.trainer.jit_dispatch_step(batch)
+        commit_fn = self.trainer.jit_commit_step()
+        # key/participation streams continue from the restored state
+        # (same resume contract as the sync loop)
+        start = int(jax.device_get(state.step))
+        dstep0 = int(jax.device_get(state.dasha.step))
+
+        q = EventQueue()
+        now = 0.0
+        idle = np.ones(n, bool)
+        jobs: Dict[int, Tuple[int, Any, np.ndarray]] = {}
+        outstanding = 0
+        bits_total = 0.0
+        discarded = 0
+        hist: Counter = Counter()
+        rows: List[Dict[str, Any]] = []
+
+        def collect(target: int):
+            nonlocal now, outstanding
+            got = []
+            while len(got) < target:
+                ev = q.pop()
+                now = max(now, ev.time)
+                outstanding -= 1
+                got.append(ev)
+            return got
+
+        def commit(arrivals, round_now: int):
+            nonlocal state, bits_total, discarded
+            stale, clients = [], 0
+            for ev in arrivals:
+                r, disp, members = jobs.pop(ev.client)
+                idle[members] = True
+                bits_total += len(members) * wire_per_node
+                s = round_now - r
+                if (cfg.max_staleness is not None
+                        and s > cfg.max_staleness):
+                    discarded += 1
+                    continue
+                w = policy.weight(s)
+                policy.observe(s)
+                state = commit_fn(state, disp, jnp.float32(w))
+                hist[s] += 1
+                stale.append(s)
+                clients += len(members)
+            return stale, clients
+
+        for t in range(num_rounds):
+            # -- gang-schedule one cohort as a single SPMD dispatch ----
+            key = round_train_key(cfg.seed, start + t)
+            sampled = np.asarray(self.engine.participation_mask(
+                key, dstep0 + t))
+            avail = (self.availability.mask(n, now)
+                     if self.availability is not None
+                     else np.ones(n, bool))
+            eff = sampled & idle & avail
+            skipped_busy = int((sampled & ~idle).sum())
+            skipped_off = int((sampled & idle & ~avail).sum())
+
+            placed = place_batch(batch, mesh, data_axes)
+            state, disp, mets = dispatch_fn(state, placed, key,
+                                            jnp.asarray(eff))
+            members = np.nonzero(eff)[0]
+            if len(members):
+                timings = [self.latency.job(int(i), t, wire_per_node)
+                           for i in members]
+                # lockstep SPMD: compute synchronizes at the cohort max,
+                # then the uplinks overlap
+                dur = (max(tm.compute_s for tm in timings)
+                       + max(tm.network_s for tm in timings))
+                idle[members] = False
+                jobs[t] = (t, disp, members)
+                q.push(now + dur, ARRIVAL, client=t, round_idx=t)
+                outstanding += 1
+            elif outstanding == 0:
+                # empty cohort and nothing in flight (e.g. the whole
+                # fleet inside Poisson outage windows): advance the
+                # clock one virtual second so availability can recover
+                # instead of spinning the remaining rounds at t=now
+                now += 1.0
+
+            # -- commit: drain the flight buffer down to K-1 cohorts so
+            # there is room to gang-schedule the next round; the pops
+            # are the earliest arrivals among everything buffered ------
+            target = (outstanding if K is None
+                      else max(0, outstanding - (K - 1)))
+            if target == 0 and not len(members) and outstanding > 0:
+                # nothing was dispatchable (every node rides an
+                # in-flight cohort or sits in an outage window) and the
+                # buffer is not full: without a commit the clock never
+                # advances and the fleet can never free up — wait for
+                # the earliest in-flight cohort instead of spinning
+                # degenerate empty rounds at a frozen virtual time
+                target = 1
+            stale: List[int] = []
+            clients = 0
+            if target > 0:
+                arrivals = collect(target)
+                stale, clients = commit(arrivals, t)
+            rows.append(dict(
+                time=now, loss=float(mets.loss),
+                gnorm=float(self._gnorm(state.dasha.g)),
+                committed=len(stale), clients=clients,
+                participants=int(eff.sum()), skipped=skipped_busy,
+                skipped_off=skipped_off, bits=bits_total,
+                s_mean=float(np.mean(stale)) if stale else 0.0,
+                s_max=int(max(stale)) if stale else 0))
+            if t < num_rounds - 1:
+                batch = next(batches)
+
+        # Drain: every in-flight cohort lands; each chunk is one more
+        # dispatch-free server step, so the effective round index keeps
+        # advancing (the §9 drain-staleness semantics).  One cohort
+        # commits per drain step (the in-loop commit rate once no new
+        # dispatches refill the buffer); the barrier drains in one.
+        t_eff = num_rounds
+        while outstanding:
+            chunk = outstanding if K is None else 1
+            arrivals = collect(chunk)
+            stale, clients = commit(arrivals, t_eff)
+            t_eff += 1
+            rows.append(dict(
+                time=now, loss=rows[-1]["loss"] if rows else 0.0,
+                gnorm=float(self._gnorm(state.dasha.g)),
+                committed=len(stale), clients=clients,
+                participants=0, skipped=0, skipped_off=0,
+                bits=bits_total,
+                s_mean=float(np.mean(stale)) if stale else 0.0,
+                s_max=int(max(stale)) if stale else 0))
+
+        col = lambda k, dt: np.asarray([r[k] for r in rows], dtype=dt)
+        result = CohortRunResult(
+            time=col("time", np.float64),
+            loss=col("loss", np.float64),
+            grad_norm=col("gnorm", np.float64),
+            committed=col("committed", np.int64),
+            committed_clients=col("clients", np.int64),
+            participants=col("participants", np.int64),
+            skipped_busy=col("skipped", np.int64),
+            skipped_offline=col("skipped_off", np.int64),
+            staleness_mean=col("s_mean", np.float64),
+            staleness_max=col("s_max", np.int64),
+            bits_cum=col("bits", np.float64),
+            staleness_hist=dict(sorted(hist.items())),
+            discarded_stale=discarded,
+            total_time=now, event_log=q.log_tuples())
+        return state, result
+
+
+def train_async(trainer: Trainer, state: TrainState,
+                batches: Iterator[dict], num_rounds: int,
+                latency: LatencyModel,
+                config: Optional[CohortConfig] = None,
+                availability: Optional[PoissonAvailability] = None,
+                logger=None, log_every: int = 10
+                ) -> Tuple[TrainState, CohortRunResult]:
+    """The async counterpart of :func:`repro.training.loop.train`: run
+    the gang-scheduled cohort schedule and log per-step metrics."""
+    sched = CohortScheduler(trainer, latency, config=config,
+                            availability=availability)
+    state, res = sched.run(state, batches, num_rounds)
+    if logger is not None:
+        for i in range(len(res.time)):
+            if i % log_every == 0 or i == len(res.time) - 1:
+                logger.log(i, t_virtual=res.time[i], loss=res.loss[i],
+                           grad_norm=res.grad_norm[i],
+                           committed=int(res.committed[i]),
+                           staleness_mean=res.staleness_mean[i],
+                           mbits=res.bits_cum[i] / 1e6)
+    return state, res

@@ -113,6 +113,64 @@ class LognormalLatency(LatencyModel):
             client, self.bandwidth_sigma, salt=self._SALT_BANDWIDTH)
 
 
+class PoissonAvailability:
+    """Client-availability windows beyond the latency-model-implied
+    arrival process (the ROADMAP-deferred extension): per client,
+    *outages* arrive as a Poisson process of ``rate`` events per
+    virtual second (exponential inter-arrival gaps measured from the
+    end of the previous outage) and last ``Exp(off_mean)`` seconds.
+    A client is available whenever it is not inside an outage window.
+
+    Determinism: client ``i``'s window sequence is a pure function of
+    ``(seed, i)`` — windows are generated by one positional-keyed rng
+    per client, extended lazily and monotonically, so replays see
+    identical availability regardless of when/at what times the
+    scheduler queries (:mod:`repro.fl` replay contract).
+
+    ``rate=0`` means always available (the identity the sync-limit
+    parity tests rely on)."""
+
+    def __init__(self, rate: float = 0.0, off_mean: float = 5.0,
+                 seed: int = 0):
+        if rate < 0 or off_mean <= 0:
+            raise ValueError("need rate >= 0 and off_mean > 0")
+        self.rate = float(rate)
+        self.off_mean = float(off_mean)
+        self.seed = int(seed)
+        self._rngs: dict = {}
+        self._windows: dict = {}   # client -> list[(start, end)], sorted
+
+    _SALT = 2 ** 62 + 2   # clear of the LognormalLatency salts
+
+    def _extend(self, client: int, t: float) -> list:
+        wins = self._windows.setdefault(client, [])
+        if self.rate == 0.0:
+            return wins
+        rng = self._rngs.get(client)
+        if rng is None:
+            rng = self._rngs[client] = np.random.default_rng(
+                (self.seed, int(client), self._SALT))
+        horizon = wins[-1][1] if wins else 0.0
+        while horizon <= t:
+            gap = rng.exponential(1.0 / self.rate)
+            dur = rng.exponential(self.off_mean)
+            wins.append((horizon + gap, horizon + gap + dur))
+            horizon = wins[-1][1]
+        return wins
+
+    def available(self, client: int, t: float) -> bool:
+        for start, end in self._extend(client, float(t)):
+            if start <= t < end:
+                return False
+            if start > t:
+                break
+        return True
+
+    def mask(self, n: int, t: float) -> np.ndarray:
+        """(n,) bool availability mask at virtual time ``t``."""
+        return np.asarray([self.available(i, t) for i in range(n)])
+
+
 def make_latency(name: str, **kwargs) -> LatencyModel:
     if name == "constant":
         return ConstantLatency(**kwargs)

@@ -11,11 +11,16 @@ commits a buffer of the **first K arrivals** per step (FedBuff-style;
 
 Staleness: a contribution dispatched at round ``r`` and committed at
 round ``t`` has staleness ``s = t - r``.  Its compressed increment is
-applied with weight ``w(s) = (1 + s) ** -staleness_exponent`` to BOTH
-``g_i`` and ``g`` (preserving the ``g = mean_i g_i`` estimator
+applied with weight ``w(s)`` from the configured policy
+(:mod:`repro.fl.staleness`: the fixed ``(1 + s)^-rho`` power law or
+the delay-adaptive weight recentered on observed commit staleness) to
+BOTH ``g_i`` and ``g`` (preserving the ``g = mean_i g_i`` estimator
 invariant); the node trackers ``h_i`` (and ``h_ij``) are applied
 unweighted — they are the *client's* local state, already computed.
 Contributions older than ``max_staleness`` are discarded whole.
+An optional :class:`~repro.fl.latency.PoissonAvailability` process
+gates dispatch: sampled-but-offline clients skip the round
+(``skipped_offline`` in the trace).
 
 Sync-limit parity contract (tests/test_fl.py): zero latency jitter +
 ``buffer_size`` = cohort size ⇒ every dispatch commits in its own round
@@ -44,7 +49,8 @@ from repro.core.compressors import Compressor
 from repro.core.dasha_pp import DashaPP, DashaPPConfig, DashaPPState
 from repro.core.participation import ParticipationSampler
 from repro.fl.events import ARRIVAL, REJOIN, EventQueue
-from repro.fl.latency import LatencyModel
+from repro.fl.latency import LatencyModel, PoissonAvailability
+from repro.fl.staleness import make_staleness
 
 Array = jax.Array
 
@@ -54,13 +60,17 @@ class AsyncConfig:
     """Server-side async policy (the latency model is runtime, not
     config)."""
     buffer_size: Optional[int] = None   # K arrivals per step; None=barrier
-    staleness_exponent: float = 0.5     # w(s) = (1+s)^-rho (FedBuff uses 1/2)
+    staleness_exponent: float = 0.5     # rho of the chosen policy
+    # "power": w(s) = (1+s)^-rho (FedBuff); "adaptive": delay-adaptive
+    # w from observed commit-staleness statistics (fl/staleness.py).
+    staleness_policy: str = "power"
     max_staleness: Optional[int] = None  # discard contributions older
     use_pallas: bool = False            # buffered-commit kernel (ops.py)
 
     def __post_init__(self):
         if self.buffer_size is not None and self.buffer_size < 1:
             raise ValueError("buffer_size must be >= 1 (or None)")
+        make_staleness(self.staleness_policy)   # raises on unknown names
 
 
 class _Job(NamedTuple):
@@ -79,6 +89,7 @@ class AsyncRunResult:
     committed: np.ndarray       # arrivals applied per step
     participants: np.ndarray    # dispatched cohort size per round
     skipped_busy: np.ndarray    # sampled-but-busy clients per round
+    skipped_offline: np.ndarray  # sampled-but-unavailable (Poisson windows)
     staleness_mean: np.ndarray
     staleness_max: np.ndarray
     bits_cum: np.ndarray        # cumulative uplink bits on the wire
@@ -96,7 +107,8 @@ class AsyncDashaServer:
 
     def __init__(self, problem, compressor: Compressor,
                  sampler: ParticipationSampler, config: DashaPPConfig,
-                 async_config: AsyncConfig, latency: LatencyModel):
+                 async_config: AsyncConfig, latency: LatencyModel,
+                 availability: Optional[PoissonAvailability] = None):
         self.engine = DashaPP(problem, compressor, sampler, config)
         self.problem = problem
         self.compressor = compressor
@@ -104,6 +116,7 @@ class AsyncDashaServer:
         self.cfg = config
         self.acfg = async_config
         self.latency = latency
+        self.availability = availability
         self.rule = variants.get_rule(config.variant)
         self._dispatch = jax.jit(self.engine.dispatch)
         self._commit = jax.jit(self._commit_impl)
@@ -140,7 +153,8 @@ class AsyncDashaServer:
             ) -> Tuple[DashaPPState, AsyncRunResult]:
         n, d = self.problem.n, self.problem.d
         K = self.acfg.buffer_size
-        rho = self.acfg.staleness_exponent
+        policy = make_staleness(self.acfg.staleness_policy,
+                                exponent=self.acfg.staleness_exponent)
         has_hij = self.rule.component_trackers
         wire_bits = float(self.compressor.wire_bits(d))
 
@@ -199,7 +213,10 @@ class AsyncDashaServer:
                 stale.append(s)
                 buf_idx[slot] = ev.client
                 buf_valid[slot] = 1.0
-                buf_w[slot] = (1.0 + s) ** -rho
+                # weight BEFORE observe: a commit's own staleness never
+                # influences its own weight (fl/staleness.py contract)
+                buf_w[slot] = policy.weight(s)
+                policy.observe(s)
                 buf_m[slot] = job.m
                 buf_h[slot] = job.h
                 if has_hij:
@@ -215,8 +232,12 @@ class AsyncDashaServer:
             key_t = jax.random.fold_in(run_key, t)
             k_part, _, _ = variants.round_keys(key_t)
             sampled = np.asarray(self.sampler.sample(k_part))
-            eff = sampled & idle
+            avail = (self.availability.mask(n, now)
+                     if self.availability is not None
+                     else np.ones(n, bool))
+            eff = sampled & idle & avail
             skipped = int((sampled & ~idle).sum())
+            skipped_off = int((sampled & idle & ~avail).sum())
 
             out = self._dispatch(key_t, state, jnp.asarray(eff))
             m_np = np.asarray(out.m_i, np.float32)
@@ -250,6 +271,13 @@ class AsyncDashaServer:
                 ev = q.pop()
                 now = max(now, ev.time)
                 idle[ev.client] = True
+            elif target == 0 and self.availability is not None:
+                # Frozen-clock guard (mirrors fl/cohorts.py): nothing
+                # in flight, nothing on the heap, the whole fleet idle
+                # but inside Poisson outage windows — availability is a
+                # function of `now`, so the clock must advance for the
+                # windows to ever end.
+                now += 1.0
             elif target > 0:
                 arrivals = collect(target)
                 state, stale = commit(arrivals, t)
@@ -257,21 +285,28 @@ class AsyncDashaServer:
             rows.append(dict(
                 time=now, loss=float(loss), gnsq=float(gnsq),
                 committed=len(stale), participants=int(eff.sum()),
-                skipped=skipped, bits=bits_total,
+                skipped=skipped, skipped_off=skipped_off,
+                bits=bits_total,
                 s_mean=float(np.mean(stale)) if stale else 0.0,
                 s_max=int(max(stale)) if stale else 0))
 
         # Drain: every in-flight arrival eventually lands (chunks of K).
-        t_last = num_rounds - 1
+        # Each chunk is one more (dispatch-free) server step, so the
+        # effective round index KEEPS ADVANCING — stamping everything
+        # with the last in-loop round would understate the staleness of
+        # jobs that land several virtual steps after the run, and let
+        # them dodge the max_staleness discard the in-loop commits face.
+        t_eff = num_rounds
         while outstanding:
             chunk = outstanding if K is None else min(K, outstanding)
             arrivals = collect(chunk)
-            state, stale = commit(arrivals, t_last)
+            state, stale = commit(arrivals, t_eff)
+            t_eff += 1
             loss, gnsq = self._measure(state.x)
             rows.append(dict(
                 time=now, loss=float(loss), gnsq=float(gnsq),
                 committed=len(stale), participants=0, skipped=0,
-                bits=bits_total,
+                skipped_off=0, bits=bits_total,
                 s_mean=float(np.mean(stale)) if stale else 0.0,
                 s_max=int(max(stale)) if stale else 0))
 
@@ -287,6 +322,7 @@ class AsyncDashaServer:
             committed=col("committed", np.int64),
             participants=col("participants", np.int64),
             skipped_busy=col("skipped", np.int64),
+            skipped_offline=col("skipped_off", np.int64),
             staleness_mean=col("s_mean", np.float64),
             staleness_max=col("s_max", np.int64),
             bits_cum=col("bits", np.float64),

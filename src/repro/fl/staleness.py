@@ -1,0 +1,95 @@
+"""Staleness-weight policies for the async runtimes (DESIGN.md §9-§10).
+
+A commit of a contribution dispatched at round ``r`` and applied at
+round ``t`` carries staleness ``s = t - r``; a policy maps ``s`` to the
+weight ``w(s) ∈ (0, 1]`` applied to the compressed increment (both
+``g_i`` and ``g``, preserving the estimator invariant — the weighting
+semantics live in the commit, not here).  One policy instance is
+created per run and is *stateful*: :meth:`observe` feeds it the
+realized staleness of every commit, which is what makes the
+delay-adaptive variant possible while keeping replays deterministic
+(the weight sequence is a pure function of the commit sequence).
+
+Policies (:func:`make_staleness`):
+
+* ``power``    — the fixed FedBuff-style power law
+  ``w(s) = (1 + s)^-rho``; ignores observations.
+* ``adaptive`` — delay-adaptive: ``w(s) = ((1 + s) / (1 + s̄))^-rho``
+  clipped to ≤ 1, where ``s̄`` is the running mean of *observed* commit
+  staleness.  A commit is discounted for being unusually stale
+  relative to the fleet the server actually sees, not against an
+  absolute scale — on a uniformly slow fleet the fixed power law
+  over-discounts every commit, while the adaptive weight recenters at
+  w(s̄) = 1.  In the zero-jitter sync limit every ``s`` is 0, so
+  ``w ≡ 1`` and the sync-limit parity contract is untouched.
+
+Shared by :class:`repro.fl.server.AsyncDashaServer` (per-client jobs)
+and :class:`repro.fl.cohorts.CohortScheduler` (per-cohort commits).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+class StalenessPolicy:
+    """Maps observed staleness to commit weights; stateful per run."""
+
+    def weight(self, s: int) -> float:
+        raise NotImplementedError
+
+    def observe(self, s: int) -> None:
+        """Record the staleness of a commit that was just applied.
+        Called AFTER :meth:`weight` for the same commit, so a commit's
+        own staleness never influences its own weight."""
+
+    @property
+    def mean_observed(self) -> float:
+        return 0.0
+
+
+@dataclasses.dataclass
+class PowerLawStaleness(StalenessPolicy):
+    """``w(s) = (1 + s)^-exponent`` (FedBuff uses exponent 1/2)."""
+
+    exponent: float = 0.5
+
+    def weight(self, s: int) -> float:
+        return float((1.0 + s) ** -self.exponent)
+
+
+@dataclasses.dataclass
+class AdaptiveStaleness(StalenessPolicy):
+    """Delay-adaptive weights from observed per-commit staleness:
+    ``w(s) = min(1, ((1 + s) / (1 + s̄))^-exponent)`` with ``s̄`` the
+    running mean of everything :meth:`observe` has seen this run."""
+
+    exponent: float = 0.5
+    _count: int = dataclasses.field(default=0, repr=False)
+    _total: float = dataclasses.field(default=0.0, repr=False)
+
+    def weight(self, s: int) -> float:
+        if s <= 0:
+            return 1.0
+        w = ((1.0 + s) / (1.0 + self.mean_observed)) ** -self.exponent
+        return float(min(1.0, w))
+
+    def observe(self, s: int) -> None:
+        self._count += 1
+        self._total += float(s)
+
+    @property
+    def mean_observed(self) -> float:
+        return self._total / self._count if self._count else 0.0
+
+
+STALENESS_POLICIES = ("power", "adaptive")
+
+
+def make_staleness(name: str, *, exponent: float = 0.5) -> StalenessPolicy:
+    """A FRESH policy instance (stateful — never share across runs)."""
+    if name == "power":
+        return PowerLawStaleness(exponent=exponent)
+    if name == "adaptive":
+        return AdaptiveStaleness(exponent=exponent)
+    raise ValueError(f"unknown staleness policy {name!r}; choose from "
+                     f"{list(STALENESS_POLICIES)}")

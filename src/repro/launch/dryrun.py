@@ -205,6 +205,8 @@ def lower_pair(arch_id: str, shape_name: str, *, multi_pod: bool,
     rec["compile_s"] = round(time.time() - t1, 2)
 
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):   # older jax: one dict per device
+        cost = cost[0] if cost else {}
     mem = compiled.memory_analysis()
     rec["flops_per_device"] = float(cost.get("flops", 0.0))
     rec["bytes_per_device"] = float(cost.get("bytes accessed", 0.0))

@@ -168,6 +168,37 @@ def blockwise_gqa_attention(q: Array, k: Array, v: Array,
     return out[:, :Tq].astype(v.dtype)
 
 
+def ring_cache_positions(cache_pos: Array, S: int) -> Tuple[Array, Array]:
+    """Per-slot ring-buffer accounting for decode caches.  ``cache_pos``
+    is the (B,) absolute next position of each batch slot; returns
+    ``(slot, abs_pos)`` with ``slot`` (B,) the ring slot to write and
+    ``abs_pos`` (B, S) the absolute position currently stored in every
+    ring slot AFTER the write (never-written slots come out negative,
+    which :func:`attention_weights_mask` semantics treat as empty)."""
+    slot = (cache_pos % S).astype(jnp.int32)
+    wraps = (cache_pos // S).astype(jnp.int32)
+    slots = jnp.arange(S)
+    abs_pos = jnp.where(slots[None, :] <= slot[:, None],
+                        wraps[:, None] * S + slots[None, :],
+                        (wraps[:, None] - 1) * S + slots[None, :])
+    return slot, abs_pos
+
+
+def decode_attention_mask(q_pos: Array, k_pos: Array, causal: bool,
+                          window: Optional[int]) -> Array:
+    """Batched decode mask: ``q_pos`` (B, 1), ``k_pos`` (B, S) ->
+    (B, 1, S) boolean, the per-slot analog of
+    :func:`attention_weights_mask` (negative k_pos = empty slot)."""
+    m = jnp.ones((q_pos.shape[0], q_pos.shape[1], k_pos.shape[1]), bool)
+    if causal:
+        c = q_pos[:, :, None] >= k_pos[:, None, :]
+        if window is not None:
+            c &= q_pos[:, :, None] - k_pos[:, None, :] < window
+        m &= c
+    m &= k_pos[:, None, :] >= 0
+    return m
+
+
 def gqa_attention(q: Array, k: Array, v: Array, mask: Array) -> Array:
     """q: (B, Tq, H, hd); k/v: (B, Tk, kvH, hd); mask: (Tq, Tk) or
     (B, Tq, Tk).  Grouped-query: H = G * kvH."""
@@ -208,13 +239,18 @@ def attention_block(p: dict, x: Array, positions: Array, cfg,
                     cache_pos: Optional[Array] = None,
                     causal: bool = True,
                     full_prefix: int = 0,
+                    update: Optional[Array] = None,
                     ) -> Tuple[Array, Optional[KVCache]]:
     """Full attention sub-block (pre-norm residual handled by caller).
 
     Training/prefill: ``cache=None`` — self-attention over x.
     Decode: ``cache`` given, x is (B, 1, D), ``cache_pos`` the absolute
     position; the KV pair is written at ``cache_pos % S`` (ring buffer,
-    S = window for SWA else seq_len).
+    S = window for SWA else seq_len).  ``cache_pos`` may be scalar (all
+    slots in lockstep — the legacy/dry-run path) or (B,) per-slot, in
+    which case ``update`` optionally masks which slots write their KV
+    (masked-out slots keep their cache bytes untouched — the serving
+    prefill isolation fix).
     """
     B, T, D = x.shape
     hd = cfg.hd
@@ -243,7 +279,7 @@ def attention_block(p: dict, x: Array, positions: Array, cfg,
                                           full_prefix=full_prefix)
             out = gqa_attention(q, k, v, mask)
         new_cache = KVCache(k=k, v=v)
-    else:
+    elif jnp.ndim(cache_pos) == 0:
         S = cache.k.shape[1]
         slot = (cache_pos % S).astype(jnp.int32)
         k_new = cache.k.at[:, slot].set(k[:, 0].astype(cache.k.dtype))
@@ -256,6 +292,24 @@ def attention_block(p: dict, x: Array, positions: Array, cfg,
         q_pos = cache_pos[None].astype(jnp.int32)
         mask = attention_weights_mask(q_pos, abs_pos, causal,
                                       cfg.attention_window)
+        out = gqa_attention(q, k_new, v_new, mask)
+        new_cache = KVCache(k=k_new, v=v_new)
+    else:
+        # per-slot decode: each batch slot writes at ITS ring position;
+        # slots masked out by ``update`` leave their cache untouched
+        # (the write is routed to a dropped out-of-bounds row)
+        S = cache.k.shape[1]
+        slot, abs_pos = ring_cache_positions(cache_pos, S)
+        row = jnp.arange(B)
+        if update is not None:
+            row = jnp.where(update, row, B)
+        k_new = cache.k.at[row, slot].set(k[:, 0].astype(cache.k.dtype),
+                                          mode="drop")
+        v_new = cache.v.at[row, slot].set(v[:, 0].astype(cache.v.dtype),
+                                          mode="drop")
+        q_pos = cache_pos[:, None].astype(jnp.int32)
+        mask = decode_attention_mask(q_pos, abs_pos, causal,
+                                     cfg.attention_window)
         out = gqa_attention(q, k_new, v_new, mask)
         new_cache = KVCache(k=k_new, v=v_new)
 

@@ -16,7 +16,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.layers import (apply_rope, attention_weights_mask,
-                                 blockwise_gqa_attention, dense_init)
+                                 blockwise_gqa_attention,
+                                 decode_attention_mask, dense_init,
+                                 ring_cache_positions)
 
 Array = jax.Array
 
@@ -53,6 +55,7 @@ def init_mla(key: Array, cfg) -> dict:
 def mla_block(p: dict, x: Array, positions: Array, cfg,
               cache: Optional[MLACache] = None,
               cache_pos: Optional[Array] = None,
+              update: Optional[Array] = None,
               ) -> Tuple[Array, Optional[MLACache]]:
     a = cfg.mla
     B, T, D = x.shape
@@ -73,7 +76,7 @@ def mla_block(p: dict, x: Array, positions: Array, cfg,
         q_pos = k_pos
         # prefill/training produce the latent cache for decode handoff
         new_cache = MLACache(c_kv=c_kv, k_rope=k_rope)
-    else:
+    elif jnp.ndim(cache_pos) == 0:
         S = cache.c_kv.shape[1]
         slot = (cache_pos % S).astype(jnp.int32)
         kv_lat = cache.c_kv.at[:, slot].set(c_kv[:, 0].astype(cache.c_kv.dtype))
@@ -83,6 +86,20 @@ def mla_block(p: dict, x: Array, positions: Array, cfg,
         k_pos = jnp.where(slots <= slot, wraps * S + slots,
                           (wraps - 1) * S + slots)
         q_pos = cache_pos[None].astype(jnp.int32)
+        new_cache = MLACache(c_kv=kv_lat, k_rope=kr)
+    else:
+        # per-slot decode (see layers.attention_block): masked slots
+        # keep their latent cache untouched
+        S = cache.c_kv.shape[1]
+        slot, k_pos = ring_cache_positions(cache_pos, S)   # (B,), (B,S)
+        row = jnp.arange(B)
+        if update is not None:
+            row = jnp.where(update, row, B)
+        kv_lat = cache.c_kv.at[row, slot].set(
+            c_kv[:, 0].astype(cache.c_kv.dtype), mode="drop")
+        kr = cache.k_rope.at[row, slot].set(
+            k_rope[:, 0].astype(cache.k_rope.dtype), mode="drop")
+        q_pos = cache_pos[:, None].astype(jnp.int32)
         new_cache = MLACache(c_kv=kv_lat, k_rope=kr)
 
     k_nope = jnp.einsum("bsr,rx->bsx", kv_lat, p["w_uk"]).reshape(
@@ -103,13 +120,18 @@ def mla_block(p: dict, x: Array, positions: Array, cfg,
             causal=True, window=cfg.attention_window)
         out = out[..., :a.v_head_dim]
     else:
-        mask = attention_weights_mask(q_pos, k_pos, causal=True,
-                                      window=cfg.attention_window)
+        if q_pos.ndim == 2:   # per-slot decode: (B,1) q vs (B,S) cache
+            mask_b = decode_attention_mask(
+                q_pos, k_pos, True, cfg.attention_window)[:, None]
+        else:
+            mask = attention_weights_mask(q_pos, k_pos, causal=True,
+                                          window=cfg.attention_window)
+            mask_b = mask[None, None]
         scale = 1.0 / math.sqrt(qk_hd)
         logits = (jnp.einsum("bqhx,bshx->bhqs", q_nope, k_nope)
                   + jnp.einsum("bqhx,bsx->bhqs", q_rope, kr)).astype(jnp.float32)
         logits = logits * scale
-        logits = jnp.where(mask[None, None], logits, -1e30)
+        logits = jnp.where(mask_b, logits, -1e30)
         probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
         out = jnp.einsum("bhqs,bshx->bqhx", probs, v)
     out = out.reshape(B, T, H * a.v_head_dim)

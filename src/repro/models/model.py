@@ -79,16 +79,19 @@ def _block_init(key: Array, cfg: ArchConfig, kind: str) -> dict:
 
 
 def _block_apply(p: dict, x: Array, positions: Array, cfg: ArchConfig,
-                 kind: str, cache=None, cache_pos=None, prefix_len: int = 0
-                 ) -> Tuple[Array, Any, Array]:
-    """-> (x_out, new_cache, aux_loss)."""
+                 kind: str, cache=None, cache_pos=None, prefix_len: int = 0,
+                 update=None) -> Tuple[Array, Any, Array]:
+    """-> (x_out, new_cache, aux_loss).  ``update`` (decode only): (B,)
+    mask of batch slots whose attention caches may be written; recurrent
+    (SSM) states are masked by the caller (:meth:`Model.serve_step`)."""
     aux = jnp.zeros((), jnp.float32)
     causal = not cfg.is_encoder
     if kind in ("dense", "encoder", "vlm"):
         h, new_cache = attention_block(p["attn"], rmsnorm(x, p["ln1"], cfg.rms_eps),
                                        positions, cfg, cache=cache,
                                        cache_pos=cache_pos, causal=causal,
-                                       full_prefix=prefix_len)
+                                       full_prefix=prefix_len,
+                                       update=update)
         x = x + h
         x = x + mlp_block(p["mlp"], rmsnorm(x, p["ln2"], cfg.rms_eps),
                           activation="gelu" if kind == "vlm" else "silu")
@@ -96,11 +99,12 @@ def _block_apply(p: dict, x: Array, positions: Array, cfg: ArchConfig,
         xn = rmsnorm(x, p["ln1"], cfg.rms_eps)
         if cfg.mla is not None:
             h, new_cache = mla_block(p["attn"], xn, positions, cfg,
-                                     cache=cache, cache_pos=cache_pos)
+                                     cache=cache, cache_pos=cache_pos,
+                                     update=update)
         else:
             h, new_cache = attention_block(p["attn"], xn, positions, cfg,
                                            cache=cache, cache_pos=cache_pos,
-                                           causal=True)
+                                           causal=True, update=update)
         x = x + h
         mo, aux = moe_block(p["moe"], rmsnorm(x, p["ln2"], cfg.rms_eps), cfg)
         x = x + mo
@@ -111,7 +115,7 @@ def _block_apply(p: dict, x: Array, positions: Array, cfg: ArchConfig,
             a_cache, m_state = cache
         h_attn, a_new = attention_block(p["attn"], xn, positions, cfg,
                                         cache=a_cache, cache_pos=cache_pos,
-                                        causal=True)
+                                        causal=True, update=update)
         h_mamba, m_new = ssm_lib.mamba_forward(p["mamba"], xn, cfg,
                                                state=m_state)
         # parallel-head fusion (arXiv:2411.13676): mean of normalized outputs
@@ -155,6 +159,28 @@ def _pad_cache_capacity(caches: Any, extra: int) -> Any:
         return c
 
     return rec(caches)
+
+
+def _mask_recurrent_states(old: Any, new: Any, update: Array,
+                           batch_axis: int) -> Any:
+    """Merge decode states for a per-slot ``update`` mask: attention
+    caches (KVCache/MLACache) already routed masked-out writes to a
+    dropped row inside their blocks and pass through; every other array
+    leaf is a recurrent (SSM) state updated wholesale, so masked-out
+    slots get their OLD rows back along ``batch_axis`` (1 for stacked
+    scan layouts, 0 for unstacked)."""
+
+    def rec(o, n):
+        if isinstance(n, (KVCache, MLACache)):
+            return n
+        if isinstance(n, tuple):
+            merged = tuple(rec(a, b) for a, b in zip(o, n))
+            return type(n)(*merged) if hasattr(n, "_fields") else merged
+        shape = [1] * n.ndim
+        shape[batch_axis] = n.shape[batch_axis]
+        return jnp.where(update.reshape(shape), n, o)
+
+    return rec(old, new)
 
 
 # ======================================================================
@@ -379,14 +405,32 @@ class Model:
         return DecodeState(caches=caches,
                            position=jnp.asarray(pos, jnp.int32))
 
-    def serve_step(self, params: dict, tokens: Array, state: DecodeState
+    def serve_step(self, params: dict, tokens: Array, state: DecodeState,
+                   update: Optional[Array] = None
                    ) -> Tuple[Array, DecodeState]:
-        """One decode step.  tokens: (B, 1) int32 -> logits (B, V)."""
+        """One decode step.  tokens: (B, 1) int32 -> logits (B, V).
+
+        ``state.position`` may be scalar (all slots advance in lockstep
+        — the legacy/dry-run path, bit-identical to before) or a (B,)
+        per-slot vector, in which case each slot writes its cache at
+        ITS OWN ring position.  ``update`` (requires per-slot
+        positions): (B,) bool — masked-out slots touch NOTHING (caches,
+        recurrent states, and positions stay put; their returned logits
+        are garbage and must be ignored).  This is what lets a serving
+        loop prefill one slot while other slots hold live decodes
+        (serving/decode.py)."""
         cfg = self.cfg
         x = params["embed"][tokens]
         x = x * jnp.sqrt(jnp.asarray(cfg.d_model, x.dtype))
         pos = state.position
-        positions = pos[None].astype(jnp.int32)   # (1,)
+        per_slot = jnp.ndim(pos) == 1
+        if update is not None and not per_slot:
+            raise ValueError("serve_step(update=...) needs per-slot "
+                             "positions: state.position must be (B,)")
+        if per_slot:
+            positions = pos[:, None].astype(jnp.int32)   # (B, 1)
+        else:
+            positions = pos[None].astype(jnp.int32)      # (1,)
 
         if self.scan:
             kind = self.kinds[0]
@@ -395,7 +439,8 @@ class Model:
                 layer_p, cache = xs
                 h, new_cache, _ = _block_apply(layer_p, h, positions, cfg,
                                                kind, cache=cache,
-                                               cache_pos=pos)
+                                               cache_pos=pos,
+                                               update=update)
                 return h, new_cache
 
             x, new_caches = jax.lax.scan(body, x,
@@ -407,12 +452,22 @@ class Model:
                 lp = (layers[i] if isinstance(layers, tuple)
                       else jax.tree.map(lambda t: t[i], layers))
                 x, nc, _ = _block_apply(lp, x, positions, cfg, kind,
-                                        cache=state.caches[i], cache_pos=pos)
+                                        cache=state.caches[i], cache_pos=pos,
+                                        update=update)
                 new_caches.append(nc)
             new_caches = tuple(new_caches)
+
+        if update is not None:
+            new_caches = _mask_recurrent_states(
+                state.caches, new_caches, update,
+                batch_axis=1 if self.scan else 0)
 
         x = rmsnorm(x, params["final_norm"], cfg.rms_eps)
         head = (params["embed"].T if cfg.tie_embeddings
                 and "lm_head" not in params else params["lm_head"])
         logits = (x @ head)[:, 0, :cfg.vocab_size]
-        return logits, DecodeState(caches=new_caches, position=pos + 1)
+        if update is None:
+            new_pos = pos + 1
+        else:
+            new_pos = jnp.where(update, pos + 1, pos)
+        return logits, DecodeState(caches=new_caches, position=new_pos)

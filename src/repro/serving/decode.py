@@ -1,9 +1,23 @@
 """Batched decode serving: the ``serve_step`` the decode input-shapes
 lower, plus a small request-batching driver for the serving example.
 
-``serve_step(params, tokens, state)`` advances EVERY sequence in the
-batch by one token against its KV cache (or SSM state), the standard
-continuous-batching inner loop.
+``serve_step(params, tokens, state, update)`` advances the unmasked
+sequences in the batch by one token against their KV caches (or SSM
+states), the standard continuous-batching inner loop.  The server keeps
+PER-SLOT cache positions (``DecodeState.position`` as a (B,) vector)
+so that
+
+* prefilling a freed slot touches ONLY that slot — in-flight decodes on
+  other slots keep their caches byte-identical (the ``update`` mask
+  routes masked slots' cache writes to a dropped row);
+* a reused slot restarts its ring position at 0 instead of inheriting
+  the previous occupant's offset (which would burn cache capacity and
+  eventually wrap mid-sequence), and its cache rows — attention KV AND
+  recurrent (SSM/xLSTM) states, which have no positions to mask — are
+  restored to their initial values, so nothing of the old sequence
+  leaks into the new request;
+* an empty prompt is decoded from a BOS-0 seed token instead of
+  reading logits that were never produced.
 """
 from __future__ import annotations
 
@@ -17,6 +31,8 @@ import numpy as np
 from repro.models.model import DecodeState, Model
 
 Array = jax.Array
+
+BOS_TOKEN = 0   # seed for empty prompts
 
 
 @dataclasses.dataclass
@@ -41,30 +57,73 @@ class DecodeServer:
         self.params = params
         self.batch = batch_size
         self.max_seq = max_seq_len
-        self.state = model.init_decode_state(batch_size, max_seq_len,
-                                             position=0)
+        self.state = model.init_decode_state(
+            batch_size, max_seq_len, position=0)._replace(
+            position=jnp.zeros((batch_size,), jnp.int32))
+        # pristine copy of the initial caches: slot reuse restores its
+        # rows from here — the ring's wrap accounting hides old KV, but
+        # recurrent (SSM) states have no positions and would otherwise
+        # leak the previous occupant's hidden state into the new request
+        self._init_caches = self.state.caches
         self._step = jax.jit(model.serve_step)
         self.slots: List[Optional[Request]] = [None] * batch_size
         self._next_tok = np.zeros((batch_size, 1), np.int32)
 
+    def _slot_positions(self) -> np.ndarray:
+        return np.array(self.state.position)   # owned, writable copy
+
+    def _reset_slot(self, slot: int) -> None:
+        """Restore one slot's cache rows to their initial (empty) state
+        and restart its ring position at 0."""
+        axis = 1 if self.model.scan else 0   # scan stacks a layer dim
+
+        def reset(cur, init):
+            idx = [slice(None)] * cur.ndim
+            idx[axis] = slot
+            return cur.at[tuple(idx)].set(init[tuple(idx)])
+
+        caches = jax.tree.map(reset, self.state.caches, self._init_caches)
+        pos = self._slot_positions()
+        pos[slot] = 0
+        self.state = DecodeState(caches=caches, position=jnp.asarray(pos))
+
     def prefill(self, slot: int, req: Request) -> None:
-        """Token-by-token prefill (teacher-forcing the prompt).  A bulk
+        """Token-by-token prefill (teacher-forcing the prompt) MASKED to
+        ``slot`` — other slots' caches, recurrent states, and positions
+        are untouched, so calling this mid-decode (the continuous-
+        batching refill) cannot corrupt in-flight sequences.  A bulk
         prefill path exists via Model.forward; this keeps the example
         dependency-free."""
         self.slots[slot] = req
-        for t in req.prompt:
+        # reuse: ring position restarts at 0 AND the slot's cache rows
+        # (attention KV and recurrent states alike) return to their
+        # initial values — nothing of the previous occupant survives
+        self._reset_slot(slot)
+        upd = np.zeros((self.batch,), bool)
+        upd[slot] = True
+        upd = jnp.asarray(upd)
+        prompt = req.prompt if req.prompt else [BOS_TOKEN]
+        for t in prompt:
             self._next_tok[slot, 0] = t
+            # jnp.array COPIES the host buffer: jnp.asarray can alias
+            # numpy memory on CPU, and mutating _next_tok on the next
+            # iteration would race with the in-flight async dispatch
             logits, self.state = self._step(
-                self.params, jnp.asarray(self._next_tok), self.state)
+                self.params, jnp.array(self._next_tok), self.state, upd)
         self._next_tok[slot, 0] = int(np.argmax(
             np.asarray(logits[slot])))
 
     def step(self) -> None:
+        active = np.asarray([r is not None and not r.done
+                             for r in self.slots])
+        if not active.any():
+            return
         logits, self.state = self._step(
-            self.params, jnp.asarray(self._next_tok), self.state)
+            self.params, jnp.array(self._next_tok), self.state,
+            jnp.asarray(active))   # jnp.array: copy, see prefill
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
         for i, req in enumerate(self.slots):
-            if req is not None and not req.done:
+            if active[i]:
                 req.generated.append(int(self._next_tok[i, 0]))
                 self._next_tok[i, 0] = nxt[i]
 

@@ -1,4 +1,12 @@
-"""Training-loop driver: batches -> jit step -> metrics/checkpoints."""
+"""Training-loop driver: batches -> jit step -> metrics/checkpoints.
+
+Resume contract: both the per-round randomness and the checkpoint
+numbering derive from the GLOBAL step carried in ``state.step``, not
+the loop-local iteration index — a run resumed from a restored
+``TrainState`` continues the key stream where it left off instead of
+replaying round 0's randomness, and its checkpoints never overwrite
+the earlier run's files (tests/test_training_resume.py).
+"""
 from __future__ import annotations
 
 from typing import Callable, Iterator, Optional
@@ -10,6 +18,15 @@ from repro.data.sharding import place_batch
 from repro.training.checkpoints import save_checkpoint
 from repro.training.metrics import MetricsLogger
 from repro.training.trainer import Trainer, TrainState
+
+
+def round_train_key(seed: int, global_step: int) -> jax.Array:
+    """The canonical per-round key of the LM training loops — shared by
+    the sync loop below and the gang-scheduled cohort scheduler
+    (repro/fl/cohorts.py), so the two runtimes consume identical
+    randomness for a given global step (the trainer-scale sync-limit
+    parity contract, DESIGN.md §10)."""
+    return jax.random.key(seed + global_step)
 
 
 def train(trainer: Trainer, state: TrainState,
@@ -24,18 +41,21 @@ def train(trainer: Trainer, state: TrainState,
     step_fn = trainer.jit_train_step(first)
     mesh = trainer.mesh
     data_axes = trainer.cfg.dasha.data_axes
+    start = int(jax.device_get(state.step))
 
     batch = first
     for i in range(num_steps):
+        gstep = start + i
         placed = place_batch(batch, mesh, data_axes)
-        key = jax.random.key(seed + i)
+        key = round_train_key(seed, gstep)
         state, metrics = step_fn(state, placed, key)
         if i % log_every == 0 or i == num_steps - 1:
-            logger.log(i, loss=metrics.loss, grad_norm=metrics.grad_norm,
+            logger.log(gstep, loss=metrics.loss, grad_norm=metrics.grad_norm,
                        bits_sent=metrics.bits_sent,
                        participants=metrics.participants)
-        if checkpoint_dir and checkpoint_every and (i + 1) % checkpoint_every == 0:
-            save_checkpoint(checkpoint_dir, state, i + 1)
+        if checkpoint_dir and checkpoint_every \
+                and (gstep + 1) % checkpoint_every == 0:
+            save_checkpoint(checkpoint_dir, state, gstep + 1)
         if i < num_steps - 1:
             batch = next(batches)
     return state

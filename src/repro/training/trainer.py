@@ -41,8 +41,8 @@ from jax.sharding import PartitionSpec as P
 from repro.core import variants
 from repro.core.problems import sample_batch_indices
 from repro.core.sharded import (ShardedDasha, ShardedDashaConfig,
-                                ShardedDashaState, component_spec,
-                                estimator_spec, node_spec,
+                                ShardedDashaState, ShardedDispatch,
+                                component_spec, estimator_spec, node_spec,
                                 per_node_value_and_grads)
 from repro.data.sharding import batch_specs
 from repro.models.common import param_specs_like
@@ -61,6 +61,12 @@ class TrainState(NamedTuple):
     # gradient-variant eval reuse: (losses (n,), per-node grads) at the
     # CURRENT params — next round's old-point pair.  () when disabled.
     cache: Any = ()
+
+
+def _tree_norm(tree: PyTree) -> Array:
+    return jnp.sqrt(sum(
+        jnp.sum(jnp.square(x.astype(jnp.float32)))
+        for x in jax.tree.leaves(tree)))
 
 
 class TrainMetrics(NamedTuple):
@@ -186,8 +192,12 @@ class Trainer:
                        out_shardings=shardings)(key)
 
     # ---- the step --------------------------------------------------------
-    def train_step(self, state: TrainState, batch: PyTree, key: Array
-                   ) -> Tuple[TrainState, TrainMetrics]:
+    def _advance_and_grads(self, state: TrainState, batch: PyTree,
+                           key: Array):
+        """Phases (1)-(2) of the step — the server update of the params
+        with g^t plus the variant's per-node gradient oracles — shared
+        verbatim between the sync :meth:`train_step` and the async
+        :meth:`dispatch_step` (DESIGN.md §10)."""
         model, eng, cfg = self.model, self.engine, self.cfg
 
         # (1) server step with g^t
@@ -279,13 +289,20 @@ class Trainer:
             losses_old, g_old = per_node_value_and_grads(
                 node_loss, state.params, batch)
 
-        # (3) DASHA-PP node/aggregation update
-        dasha_new, wire = eng.node_update(g_new, g_old, state.dasha, key,
-                                          **node_kwargs)
+        return (params_new, opt_new, cache_new, losses_new, losses_old,
+                g_new, g_old, node_kwargs)
 
-        gn = jnp.sqrt(sum(
-            jnp.sum(jnp.square(x.astype(jnp.float32)))
-            for x in jax.tree.leaves(dasha_new.g)))
+    def train_step(self, state: TrainState, batch: PyTree, key: Array
+                   ) -> Tuple[TrainState, TrainMetrics]:
+        (params_new, opt_new, cache_new, losses_new, losses_old,
+         g_new, g_old, node_kwargs) = self._advance_and_grads(
+            state, batch, key)
+
+        # (3) DASHA-PP node/aggregation update
+        dasha_new, wire = self.engine.node_update(
+            g_new, g_old, state.dasha, key, **node_kwargs)
+
+        gn = _tree_norm(dasha_new.g)
         metrics = TrainMetrics(loss=jnp.mean(losses_new),
                                loss_old=jnp.mean(losses_old),
                                grad_norm=gn,
@@ -294,6 +311,48 @@ class Trainer:
                                participants=wire.participants)
         return TrainState(params=params_new, dasha=dasha_new, opt=opt_new,
                           step=state.step + 1, cache=cache_new), metrics
+
+    def dispatch_step(self, state: TrainState, batch: PyTree, key: Array,
+                      participation_mask: Array
+                      ) -> Tuple[TrainState, ShardedDispatch, TrainMetrics]:
+        """One gang-scheduled round (DESIGN.md §10): the server update
+        of the params with the CURRENT g plus the cohort's client-side
+        work (:meth:`ShardedDasha.dispatch` over the mesh), WITHOUT
+        applying the cohort's contribution — the scheduler buffers the
+        returned :class:`ShardedDispatch` by virtual arrival time and
+        commits it later through :meth:`commit_step`.
+
+        ``participation_mask`` is the (n,) cohort the scheduler settled
+        on (``sampled & idle & available``); the engine's round counter
+        advances here so the key stream stays aligned with the sync
+        path.  ``metrics.grad_norm`` reports ‖g^t‖ — the estimator this
+        dispatch consumed (commits change g between rounds)."""
+        (params_new, opt_new, cache_new, losses_new, losses_old,
+         g_new, g_old, node_kwargs) = self._advance_and_grads(
+            state, batch, key)
+
+        disp, wire = self.engine.dispatch(
+            g_new, g_old, state.dasha, key,
+            participation_mask=participation_mask, **node_kwargs)
+
+        metrics = TrainMetrics(loss=jnp.mean(losses_new),
+                               loss_old=jnp.mean(losses_old),
+                               grad_norm=_tree_norm(state.dasha.g),
+                               step=state.step,
+                               bits_sent=wire.bits_sent,
+                               participants=wire.participants)
+        dasha_new = state.dasha._replace(step=state.dasha.step + 1)
+        new_state = TrainState(params=params_new, dasha=dasha_new,
+                               opt=opt_new, step=state.step + 1,
+                               cache=cache_new)
+        return new_state, disp, metrics
+
+    def commit_step(self, state: TrainState, disp: ShardedDispatch,
+                    weight: Array) -> TrainState:
+        """Apply one buffered cohort with staleness weight ``w(s)``
+        (:meth:`ShardedDasha.commit`)."""
+        return state._replace(
+            dasha=self.engine.commit(state.dasha, disp, weight))
 
     def jit_train_step(self, batch_example: PyTree):
         """jit with explicit shardings (used by train loop and dry-run)."""
@@ -308,3 +367,43 @@ class Trainer:
             out_shardings=(to_shard(specs), None),
             donate_argnums=(0,),
         )
+
+    # ---- the async (gang-scheduled) halves -------------------------------
+    def dispatch_specs(self) -> ShardedDispatch:
+        """PartitionSpecs of one cohort's :class:`ShardedDispatch`."""
+        ps = self.param_specs
+        axes = self.cfg.dasha.data_axes
+        lead = axes[0] if len(axes) == 1 else tuple(axes)
+        nspec = jax.tree.map(lambda s: node_spec(s, axes), ps,
+                             is_leaf=lambda x: isinstance(x, P))
+        espec = jax.tree.map(lambda s: estimator_spec(s, axes), ps,
+                             is_leaf=lambda x: isinstance(x, P))
+        hij_spec = None
+        if self.rule.component_trackers:
+            hij_spec = jax.tree.map(lambda s: component_spec(s, axes), ps,
+                                    is_leaf=lambda x: isinstance(x, P))
+        return ShardedDispatch(h_new=nspec, g_i_inc=nspec, g_delta=espec,
+                               h_ij_new=hij_spec, part=P(lead))
+
+    def jit_dispatch_step(self, batch_example: PyTree):
+        """jit of :meth:`dispatch_step` with explicit shardings; the
+        (n,) participation mask rides the data axes."""
+        specs = self.state_specs()
+        bspecs = batch_specs(batch_example, self.cfg.dasha.data_axes)
+        axes = self.cfg.dasha.data_axes
+        lead = axes[0] if len(axes) == 1 else tuple(axes)
+        to_shard = lambda tree: jax.tree.map(
+            lambda s: NamedSharding(self.mesh, s), tree,
+            is_leaf=lambda x: isinstance(x, P))
+        return jax.jit(
+            self.dispatch_step,
+            in_shardings=(to_shard(specs), to_shard(bspecs), None,
+                          NamedSharding(self.mesh, P(lead))),
+            out_shardings=(to_shard(specs), to_shard(self.dispatch_specs()),
+                           None),
+        )
+
+    def jit_commit_step(self):
+        """jit of :meth:`commit_step`; the weight is a traced scalar so
+        one compilation serves every staleness level."""
+        return jax.jit(self.commit_step, donate_argnums=(0,))

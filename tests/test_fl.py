@@ -10,9 +10,10 @@ import pytest
 from repro.core import (LogisticSigmoidProblem, RandK, RandomDithering,
                         SNice, TopK, make_synthetic_classification)
 from repro.core.dasha_pp import DashaPP, DashaPPConfig
-from repro.fl import (ARRIVAL, REJOIN, AsyncConfig, AsyncDashaServer,
-                      ConstantLatency, EventQueue, LognormalLatency,
-                      make_latency)
+from repro.fl import (ARRIVAL, REJOIN, AdaptiveStaleness, AsyncConfig,
+                      AsyncDashaServer, ConstantLatency, EventQueue,
+                      LognormalLatency, PoissonAvailability,
+                      PowerLawStaleness, make_latency, make_staleness)
 
 N, M, D, B = 6, 5, 16, 2
 
@@ -281,3 +282,153 @@ def test_async_config_validation():
     with pytest.raises(ValueError):
         AsyncConfig(buffer_size=0)
     AsyncConfig(buffer_size=None)   # barrier is fine
+    with pytest.raises(ValueError):
+        AsyncConfig(staleness_policy="bogus")
+
+
+def test_server_clock_advances_through_fleet_wide_outage(fl_problem):
+    """Frozen-clock guard: availability is a function of virtual time,
+    so when the whole fleet is idle-but-offline with nothing in flight
+    the server must tick the clock forward for the outage windows to
+    ever end — pre-fix, `now` froze and the fleet never recovered."""
+    av = PoissonAvailability(rate=5.0, off_mean=3.0, seed=7)
+    srv = AsyncDashaServer(fl_problem, RandK(k=4), SNice(n=N, s=3),
+                           _cfg("mvr"), AsyncConfig(buffer_size=2),
+                           ConstantLatency(compute_s=0.5),
+                           availability=av)
+    _, res = srv.run(jax.random.key(1), jnp.zeros(D), 60)
+    assert res.skipped_offline.sum() > 0          # outages really hit
+    half = len(res.participants) // 2
+    assert res.participants[half:].sum() > 0      # ...and ended
+    assert res.committed.sum() > 0
+    assert res.total_time > 1.0                   # the clock moved
+
+
+def test_cohort_scheduler_rejects_dropout_latency():
+    """The gang transport is reliable by construction: a latency model
+    with dropout > 0 is refused loudly instead of silently simulated
+    as lossless (the guard fires before the trainer is touched)."""
+    from repro.fl import CohortConfig, CohortScheduler
+    with pytest.raises(ValueError, match="dropout"):
+        CohortScheduler(None, LognormalLatency(dropout=0.3))
+    with pytest.raises(ValueError):
+        CohortConfig(buffer_cohorts=0)
+    with pytest.raises(ValueError):
+        CohortConfig(staleness_policy="bogus")
+
+
+# ----------------------------------------------------------------------
+# Drain-phase staleness accounting (the satellite fix)
+# ----------------------------------------------------------------------
+
+
+def test_drain_staleness_advances_per_chunk(fl_problem):
+    """Drain chunks are dispatch-free server steps: the effective round
+    index keeps advancing, so jobs landing after the last round carry
+    their real staleness.  With max_staleness=0 and a fleet whose every
+    job lands long after the run, exactly ONE commit (round 0's own,
+    s=0) survives — the pre-fix code stamped all drained arrivals with
+    the last round index and wrongly committed the final round's jobs
+    as fresh."""
+    lat = ConstantLatency(compute_s=1000.0)
+    _, res = _run_async(fl_problem, _cfg("mvr"),
+                        AsyncConfig(buffer_size=1, max_staleness=0),
+                        lat, rounds=2)
+    arrivals = sum(1 for e in res.event_log if e[2] == ARRIVAL)
+    assert int(res.committed.sum()) == 1
+    assert res.staleness_hist == {0: 1}
+    assert res.discarded_stale == arrivals - 1
+    # drain rows (beyond the 2 in-loop rounds) committed nothing
+    assert int(res.committed[2:].sum()) == 0
+
+
+# ----------------------------------------------------------------------
+# Staleness policies (power law + delay-adaptive) and Poisson windows
+# ----------------------------------------------------------------------
+
+
+def test_staleness_policy_registry_and_weights():
+    p = make_staleness("power", exponent=0.5)
+    assert isinstance(p, PowerLawStaleness)
+    assert p.weight(0) == 1.0
+    assert p.weight(3) == pytest.approx(4.0 ** -0.5)
+    a = make_staleness("adaptive", exponent=0.5)
+    assert isinstance(a, AdaptiveStaleness)
+    assert a.weight(0) == 1.0
+    # before any observation, adaptive == power law
+    assert a.weight(3) == pytest.approx(4.0 ** -0.5)
+    for s in (4, 4, 4):
+        a.observe(s)
+    # recentred: typical staleness is no longer discounted...
+    assert a.mean_observed == pytest.approx(4.0)
+    assert a.weight(4) == pytest.approx(1.0)
+    # ...weights are clipped at 1 and still decay beyond the mean
+    assert a.weight(1) == 1.0
+    assert 0.0 < a.weight(20) < a.weight(8) < 1.0
+    with pytest.raises(ValueError):
+        make_staleness("bogus")
+
+
+def test_adaptive_policy_sync_limit_parity(fl_problem):
+    """Zero jitter ⇒ every commit has s=0 ⇒ adaptive weights are
+    identically 1: the §9 parity contract holds under the new policy."""
+    st_ref = _run_sync(fl_problem, _cfg("mvr"))
+    st, res = _run_async(fl_problem, _cfg("mvr"),
+                         AsyncConfig(buffer_size=3,
+                                     staleness_policy="adaptive"),
+                         ConstantLatency())
+    np.testing.assert_allclose(np.asarray(st_ref.x), np.asarray(st.x),
+                               rtol=1e-4, atol=1e-6)
+    assert set(res.staleness_hist) == {0}
+
+
+def test_adaptive_policy_replay_determinism_and_effect(fl_problem):
+    """The stateful adaptive policy stays replay-deterministic (a fresh
+    instance per run), and under heterogeneity it actually changes the
+    trajectory vs the fixed power law."""
+    lat = LognormalLatency(sigma=1.2, client_sigma=1.2, seed=3)
+    acfg = AsyncConfig(buffer_size=1, staleness_policy="adaptive")
+    (s1, r1), (s2, r2) = [
+        _run_async(fl_problem, _cfg("mvr"), acfg, lat, rounds=25)
+        for _ in range(2)]
+    assert r1.event_log == r2.event_log
+    np.testing.assert_array_equal(np.asarray(s1.x), np.asarray(s2.x))
+    s_pow, r_pow = _run_async(fl_problem, _cfg("mvr"),
+                              AsyncConfig(buffer_size=1), lat, rounds=25)
+    assert r_pow.event_log == r1.event_log   # schedule is policy-free
+    assert any(s > 0 for s in r1.staleness_hist)
+    assert not np.allclose(np.asarray(s1.x), np.asarray(s_pow.x))
+
+
+def test_poisson_availability_windows():
+    av = PoissonAvailability(rate=0.5, off_mean=2.0, seed=1)
+    av2 = PoissonAvailability(rate=0.5, off_mean=2.0, seed=1)
+    ts = np.linspace(0.0, 50.0, 201)
+    masks = np.asarray([av.mask(6, t) for t in ts])
+    masks2 = np.asarray([av2.mask(6, t) for t in ts])
+    np.testing.assert_array_equal(masks, masks2)       # deterministic
+    assert not masks.all() and masks.any()             # windows both ways
+    # querying out of order replays identically (lazy extension safety)
+    av3 = PoissonAvailability(rate=0.5, off_mean=2.0, seed=1)
+    rev = np.asarray([av3.mask(6, t) for t in ts[::-1]])[::-1]
+    np.testing.assert_array_equal(masks, rev)
+    # rate=0 is the always-available identity
+    assert PoissonAvailability(rate=0.0).mask(4, 123.0).all()
+    with pytest.raises(ValueError):
+        PoissonAvailability(rate=-1.0)
+
+
+def test_server_with_poisson_availability(fl_problem):
+    """Sampled-but-offline clients skip the round (traced), dispatch
+    conservation still holds, and the run stays finite."""
+    av = PoissonAvailability(rate=0.4, off_mean=3.0, seed=2)
+    srv = AsyncDashaServer(fl_problem, RandK(k=4), SNice(n=N, s=3),
+                           _cfg("mvr"), AsyncConfig(buffer_size=2),
+                           LognormalLatency(sigma=0.5, client_sigma=0.5,
+                                            seed=1),
+                           availability=av)
+    st, res = srv.run(jax.random.key(4), jnp.zeros(D), 40)
+    assert res.skipped_offline.sum() > 0
+    assert res.committed.sum() == res.participants.sum()
+    assert np.all(np.isfinite(res.loss))
+    assert np.all(np.isfinite(np.asarray(st.x)))

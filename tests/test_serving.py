@@ -1,0 +1,144 @@
+"""DecodeServer correctness (the serving satellite of the async-cohort
+PR): continuous-batching prefill must not corrupt live slots, reused
+slots restart their ring position, empty prompts decode from BOS.
+
+The isolation asserts are BITWISE on cache bytes within one server
+instance.  Greedy token ids are deliberately NOT compared across
+separately-run decodes: the tiny random-param smoke models produce
+near-tie logits, and float reductions on the CPU backend are not
+reliably run-to-run deterministic (thread-partition dependent), so
+token-sequence equality flakes even for correct code.  (The byte
+asserts also pin the separate host-buffer race fix: _next_tok is
+copied per step because jnp.asarray can alias numpy memory on CPU and
+race with the in-flight dispatch.)"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import Model, get_smoke_config
+from repro.serving.decode import DecodeServer, Request
+
+
+def _model(arch="granite-3-2b"):
+    cfg = get_smoke_config(arch)
+    model = Model(cfg)
+    params = model.init_params(jax.random.key(0))
+    return cfg, model, params
+
+
+def _slot_rows(caches, i):
+    """Slot ``i``'s rows of every cache/state leaf (smoke models are
+    unscanned: batch axis 0 everywhere)."""
+    return [np.asarray(l)[i].copy()
+            for l in jax.tree_util.tree_leaves(caches)]
+
+
+@pytest.mark.parametrize("arch", ["granite-3-2b", "xlstm-350m"])
+def test_prefill_isolated_from_live_decodes(arch):
+    """Refilling a freed slot mid-decode leaves the in-flight slot's
+    KV cache / recurrent state, ring position, and pending token
+    byte-identical — pre-fix, every per-token prefill _step advanced
+    ALL slots, appending stale garbage to live caches and positions."""
+    cfg, model, params = _model(arch)
+    srv = DecodeServer(model, params, batch_size=2, max_seq_len=32)
+    live = Request(uid=0, prompt=[1, 2, 3], max_new_tokens=10)
+    srv.prefill(0, live)
+    srv.step()
+    srv.step()   # slot 0 is now mid-decode
+    rows_before = _slot_rows(srv.state.caches, 0)
+    pos_before = int(np.asarray(srv.state.position)[0])
+    tok_before = int(srv._next_tok[0, 0])
+    gen_before = list(live.generated)
+
+    # the continuous-batching refill: prefill slot 1 while slot 0 lives
+    srv.prefill(1, Request(uid=1, prompt=[7, 5, 9, 2], max_new_tokens=2))
+
+    for before, after in zip(rows_before, _slot_rows(srv.state.caches, 0)):
+        np.testing.assert_array_equal(before, after)
+    assert int(np.asarray(srv.state.position)[0]) == pos_before
+    assert int(srv._next_tok[0, 0]) == tok_before
+    assert live.generated == gen_before
+    # and the batch keeps decoding to completion
+    while not (live.done and srv.slots[1].done):
+        srv.step()
+    assert len(live.generated) == 10
+
+
+@pytest.mark.parametrize("arch", ["granite-3-2b", "xlstm-350m"])
+def test_slot_reuse_resets_cache_position(arch):
+    """A reused slot restarts its ring at 0 (pre-fix it inherited the
+    previous occupant's offset, eventually wrapping mid-sequence) AND
+    its cache rows return to their initial values — including the
+    recurrent xLSTM states, which have no positions to mask — so its
+    fresh prefill matches a never-used server's allclose."""
+    cfg, model, params = _model(arch)
+    max_seq = 12   # one request fits; several sequential ones would not
+    srv = DecodeServer(model, params, batch_size=1, max_seq_len=max_seq)
+    srv.run([Request(uid=0, prompt=[1, 2, 3], max_new_tokens=6)])
+    assert int(np.asarray(srv.state.position)[0]) == 9   # 3 + 6
+
+    srv.prefill(0, Request(uid=1, prompt=[4, 5], max_new_tokens=6))
+    # position restarted at 0 and advanced by the new prompt only
+    assert int(np.asarray(srv.state.position)[0]) == 2
+
+    fresh = DecodeServer(model, params, batch_size=1, max_seq_len=max_seq)
+    fresh.prefill(0, Request(uid=1, prompt=[4, 5], max_new_tokens=6))
+    # the reused slot carries ONLY the new prompt: every cache/state
+    # leaf matches a fresh server (allclose: separate jit compilations)
+    for a, b in zip(_slot_rows(srv.state.caches, 0),
+                    _slot_rows(fresh.state.caches, 0)):
+        np.testing.assert_allclose(a, b, rtol=2e-4, atol=1e-5)
+
+    # many sequential requests never grow the position past one sequence
+    srv.run([Request(uid=i, prompt=[i % 5 + 1, 2], max_new_tokens=6)
+             for i in range(2, 5)])
+    assert int(np.asarray(srv.state.position)[0]) <= max_seq
+
+
+def test_empty_prompt_decodes_from_bos():
+    """An empty prompt is seeded with BOS=0 instead of dying on unbound
+    logits (the pre-fix NameError)."""
+    cfg, model, params = _model()
+    srv = DecodeServer(model, params, batch_size=2, max_seq_len=16)
+    req = Request(uid=0, prompt=[], max_new_tokens=3)
+    srv.run([req])
+    assert len(req.generated) == 3
+    assert all(0 <= t < cfg.padded_vocab for t in req.generated)
+
+
+def test_serve_step_update_mask_freezes_slots():
+    """Model-level contract: a masked-out slot's cache bytes and
+    position are bit-identical before and after a serve_step."""
+    cfg, model, params = _model()
+    B = 2
+    state = model.init_decode_state(B, 16, position=0)._replace(
+        position=jnp.asarray([3, 5], jnp.int32))
+    # write a recognizable token into both slots first (all-on mask)
+    tok = jnp.asarray([[4], [9]], jnp.int32)
+    step = jax.jit(model.serve_step)
+    _, state = step(params, tok, state, jnp.asarray([True, True]))
+    frozen = jax.tree.map(lambda x: np.asarray(x).copy(), state.caches)
+    _, state2 = step(params, tok, state, jnp.asarray([True, False]))
+    assert int(state2.position[0]) == int(state.position[0]) + 1
+    assert int(state2.position[1]) == int(state.position[1])
+
+    for a, b in zip(_slot_rows(frozen, 1), _slot_rows(state2.caches, 1)):
+        np.testing.assert_array_equal(a, b)
+    # ...while slot 0 did change
+    changed = any(not np.array_equal(a, b)
+                  for a, b in zip(_slot_rows(frozen, 0),
+                                  _slot_rows(state2.caches, 0)))
+    assert changed
+
+
+def test_serve_step_scalar_position_unchanged():
+    """The legacy lockstep path (scalar position, no update mask) is
+    untouched: position stays scalar and advances by one."""
+    cfg, model, params = _model()
+    state = model.init_decode_state(2, 16, position=0)
+    tok = jnp.asarray([[4], [9]], jnp.int32)
+    logits, state2 = jax.jit(model.serve_step)(params, tok, state)
+    assert logits.shape == (2, cfg.vocab_size)
+    assert np.asarray(state2.position).ndim == 0
+    assert int(state2.position) == 1

@@ -1,0 +1,104 @@
+"""train() resume correctness (training/loop.py): round keys and
+checkpoint numbering derive from the GLOBAL step in state.step, so a
+resumed run continues the randomness stream instead of replaying round
+0's and never clobbers the earlier run's checkpoint files.  Subprocess
++ host mesh, same pattern as tests/test_sharded.py."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_sub(code: str, devices: int = 8, timeout: int = 520) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, timeout=timeout,
+                         env=env, cwd=REPO)
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    return out.stdout
+
+
+@pytest.mark.slow
+def test_train_loop_resume_trajectory_parity():
+    """save -> restore -> resume THROUGH train() equals the
+    uninterrupted train() run (gradient variant: the eval-reuse cache
+    leaves round-trip through restore_checkpoint), and the resumed
+    run's checkpoints extend the numbering instead of overwriting the
+    earlier files."""
+    out = run_sub("""
+import glob, os, tempfile
+import jax, jax.numpy as jnp, numpy as np
+from repro.compat import make_mesh, use_mesh
+from repro.models import Model, get_smoke_config
+from repro.core.sharded import ShardedDashaConfig
+from repro.training.checkpoints import latest_step, restore_checkpoint
+from repro.training.loop import train
+from repro.training.trainer import Trainer, TrainerConfig
+from repro.training.optim import adamw_server
+from repro.training.metrics import MetricsLogger
+
+mesh = make_mesh((4, 2), ('data', 'model'))
+cfg = get_smoke_config('granite-3-2b').with_overrides(vocab_size=64)
+model = Model(cfg)
+dcfg = ShardedDashaConfig(gamma=0.0, a=0.02, b=0.9, p_a=0.5,
+                          sampler='independent', compression_ratio=0.1,
+                          block_size=64, data_axes=('data',),
+                          variant='gradient')
+
+def make_trainer():
+    return Trainer(model, mesh, TrainerConfig(
+        dasha=dcfg, server=adamw_server(lr=3e-3, warmup=5)))
+
+toks = jnp.tile(jnp.arange(32) % 7, (4, 2, 1)).astype(jnp.int32)
+batch = {'tokens': toks}
+
+def fixed():
+    while True:
+        yield batch
+
+quiet = lambda: MetricsLogger(print_every=1000)
+ckpt = tempfile.mkdtemp()
+with use_mesh(mesh):
+    # uninterrupted 6 steps, checkpoints at global steps 3 and 6
+    tr = make_trainer()
+    full = train(tr, tr.init(jax.random.key(0)), fixed(), num_steps=6,
+                 checkpoint_dir=ckpt, checkpoint_every=3, seed=11,
+                 logger=quiet())
+    files_a = sorted(glob.glob(os.path.join(ckpt, 'ckpt_*.npz')))
+    assert [os.path.basename(f) for f in files_a] == [
+        'ckpt_00000003.npz', 'ckpt_00000006.npz'], files_a
+
+    # restore at 3 and resume 3 more steps THROUGH train()
+    tr2 = make_trainer()
+    like = tr2.init(jax.random.key(0))
+    restored = restore_checkpoint(ckpt, like, step=3)
+    assert int(jax.device_get(restored.step)) == 3
+    # the gradient-variant cache leaves round-tripped
+    assert len(jax.tree.leaves(restored.cache)) == \
+        len(jax.tree.leaves(like.cache)) > 0
+    resumed = train(tr2, restored, fixed(), num_steps=3,
+                    checkpoint_dir=ckpt, checkpoint_every=3, seed=11,
+                    logger=quiet())
+
+    # trajectory parity with the uninterrupted run (pre-fix, the resume
+    # replayed round 0-2 keys and diverged)
+    for a, b in zip(jax.tree.leaves(full), jax.tree.leaves(resumed)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-7)
+
+    # the resumed run saved at global step 6 — it did NOT overwrite the
+    # step-3 file (pre-fix it saved at local i+1 = 3)
+    files_b = sorted(glob.glob(os.path.join(ckpt, 'ckpt_*.npz')))
+    assert files_b == files_a
+    assert latest_step(ckpt) == 6
+    re3 = restore_checkpoint(ckpt, like, step=3)
+    assert int(jax.device_get(re3.step)) == 3
+print('OK')
+""")
+    assert "OK" in out
