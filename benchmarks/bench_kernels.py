@@ -33,7 +33,8 @@ from repro.kernels.ops import (buffered_commit_op,
                                dasha_page_update_op,
                                dasha_payload_blocks_op, dasha_tail_op,
                                dasha_update_batched_op, dasha_update_op,
-                               interpret_default)
+                               interpret_default, paged_attention_op)
+from repro.kernels.paged_attention import paged_attention_ref
 
 SPEEDUP_TARGET = 1.2   # acceptance: fused >= 1.2x on the update phase
 
@@ -195,6 +196,35 @@ def run(d: int = 1 << 20, n: int = 8, quick: bool = False):
                                               wts),
         b_unfused=hlo_bytes(cunf2, gsrv, mbuf, wts), ideal=ideal,
         err=_max_err([cfus2(gsrv, mbuf, wts)], [cunf2(gsrv, mbuf, wts)]),
+        interpret=interpret))
+
+    # -- paged-attention decode read (serving §11) -----------------------
+    # the unfused jnp path gathers the full (B, M*P) context into HBM
+    # before the attention reduction reads it back; the kernel streams
+    # each page through VMEM once with the softmax state in scratch.
+    B, H, kvh, hd = (2, 4, 2, 32) if quick else (8, 8, 4, 64)
+    P_pg, M_pg = (8, 4) if quick else (16, 16)
+    NP_pg = 2 * B * M_pg
+    pkey = jax.random.fold_in(key, 99)
+    qd = jax.random.normal(jax.random.fold_in(pkey, 0), (B, H, hd))
+    kpg = jax.random.normal(jax.random.fold_in(pkey, 1), (NP_pg, P_pg, kvh, hd))
+    vpg = jax.random.normal(jax.random.fold_in(pkey, 2), (NP_pg, P_pg, kvh, hd))
+    prng = np.random.default_rng(0)
+    table = jnp.asarray(prng.permutation(NP_pg)[:B * M_pg].reshape(B, M_pg),
+                        jnp.int32)
+    lens = jnp.asarray(prng.integers(P_pg, M_pg * P_pg + 1, B), jnp.int32)
+    paunf = lambda *xs: paged_attention_ref(*xs)
+    pafus = lambda *xs: paged_attention_op(*xs)
+    # gathered K+V pages once through VMEM + q read + out write
+    ideal = (2 * B * M_pg * P_pg * kvh * hd + 2 * B * H * hd) * 4.0
+    rows.append(_row(
+        "paged_attention(decode)",
+        t_unfused=timeit(jax.jit(paunf), qd, kpg, vpg, table, lens),
+        t_fused=None if interpret else timeit(jax.jit(pafus), qd, kpg, vpg,
+                                              table, lens),
+        b_unfused=hlo_bytes(paunf, qd, kpg, vpg, table, lens), ideal=ideal,
+        err=_max_err([pafus(qd, kpg, vpg, table, lens)],
+                     [paunf(qd, kpg, vpg, table, lens)]),
         interpret=interpret))
 
     hkw = dict(b=kw["b"], pa=kw["pa"], p_page=0.125)

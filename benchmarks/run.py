@@ -32,7 +32,7 @@ def main() -> None:
 
     from benchmarks import (bench_async, bench_batch_effect, bench_comm,
                             bench_kernels, bench_methods, bench_pa_sweep,
-                            roofline)
+                            bench_serving, roofline)
     suites = {
         "pa_sweep": bench_pa_sweep.main,
         "methods": bench_methods.main,
@@ -40,6 +40,7 @@ def main() -> None:
         "batch_effect": bench_batch_effect.main,
         "kernels": bench_kernels.main,
         "async": bench_async.main,
+        "serving": bench_serving.main,
         "roofline": roofline.main,
     }
     if args.only:

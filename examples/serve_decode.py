@@ -1,11 +1,17 @@
-"""Serving example: batched greedy decoding with KV-cache ring buffers
-through the DecodeServer (continuous-batching inner loop).
+"""Serving example: batched greedy decoding on CPU through either
+engine —
 
-    PYTHONPATH=src python examples/serve_decode.py [--arch xlstm-350m]
+    PYTHONPATH=src python examples/serve_decode.py [--arch granite-3-2b]
+        [--engine {dense,paged}] [--page-size 8]
+
+``dense``: the ring-cache DecodeServer (token-by-token prefill).
+``paged``: the PagedEngine (DESIGN.md §11) — shared page pool, ONE bulk
+prefill forward per prompt, continuous batching with preemption, and
+per-request p50/p95 latency / time-to-first-token reporting.
 
 Uses the reduced smoke config of the chosen architecture so it runs on
-CPU; the same serve_step is what the decode dry-run shapes lower on the
-production mesh.
+CPU; the same serve steps are what the decode dry-run shapes lower on
+the production mesh.
 """
 import argparse
 import time
@@ -14,22 +20,31 @@ import time
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--engine", choices=("dense", "paged"), default="paged")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--new-tokens", type=int, default=12)
+    ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--pages", type=int, default=0,
+                    help="pool pages (0 = dense-equivalent capacity)")
     args = ap.parse_args()
 
     import jax
     import numpy as np
     from repro.models import Model, get_smoke_config
-    from repro.serving.decode import DecodeServer, Request
+    from repro.serving import DecodeServer, PagedEngine, Request
 
     cfg = get_smoke_config(args.arch)
     if not cfg.supports_decode:
         raise SystemExit(f"{args.arch} is encoder-only: no decode")
     model = Model(cfg)
     params = model.init_params(jax.random.key(0))
-    server = DecodeServer(model, params, batch_size=args.batch,
-                          max_seq_len=64)
+    if args.engine == "dense":
+        server = DecodeServer(model, params, batch_size=args.batch,
+                              max_seq_len=64)
+    else:
+        server = PagedEngine(model, params, batch_size=args.batch,
+                             max_seq_len=64, page_size=args.page_size,
+                             num_pages=args.pages or None)
 
     rng = np.random.default_rng(0)
     requests = [
@@ -43,7 +58,21 @@ def main():
     for r in done[:4]:
         print(f"req {r.uid}: prompt={r.prompt} -> {r.generated}")
     print(f"\n{total} tokens across {len(done)} requests in {dt:.2f}s "
-          f"({total/dt:.1f} tok/s on CPU, batch={args.batch})")
+          f"({total/dt:.1f} tok/s on CPU, engine={args.engine}, "
+          f"batch={args.batch})")
+    if args.engine == "paged":
+        m = server.metrics()
+        print(f"prefill: {m['prefill_forwards']} bulk forwards "
+              f"(dense would take {sum(len(r.prompt) or 1 for r in done)} "
+              f"token-by-token serve steps)")
+        print(f"pool: {m['pool']['allocs']} allocs, "
+              f"{m['pool']['prefix_hits']} prefix hits, "
+              f"{m['pool']['cow_copies']} COW copies, "
+              f"peak {m['pool']['peak_in_use']}/{server.num_pages} pages, "
+              f"{m['cache_hbm_bytes']} cache bytes")
+        print(f"latency (serve-passes): p50={m['latency_p50']:.0f} "
+              f"p95={m['latency_p95']:.0f}; "
+              f"ttft p50={m['ttft_p50']:.0f} p95={m['ttft_p95']:.0f}")
 
 
 if __name__ == "__main__":

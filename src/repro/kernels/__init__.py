@@ -8,10 +8,11 @@ from repro.kernels.ops import (block_gather_op, block_scatter_op,
                                dasha_h_update_op, dasha_page_update_op,
                                dasha_payload_blocks_op, dasha_tail_op,
                                dasha_update_batched_op, dasha_update_op,
-                               interpret_default)
+                               interpret_default, paged_attention_op)
 
 __all__ = [
     "block_gather_op", "block_scatter_op", "dasha_h_update_op",
     "dasha_page_update_op", "dasha_payload_blocks_op", "dasha_tail_op",
     "dasha_update_batched_op", "dasha_update_op", "interpret_default",
+    "paged_attention_op",
 ]

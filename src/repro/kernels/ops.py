@@ -21,6 +21,7 @@ from repro.kernels.dasha_update import (buffered_commit_pallas,
                                         dasha_tail_batched_pallas,
                                         dasha_update_batched_pallas,
                                         dasha_update_pallas)
+from repro.kernels.paged_attention import paged_attention_pallas
 from repro.kernels.randk import block_gather_pallas, block_scatter_pallas
 
 Array = jax.Array
@@ -156,6 +157,22 @@ def buffered_commit_op(g: Array, m_buf: Array, weights: Array, *,
     return buffered_commit_pallas(
         *_f32(g, m_buf, weights), inv_n=1.0 / float(n_nodes),
         interpret=interp)
+
+
+def paged_attention_op(q: Array, k_pages: Array, v_pages: Array,
+                       page_table: Array, lens: Array, *,
+                       window: int | None = None,
+                       interpret: bool | None = None) -> Array:
+    """Paged-attention decode read (DESIGN.md §11): online softmax over
+    the pool pages selected by each slot's page-table row.  q (B, H,
+    hd), pages (NP, P, kvH, hd), table (B, M), lens (B,) valid tokens
+    per slot including the one just written.  Returns (B, H, hd) f32."""
+    interp = _interpret_default() if interpret is None else interpret
+    return paged_attention_pallas(
+        q.astype(jnp.float32), k_pages.astype(jnp.float32),
+        v_pages.astype(jnp.float32), page_table.astype(jnp.int32),
+        lens.astype(jnp.int32),
+        window=None if window is None else int(window), interpret=interp)
 
 
 def block_gather_op(x_blocks: Array, block_idx: Array, *, scale: float,

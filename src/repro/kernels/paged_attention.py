@@ -1,0 +1,201 @@
+"""Paged-attention decode kernel (DESIGN.md §11).
+
+The paged serving engine stores the KV cache as fixed-size token pages
+in a shared pool: per layer ``k_pages``/``v_pages`` are
+``(num_pages, page_size, kvH, hd)`` and each request owns an ordered
+page table mapping its logical positions ``[i*P, (i+1)*P)`` to physical
+page ids.  The decode read is therefore a *gather* attention: for each
+batch slot, collect that slot's pages via its page-table row and run
+online softmax over the valid token range.
+
+Why a kernel: the jnp path materializes the gathered ``(B, M*P, kvH,
+hd)`` K and V in HBM (2 extra round trips of the whole attended
+context per layer per token) before the attention reduction reads them
+again.  The kernel gathers each page HBM→VMEM exactly once via the
+scalar-prefetched page table (the BlockSpec index_map routes physical
+page ``table[b, j]`` to grid step ``(b, j)`` — the same idiom as
+``dasha_payload_blocks_pallas``) and keeps the online-softmax
+accumulators (``acc``, ``m``, ``l``) in VMEM scratch across the page
+walk, so the gathered context never exists densely in HBM.
+
+VMEM budget (mirrors ``buffered_commit_pallas``): one grid step holds a
+``(rows, kvH, hd)`` K tile + V tile + the query + accumulators.  Pages
+larger than the row budget are walked in sub-page tiles of
+``_page_tile_rows`` rows (a multiple of 8 f32 sublanes) so the working
+set stays inside ``PAGE_VMEM_BUDGET`` regardless of ``page_size``.
+
+Masking contract: the fed token's KV is written *before* the read (the
+serving engine's write-then-attend step), so the query at position
+``lens-1`` attends every index ``i < lens`` — and, for sliding-window
+archs, ``lens - 1 - i < window``.  Padded page-table entries point at
+page 0; their positions are ``>= lens`` and masked.  Pool pages carry
+stale bytes from previous occupants in their unwritten slots; those
+positions are also ``>= lens`` for the owning slot, so the validity
+mask is the single source of isolation.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+PAGE_VMEM_BUDGET = 4 << 20   # bytes per grid step, as buffered_commit
+
+
+def _page_tile_rows(page_size: int, kvh: int, hd: int,
+                    budget: int = PAGE_VMEM_BUDGET) -> int:
+    """Largest multiple-of-8 divisor of ``page_size`` whose K+V tiles fit
+    the VMEM budget; falls back to the full page when ``page_size`` has
+    no 8-aligned divisor (small smoke pages in interpret mode)."""
+    row_bytes = 2 * kvh * hd * 4            # K + V, f32
+    max_rows = max(1, budget // max(row_bytes, 1))
+    if page_size <= max_rows:
+        return page_size
+    best = page_size   # fallback: caller sized pages past the budget
+    for rows in range(8, page_size, 8):
+        if page_size % rows == 0 and rows <= max_rows:
+            best = rows
+    return best
+
+
+def paged_attention_vmem_bytes(page_size: int, kvh: int, hd: int,
+                               num_q_heads: int) -> int:
+    """Worst-case VMEM bytes of one grid step (f32): K/V tile + query +
+    accumulators — the number the §11 budget table reports."""
+    rows = _page_tile_rows(page_size, kvh, hd)
+    tile = 2 * rows * kvh * hd * 4
+    q = num_q_heads * hd * 4
+    acc = num_q_heads * hd * 4 + 2 * num_q_heads * 4
+    return tile + q + acc
+
+
+# ----------------------------------------------------------------------
+# jnp reference (the oracle the kernel is tested against)
+# ----------------------------------------------------------------------
+
+def paged_attention_ref(q: Array, k_pages: Array, v_pages: Array,
+                        page_table: Array, lens: Array, *,
+                        window: int | None = None) -> Array:
+    """Gather-attention oracle.  q: (B, H, hd) one query per slot;
+    k_pages/v_pages: (NP, P, kvH, hd); page_table: (B, M) int32;
+    lens: (B,) int32 — valid tokens per slot INCLUDING the one just
+    written.  Returns (B, H, hd) f32."""
+    B, H, hd = q.shape
+    _, P, kvh, _ = k_pages.shape
+    M = page_table.shape[1]
+    G = H // kvh
+    k = k_pages[page_table].reshape(B, M * P, kvh, hd).astype(jnp.float32)
+    v = v_pages[page_table].reshape(B, M * P, kvh, hd).astype(jnp.float32)
+    idx = jnp.arange(M * P)[None, :]
+    valid = idx < lens[:, None]
+    if window is not None:
+        valid &= idx >= lens[:, None] - window
+    qg = q.reshape(B, kvh, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgh,bskh->bkgs", qg, k) / math.sqrt(hd)
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", p, v)
+    return out.reshape(B, H, hd)
+
+
+# ----------------------------------------------------------------------
+# Pallas kernel
+# ----------------------------------------------------------------------
+
+def _paged_attention_kernel(table_ref, lens_ref, q_ref, k_ref, v_ref,
+                            out_ref, acc_ref, m_ref, l_ref, *,
+                            page_size: int, tile_rows: int, groups: int,
+                            window: int | None, scale: float):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+    n_j = pl.num_programs(1)
+    tiles_per_page = page_size // tile_rows
+
+    @pl.when(j == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    lens = lens_ref[b]
+    base = (j // tiles_per_page) * page_size + (j % tiles_per_page) * tile_rows
+    pos = base + jax.lax.broadcasted_iota(jnp.int32, (1, 1, tile_rows), 2)
+    valid = pos < lens
+    if window is not None:
+        valid &= pos >= lens - window
+
+    kvh = k_ref.shape[2]
+    hd = k_ref.shape[3]
+    q = q_ref[0].reshape(kvh, groups, hd).astype(jnp.float32)
+    k = k_ref[0].astype(jnp.float32)                 # (tile_rows, kvH, hd)
+    v = v_ref[0].astype(jnp.float32)
+    s = jnp.einsum("kgh,skh->kgs", q, k) * scale     # (kvH, G, tile_rows)
+    s = jnp.where(valid, s, -1e30)
+
+    m_old = m_ref[...]                               # (kvH, G)
+    m_new = jnp.maximum(m_old, jnp.max(s, axis=-1))
+    corr = jnp.exp(m_old - m_new)
+    p = jnp.exp(s - m_new[..., None])
+    m_ref[...] = m_new
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+    acc_ref[...] = (acc_ref[...] * corr[..., None]
+                    + jnp.einsum("kgs,skh->kgh", p, v))
+
+    @pl.when(j == n_j - 1)
+    def _():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[..., None]
+        out_ref[0] = out.reshape(kvh * groups, hd)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_attention_pallas(q: Array, k_pages: Array, v_pages: Array,
+                           page_table: Array, lens: Array, *,
+                           window: int | None = None,
+                           interpret: bool = True) -> Array:
+    """Pallas paged-attention decode; same contract as
+    :func:`paged_attention_ref`.  Grid walks (slot, page-tile); the
+    scalar-prefetched page table routes physical pages into VMEM and the
+    online-softmax state lives in scratch across each slot's walk."""
+    B, H, hd = q.shape
+    NP, P, kvh, _ = k_pages.shape
+    M = page_table.shape[1]
+    G = H // kvh
+    tile_rows = _page_tile_rows(P, kvh, hd)
+    tiles_per_page = P // tile_rows
+    scale = 1.0 / math.sqrt(hd)
+
+    q3 = q.reshape(B, 1, H, hd).astype(jnp.float32)
+
+    def page_idx(b, j, table, lens_):
+        return (table[b, (j * tile_rows) // P], (j % tiles_per_page), 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, M * tiles_per_page),
+        in_specs=[
+            pl.BlockSpec((1, 1, H, hd), lambda b, j, t, l: (b, 0, 0, 0)),
+            pl.BlockSpec((1, tile_rows, kvh, hd), page_idx),
+            pl.BlockSpec((1, tile_rows, kvh, hd), page_idx),
+        ],
+        out_specs=pl.BlockSpec((1, H, hd), lambda b, j, t, l: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((kvh, G, hd), jnp.float32),
+            pltpu.VMEM((kvh, G), jnp.float32),
+            pltpu.VMEM((kvh, G), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_paged_attention_kernel, page_size=P,
+                          tile_rows=tile_rows, groups=G, window=window,
+                          scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, hd), jnp.float32),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), lens.astype(jnp.int32),
+      q3, k_pages.astype(jnp.float32), v_pages.astype(jnp.float32))

@@ -3,14 +3,15 @@ architectures (dense / MoE / MLA / SSM / hybrid / audio / VLM)."""
 from repro.models.common import (ArchConfig, MLAConfig, MoEConfig, SSMConfig,
                                  XLSTMConfig, count_params,
                                  param_specs_like)
-from repro.models.model import DecodeState, Model
+from repro.models.model import DecodeState, Model, PagedDecodeState
 from repro.models.registry import (ARCH_IDS, INPUT_SHAPES, InputShape,
                                    get_config, get_smoke_config,
                                    pair_supported)
 
 __all__ = [
     "ArchConfig", "MoEConfig", "MLAConfig", "SSMConfig", "XLSTMConfig",
-    "Model", "DecodeState", "count_params", "param_specs_like",
+    "Model", "DecodeState", "PagedDecodeState", "count_params",
+    "param_specs_like",
     "ARCH_IDS", "INPUT_SHAPES", "InputShape", "get_config",
     "get_smoke_config", "pair_supported",
 ]

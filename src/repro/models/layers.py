@@ -199,6 +199,16 @@ def decode_attention_mask(q_pos: Array, k_pos: Array, causal: bool,
     return m
 
 
+def paged_gather(pages: Array, page_table: Array) -> Array:
+    """Collect one (B, M*P, ...) contiguous view of each slot's pages.
+    ``pages`` is the pool array (NP, P, ...tail); ``page_table`` (B, M)
+    physical ids.  Padded table entries contribute garbage rows whose
+    positions are >= the slot's length and are masked by the caller."""
+    B, M = page_table.shape
+    g = pages[page_table]                       # (B, M, P, ...tail)
+    return g.reshape((B, M * pages.shape[1]) + pages.shape[2:])
+
+
 def gqa_attention(q: Array, k: Array, v: Array, mask: Array) -> Array:
     """q: (B, Tq, H, hd); k/v: (B, Tk, kvH, hd); mask: (Tq, Tk) or
     (B, Tq, Tk).  Grouped-query: H = G * kvH."""
@@ -240,6 +250,8 @@ def attention_block(p: dict, x: Array, positions: Array, cfg,
                     causal: bool = True,
                     full_prefix: int = 0,
                     update: Optional[Array] = None,
+                    paged_table: Optional[Array] = None,
+                    paged_kernel: bool = False,
                     ) -> Tuple[Array, Optional[KVCache]]:
     """Full attention sub-block (pre-norm residual handled by caller).
 
@@ -251,6 +263,14 @@ def attention_block(p: dict, x: Array, positions: Array, cfg,
     which case ``update`` optionally masks which slots write their KV
     (masked-out slots keep their cache bytes untouched — the serving
     prefill isolation fix).
+
+    Paged decode (``paged_table`` given, DESIGN.md §11): ``cache``
+    holds POOL pages (NP, P, kvH, hd) instead of per-slot rows; the new
+    KV is written at page ``paged_table[b, pos // P]`` slot ``pos % P``
+    and the read attends the slot's gathered pages (jnp gather, or the
+    Pallas paged-attention kernel when ``paged_kernel``).  Requires
+    per-slot ``cache_pos``; the serving engine guarantees every written
+    page is exclusively owned (copy-on-write upstream).
     """
     B, T, D = x.shape
     hd = cfg.hd
@@ -265,6 +285,37 @@ def attention_block(p: dict, x: Array, positions: Array, cfg,
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
 
+    if cache is not None and paged_table is not None:
+        # paged decode: write into the owned pool page, read via gather
+        # (or the Pallas kernel).  With a single page of size >= max_seq
+        # per slot the gather is the dense cache row and the jnp path is
+        # the same masked gqa_attention as the per-slot dense branch —
+        # the parity-anchor contract (DESIGN.md §11).
+        NP, P = cache.k.shape[0], cache.k.shape[1]
+        pos = cache_pos.astype(jnp.int32)                   # (B,)
+        pid = paged_table[jnp.arange(B), pos // P]
+        if update is not None:
+            pid = jnp.where(update, pid, NP)                # drop write
+        slot = pos % P
+        k_new = cache.k.at[pid, slot].set(k[:, 0].astype(cache.k.dtype),
+                                          mode="drop")
+        v_new = cache.v.at[pid, slot].set(v[:, 0].astype(cache.v.dtype),
+                                          mode="drop")
+        if paged_kernel:
+            from repro.kernels.ops import paged_attention_op
+            out = paged_attention_op(
+                q[:, 0], k_new, v_new, paged_table, pos + 1,
+                window=cfg.attention_window).astype(v.dtype)[:, None]
+        else:
+            kg = paged_gather(k_new, paged_table)           # (B, M*P, ...)
+            vg = paged_gather(v_new, paged_table)
+            k_pos = jnp.broadcast_to(jnp.arange(kg.shape[1])[None],
+                                     (B, kg.shape[1]))
+            mask = decode_attention_mask(pos[:, None], k_pos, causal,
+                                         cfg.attention_window)
+            out = gqa_attention(q, kg, vg, mask)
+        out = out.reshape(B, T, cfg.num_heads * hd)
+        return out @ p["wo"], KVCache(k=k_new, v=v_new)
     if cache is None:
         k_pos = positions[0] if positions.ndim > 1 else positions
         q_pos = k_pos

@@ -18,7 +18,7 @@ import jax.numpy as jnp
 from repro.models.layers import (apply_rope, attention_weights_mask,
                                  blockwise_gqa_attention,
                                  decode_attention_mask, dense_init,
-                                 ring_cache_positions)
+                                 paged_gather, ring_cache_positions)
 
 Array = jax.Array
 
@@ -56,6 +56,8 @@ def mla_block(p: dict, x: Array, positions: Array, cfg,
               cache: Optional[MLACache] = None,
               cache_pos: Optional[Array] = None,
               update: Optional[Array] = None,
+              paged_table: Optional[Array] = None,
+              paged_kernel: bool = False,
               ) -> Tuple[Array, Optional[MLACache]]:
     a = cfg.mla
     B, T, D = x.shape
@@ -70,7 +72,33 @@ def mla_block(p: dict, x: Array, positions: Array, cfg,
     k_rope = (x @ p["w_kr"])[:, :, None, :]            # (B, T, 1, rope_hd)
     k_rope = apply_rope(k_rope, positions, cfg.rope_theta)[:, :, 0]
 
-    if cache is None:
+    if cache is not None and paged_table is not None:
+        # paged latent decode (DESIGN.md §11): the (c_kv, k_rope) pair
+        # is written into the slot's owned pool page, then the read
+        # gathers the slot's pages into a contiguous (B, M*P, r) latent
+        # view and falls through to the standard decode math.  The MLA
+        # paged read stays jnp-only: the cache is rank-r latent, so the
+        # per-token traffic the GQA kernel saves is already compressed
+        # away and the cost sits in the MXU up-projections below
+        # (``paged_kernel`` is accepted for API symmetry and ignored).
+        del paged_kernel
+        NP, P = cache.c_kv.shape[0], cache.c_kv.shape[1]
+        pos = cache_pos.astype(jnp.int32)                    # (B,)
+        pid = paged_table[jnp.arange(B), pos // P]
+        if update is not None:
+            pid = jnp.where(update, pid, NP)
+        slot = pos % P
+        pages_kv = cache.c_kv.at[pid, slot].set(
+            c_kv[:, 0].astype(cache.c_kv.dtype), mode="drop")
+        pages_kr = cache.k_rope.at[pid, slot].set(
+            k_rope[:, 0].astype(cache.k_rope.dtype), mode="drop")
+        kv_lat = paged_gather(pages_kv, paged_table)         # (B, M*P, r)
+        kr = paged_gather(pages_kr, paged_table)
+        k_pos = jnp.broadcast_to(jnp.arange(kv_lat.shape[1])[None],
+                                 (B, kv_lat.shape[1]))
+        q_pos = pos[:, None]
+        new_cache = MLACache(c_kv=pages_kv, k_rope=pages_kr)
+    elif cache is None:
         kv_lat, kr = c_kv, k_rope
         k_pos = positions[0] if positions.ndim > 1 else positions
         q_pos = k_pos

@@ -42,6 +42,19 @@ class DecodeState(NamedTuple):
     position: Array       # scalar int32 — next absolute position
 
 
+class PagedDecodeState(NamedTuple):
+    """Decode state over a shared page pool (DESIGN.md §11).  Attention
+    cache leaves (KVCache/MLACache) hold POOL pages — (num_pages,
+    page_size, ...) instead of (batch, seq, ...) — addressed through one
+    page table shared by every layer (all layers allocate identically,
+    so one logical page id maps to the same physical row per layer).
+    Recurrent (SSM/mamba) leaves stay dense per-slot: they are O(1) per
+    sequence and have nothing to page."""
+    caches: Any
+    page_table: Array     # (B, max_pages) int32 physical page ids
+    seq_lens: Array       # (B,) int32 tokens written per slot
+
+
 # ======================================================================
 # Blocks
 # ======================================================================
@@ -80,10 +93,13 @@ def _block_init(key: Array, cfg: ArchConfig, kind: str) -> dict:
 
 def _block_apply(p: dict, x: Array, positions: Array, cfg: ArchConfig,
                  kind: str, cache=None, cache_pos=None, prefix_len: int = 0,
-                 update=None) -> Tuple[Array, Any, Array]:
+                 update=None, paged_table=None,
+                 paged_kernel: bool = False) -> Tuple[Array, Any, Array]:
     """-> (x_out, new_cache, aux_loss).  ``update`` (decode only): (B,)
     mask of batch slots whose attention caches may be written; recurrent
-    (SSM) states are masked by the caller (:meth:`Model.serve_step`)."""
+    (SSM) states are masked by the caller (:meth:`Model.serve_step`).
+    ``paged_table`` (paged decode only): the (B, max_pages) page table
+    routed to the attention caches — recurrent states never page."""
     aux = jnp.zeros((), jnp.float32)
     causal = not cfg.is_encoder
     if kind in ("dense", "encoder", "vlm"):
@@ -91,7 +107,9 @@ def _block_apply(p: dict, x: Array, positions: Array, cfg: ArchConfig,
                                        positions, cfg, cache=cache,
                                        cache_pos=cache_pos, causal=causal,
                                        full_prefix=prefix_len,
-                                       update=update)
+                                       update=update,
+                                       paged_table=paged_table,
+                                       paged_kernel=paged_kernel)
         x = x + h
         x = x + mlp_block(p["mlp"], rmsnorm(x, p["ln2"], cfg.rms_eps),
                           activation="gelu" if kind == "vlm" else "silu")
@@ -100,11 +118,15 @@ def _block_apply(p: dict, x: Array, positions: Array, cfg: ArchConfig,
         if cfg.mla is not None:
             h, new_cache = mla_block(p["attn"], xn, positions, cfg,
                                      cache=cache, cache_pos=cache_pos,
-                                     update=update)
+                                     update=update,
+                                     paged_table=paged_table,
+                                     paged_kernel=paged_kernel)
         else:
             h, new_cache = attention_block(p["attn"], xn, positions, cfg,
                                            cache=cache, cache_pos=cache_pos,
-                                           causal=True, update=update)
+                                           causal=True, update=update,
+                                           paged_table=paged_table,
+                                           paged_kernel=paged_kernel)
         x = x + h
         mo, aux = moe_block(p["moe"], rmsnorm(x, p["ln2"], cfg.rms_eps), cfg)
         x = x + mo
@@ -115,7 +137,9 @@ def _block_apply(p: dict, x: Array, positions: Array, cfg: ArchConfig,
             a_cache, m_state = cache
         h_attn, a_new = attention_block(p["attn"], xn, positions, cfg,
                                         cache=a_cache, cache_pos=cache_pos,
-                                        causal=True, update=update)
+                                        causal=True, update=update,
+                                        paged_table=paged_table,
+                                        paged_kernel=paged_kernel)
         h_mamba, m_new = ssm_lib.mamba_forward(p["mamba"], xn, cfg,
                                                state=m_state)
         # parallel-head fusion (arXiv:2411.13676): mean of normalized outputs
@@ -161,6 +185,30 @@ def _pad_cache_capacity(caches: Any, extra: int) -> Any:
     return rec(caches)
 
 
+def map_cache_tree(tree: Any, on_attention, on_leaf, other: Any = None
+                   ) -> Any:
+    """THE decode-cache tree walk: ``on_attention`` handles whole
+    KVCache/MLACache nodes, ``on_leaf`` every other array leaf
+    (recurrent SSM state), tuples/NamedTuples recurse preserving type.
+    With ``other`` given, walks two same-structure trees zipped and the
+    callbacks take ``(leaf, other_leaf)``.  Every paged/dense cache
+    transformation (masking, prefill scatter, COW copy, sharding specs,
+    byte accounting) goes through here, so a new attention-cache
+    NamedTuple is added in ONE place."""
+    zipped = other is not None
+
+    def rec(c, o):
+        if isinstance(c, (KVCache, MLACache)):
+            return on_attention(c, o) if zipped else on_attention(c)
+        if isinstance(c, tuple):
+            pairs = zip(c, o) if zipped else ((e, None) for e in c)
+            merged = tuple(rec(e, oe) for e, oe in pairs)
+            return type(c)(*merged) if hasattr(c, "_fields") else merged
+        return on_leaf(c, o) if zipped else on_leaf(c)
+
+    return rec(tree, other)
+
+
 def _mask_recurrent_states(old: Any, new: Any, update: Array,
                            batch_axis: int) -> Any:
     """Merge decode states for a per-slot ``update`` mask: attention
@@ -170,17 +218,13 @@ def _mask_recurrent_states(old: Any, new: Any, update: Array,
     slots get their OLD rows back along ``batch_axis`` (1 for stacked
     scan layouts, 0 for unstacked)."""
 
-    def rec(o, n):
-        if isinstance(n, (KVCache, MLACache)):
-            return n
-        if isinstance(n, tuple):
-            merged = tuple(rec(a, b) for a, b in zip(o, n))
-            return type(n)(*merged) if hasattr(n, "_fields") else merged
+    def merge(o, n):
         shape = [1] * n.ndim
         shape[batch_axis] = n.shape[batch_axis]
         return jnp.where(update.reshape(shape), n, o)
 
-    return rec(old, new)
+    return map_cache_tree(old, on_attention=lambda o, n: n, on_leaf=merge,
+                          other=new)
 
 
 # ======================================================================
@@ -471,3 +515,179 @@ class Model:
         else:
             new_pos = jnp.where(update, pos + 1, pos)
         return logits, DecodeState(caches=new_caches, position=new_pos)
+
+    # -- paged decode (DESIGN.md §11) ---------------------------------------
+    def _layer_paged_cache(self, kind: str, num_pages: int, page_size: int,
+                           batch: int, dtype) -> Any:
+        """One layer's cache with attention leaves laid out as POOL pages
+        (num_pages, page_size, ...); recurrent leaves stay (B, ...)."""
+        cfg = self.cfg
+        if kind in ("dense", "vlm", "hybrid"):
+            kv = KVCache(
+                k=jnp.zeros((num_pages, page_size, cfg.num_kv_heads,
+                             cfg.hd), dtype),
+                v=jnp.zeros((num_pages, page_size, cfg.num_kv_heads,
+                             cfg.hd), dtype))
+            if kind == "hybrid":
+                return (kv, ssm_lib.mamba_init_state(cfg, batch, dtype=dtype))
+            return kv
+        if kind == "moe":
+            if cfg.mla is not None:
+                a = cfg.mla
+                return MLACache(
+                    c_kv=jnp.zeros((num_pages, page_size, a.kv_lora_rank),
+                                   dtype),
+                    k_rope=jnp.zeros((num_pages, page_size,
+                                      a.qk_rope_head_dim), dtype))
+            return KVCache(
+                k=jnp.zeros((num_pages, page_size, cfg.num_kv_heads,
+                             cfg.hd), dtype),
+                v=jnp.zeros((num_pages, page_size, cfg.num_kv_heads,
+                             cfg.hd), dtype))
+        if kind == "mlstm":
+            return ssm_lib.mlstm_init_state(cfg, batch)
+        if kind == "slstm":
+            return ssm_lib.slstm_init_state(cfg, batch)
+        raise ValueError(kind)
+
+    def init_paged_state(self, batch: int, num_pages: int, page_size: int,
+                         max_pages: int) -> PagedDecodeState:
+        """Empty paged state: a ``num_pages``-page pool per layer plus a
+        zeroed (B, max_pages) page table and (B,) lengths.  The serving
+        engine owns the allocator (serving/pages.py); the model only
+        reads/writes through the table it is handed."""
+        cfg = self.cfg
+        dtype = cfg.param_dtype
+        if self.scan:
+            single = self._layer_paged_cache(self.kinds[0], num_pages,
+                                             page_size, batch, dtype)
+            caches = jax.tree.map(
+                lambda t: jnp.broadcast_to(
+                    t[None], (cfg.num_layers,) + t.shape).copy(), single)
+        else:
+            caches = tuple(
+                self._layer_paged_cache(k, num_pages, page_size, batch,
+                                        dtype)
+                for k in self.kinds)
+        return PagedDecodeState(
+            caches=caches,
+            page_table=jnp.zeros((batch, max_pages), jnp.int32),
+            seq_lens=jnp.zeros((batch,), jnp.int32))
+
+    def paged_serve_step(self, params: dict, tokens: Array,
+                         state: PagedDecodeState,
+                         update: Optional[Array] = None,
+                         use_kernel: bool = False
+                         ) -> Tuple[Array, PagedDecodeState]:
+        """One decode step against the page pool: write the fed token's
+        KV at page ``table[b, len // P]`` slot ``len % P``, attend the
+        slot's gathered pages (jnp, or the Pallas paged-attention
+        kernel), advance ``seq_lens``.  Same ``update`` contract as
+        :meth:`serve_step`: masked-out slots touch nothing and their
+        logits are garbage."""
+        cfg = self.cfg
+        x = params["embed"][tokens]
+        x = x * jnp.sqrt(jnp.asarray(cfg.d_model, x.dtype))
+        pos = state.seq_lens
+        positions = pos[:, None].astype(jnp.int32)     # (B, 1)
+        table = state.page_table
+
+        if self.scan:
+            kind = self.kinds[0]
+
+            def body(h, xs):
+                layer_p, cache = xs
+                h, new_cache, _ = _block_apply(layer_p, h, positions, cfg,
+                                               kind, cache=cache,
+                                               cache_pos=pos, update=update,
+                                               paged_table=table,
+                                               paged_kernel=use_kernel)
+                return h, new_cache
+
+            x, new_caches = jax.lax.scan(body, x,
+                                         (params["layers"], state.caches))
+        else:
+            new_caches = []
+            layers = params["layers"]
+            for i, kind in enumerate(self.kinds):
+                lp = (layers[i] if isinstance(layers, tuple)
+                      else jax.tree.map(lambda t: t[i], layers))
+                x, nc, _ = _block_apply(lp, x, positions, cfg, kind,
+                                        cache=state.caches[i], cache_pos=pos,
+                                        update=update, paged_table=table,
+                                        paged_kernel=use_kernel)
+                new_caches.append(nc)
+            new_caches = tuple(new_caches)
+
+        if update is not None:
+            new_caches = _mask_recurrent_states(
+                state.caches, new_caches, update,
+                batch_axis=1 if self.scan else 0)
+
+        x = rmsnorm(x, params["final_norm"], cfg.rms_eps)
+        head = (params["embed"].T if cfg.tie_embeddings
+                and "lm_head" not in params else params["lm_head"])
+        logits = (x @ head)[:, 0, :cfg.vocab_size]
+        if update is None:
+            new_lens = pos + 1
+        else:
+            new_lens = jnp.where(update, pos + 1, pos)
+        return logits, PagedDecodeState(caches=new_caches, page_table=table,
+                                        seq_lens=new_lens)
+
+    def write_prefill_to_pages(self, caches: Any, prefill_caches: Any,
+                               table_row: Array, shared_len: Array,
+                               slot, *, page_size: int) -> Any:
+        """Scatter a bulk-prefill handoff (:meth:`prefill` on one (1, T)
+        prompt) into the pool: attention KV of positions
+        ``[shared_len, T)`` lands in the pages of ``table_row`` (the
+        shared-prefix positions are already resident in shared pages and
+        are drop-routed); recurrent leaves overwrite ``slot``'s row
+        wholesale — the prefill state IS the recurrent state after the
+        prompt, so nothing of a previous occupant survives."""
+        scan = self.scan
+        P = page_size
+
+        def page_idx(T, n_pages):
+            pos = jnp.arange(T)
+            pid = table_row[pos // P]
+            pid = jnp.where(pos >= shared_len, pid, n_pages)   # drop shared
+            return pid, pos % P
+
+        def pages_write(pages, seq):
+            if scan:                       # (L, NP, P, ...) <- (L, 1, T, ...)
+                pid, sl = page_idx(seq.shape[2], pages.shape[1])
+                return pages.at[:, pid, sl].set(
+                    seq[:, 0].astype(pages.dtype), mode="drop")
+            pid, sl = page_idx(seq.shape[1], pages.shape[0])
+            return pages.at[pid, sl].set(seq[0].astype(pages.dtype),
+                                         mode="drop")
+
+        def recurrent_write(cur, new):
+            if scan:                       # (L, B, ...) <- (L, 1, ...)
+                return cur.at[:, slot].set(new[:, 0].astype(cur.dtype))
+            return cur.at[slot].set(new[0].astype(cur.dtype))
+
+        def attn_write(c, pc):
+            return type(c)(*(pages_write(a, b) for a, b in zip(c, pc)))
+
+        return map_cache_tree(caches, on_attention=attn_write,
+                              on_leaf=recurrent_write,
+                              other=prefill_caches)
+
+    def copy_cache_page(self, caches: Any, src, dst) -> Any:
+        """Copy-on-write data move: duplicate physical page ``src`` into
+        ``dst`` across every layer's attention leaves (unwritten slots
+        carry stale bytes along; they stay behind the validity mask)."""
+        axis = 1 if self.scan else 0
+
+        def cp(x):
+            idx_src = [slice(None)] * x.ndim
+            idx_src[axis] = src
+            idx_dst = list(idx_src)
+            idx_dst[axis] = dst
+            return x.at[tuple(idx_dst)].set(x[tuple(idx_src)])
+
+        return map_cache_tree(caches,
+                              on_attention=lambda c: type(c)(*map(cp, c)),
+                              on_leaf=lambda c: c)

@@ -1,1 +1,18 @@
-"""repro.serving substrate."""
+"""repro.serving — batched decode serving.
+
+Two engines over one model decode contract (DESIGN.md §11):
+
+* :class:`~repro.serving.decode.DecodeServer` — dense per-slot ring
+  caches, token-by-token prefill; the simple parity anchor.
+* :class:`~repro.serving.engine.PagedEngine` — paged KV-cache pool
+  (:mod:`repro.serving.pages`), bulk prefill, continuous batching with
+  preemption; the production path.
+"""
+from repro.serving.decode import BOS_TOKEN, DecodeServer, Request
+from repro.serving.engine import PagedEngine, RequestStats
+from repro.serving.pages import PagePool, PoolMetrics, PrefixCache
+
+__all__ = [
+    "BOS_TOKEN", "DecodeServer", "Request", "PagedEngine", "RequestStats",
+    "PagePool", "PoolMetrics", "PrefixCache",
+]

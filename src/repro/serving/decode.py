@@ -69,6 +69,14 @@ class DecodeServer:
         self.slots: List[Optional[Request]] = [None] * batch_size
         self._next_tok = np.zeros((batch_size, 1), np.int32)
 
+    def place_state(self, shardings) -> None:
+        """Move the decode state onto mesh shardings
+        (launch/specs.decode_state_specs) — keeps the pristine
+        reset-copy alias pointing at the placed caches, which slot
+        reuse depends on."""
+        self.state = jax.device_put(self.state, shardings)
+        self._init_caches = self.state.caches
+
     def _slot_positions(self) -> np.ndarray:
         return np.array(self.state.position)   # owned, writable copy
 
@@ -105,11 +113,15 @@ class DecodeServer:
         prompt = req.prompt if req.prompt else [BOS_TOKEN]
         for t in prompt:
             self._next_tok[slot, 0] = t
-            # jnp.array COPIES the host buffer: jnp.asarray can alias
-            # numpy memory on CPU, and mutating _next_tok on the next
-            # iteration would race with the in-flight async dispatch
+            # snapshot with a SYNCHRONOUS numpy copy before handing the
+            # buffer to jax: jnp.array's copy is part of the async
+            # dispatch, so mutating _next_tok on the next iteration
+            # could still race with it (observed as run-to-run decode
+            # divergence on the CPU backend; the jnp.asarray aliasing
+            # was only the larger half of the same bug)
             logits, self.state = self._step(
-                self.params, jnp.array(self._next_tok), self.state, upd)
+                self.params, jnp.asarray(self._next_tok.copy()),
+                self.state, upd)
         self._next_tok[slot, 0] = int(np.argmax(
             np.asarray(logits[slot])))
 
@@ -119,8 +131,8 @@ class DecodeServer:
         if not active.any():
             return
         logits, self.state = self._step(
-            self.params, jnp.array(self._next_tok), self.state,
-            jnp.asarray(active))   # jnp.array: copy, see prefill
+            self.params, jnp.asarray(self._next_tok.copy()), self.state,
+            jnp.asarray(active))   # synchronous host copy, see prefill
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
         for i, req in enumerate(self.slots):
             if active[i]:

@@ -1,0 +1,456 @@
+"""PagedEngine: continuous-batching serving over the page pool
+(DESIGN.md §11).
+
+The dense :class:`~repro.serving.decode.DecodeServer` pre-allocates a
+``(B, max_seq)`` ring cache per slot and teacher-forces prompts
+token-by-token — memory scales with the worst-case sequence and prompt
+ingestion costs O(prompt) serve passes.  The paged engine replaces both:
+
+* **memory** — attention KV lives in a shared :class:`PagePool`; a
+  request holds exactly ``ceil(tokens / page_size)`` pages, prompt
+  prefixes shared copy-on-write across requests;
+* **prefill** — ONE ``Model.prefill`` forward per prompt, scattered
+  into the request's pages (``Model.write_prefill_to_pages``);
+* **capacity** — admission queues until pages are available, and a
+  decode step that cannot grow preempts the lowest-priority (latest
+  admitted) request: its pages return to the pool and it re-queues with
+  ``prompt + generated`` as the new prompt, which under greedy decoding
+  reproduces the evicted trajectory exactly (the re-prefill's last-token
+  argmax IS the pending token).
+
+Parity anchor: with ``page_size >= max_seq`` (one page per request),
+``num_pages = batch`` and greedy sampling, the decode read degenerates
+to the dense masked attention over a contiguous cache row, and
+:meth:`run` reproduces ``DecodeServer.run`` token-for-token on the same
+requests (tests/test_paged_engine.py).  SSM/hybrid archs keep their
+recurrent state dense in the engine — only attention caches page.
+
+Scheduling is host-side Python (like the pool): the device sees one
+jitted ``paged_serve_step`` per decode step and one ``prefill`` +
+page-scatter per admission.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from collections import deque
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model, PagedDecodeState, map_cache_tree
+from repro.serving.decode import BOS_TOKEN, Request
+from repro.serving.pages import PagePool, PrefixCache
+
+Array = jax.Array
+
+
+def attention_cache_bytes(caches) -> int:
+    """Bytes held by every attention-cache leaf (KVCache/MLACache) of a
+    decode-state tree — the one cache-accounting rule, shared by the
+    engine metrics and bench_serving's dense baseline."""
+    total = 0
+
+    def count(c):
+        nonlocal total
+        total += sum(int(x.nbytes) for x in c)
+        return c
+
+    map_cache_tree(caches, on_attention=count, on_leaf=lambda c: c)
+    return total
+
+
+@dataclasses.dataclass
+class RequestStats:
+    """Per-request lifecycle in serve-pass clock ticks (one tick = one
+    model pass: a bulk prefill or a batched decode step)."""
+    uid: int
+    enqueued_at: int
+    admitted_at: Optional[int] = None
+    first_token_at: Optional[int] = None
+    finished_at: Optional[int] = None
+    prefill_calls: int = 0
+    prefill_tokens: int = 0
+    shared_tokens: int = 0
+    preemptions: int = 0
+
+    @property
+    def ttft(self) -> Optional[int]:
+        if self.first_token_at is None:
+            return None
+        return self.first_token_at - self.enqueued_at
+
+    @property
+    def latency(self) -> Optional[int]:
+        if self.finished_at is None:
+            return None
+        return self.finished_at - self.enqueued_at
+
+
+class PagedEngine:
+    """Continuous-batching scheduler over a paged KV cache."""
+
+    def __init__(self, model: Model, params, batch_size: int,
+                 max_seq_len: int, page_size: Optional[int] = None,
+                 num_pages: Optional[int] = None, use_kernel: bool = False,
+                 share_prefixes: bool = True, trace_logits: bool = False):
+        cfg = model.cfg
+        if not cfg.supports_decode:
+            raise ValueError(f"{cfg.name} is encoder-only: no decode")
+        if cfg.frontend is not None:
+            raise ValueError("paged engine serves token-frontend archs; "
+                             f"{cfg.name} needs stub embeds (use the dense "
+                             "DecodeServer)")
+        self.model = model
+        self.params = params
+        self.batch = batch_size
+        self.max_seq = max_seq_len
+        self.page_size = page_size or min(16, max_seq_len)
+        self.max_pages = -(-max_seq_len // self.page_size)
+        # default pool = dense-equivalent capacity; callers shrink it to
+        # the workload to realize the memory win (bench_serving does)
+        self.num_pages = num_pages or batch_size * self.max_pages
+        self.pool = PagePool(self.num_pages, self.page_size)
+        self.prefix: Optional[PrefixCache] = (
+            PrefixCache(self.pool) if share_prefixes else None)
+
+        state = model.init_paged_state(batch_size, self.num_pages,
+                                       self.page_size, self.max_pages)
+        self._caches = state.caches
+        self._table = np.zeros((batch_size, self.max_pages), np.int32)
+        self._lens = np.zeros((batch_size,), np.int32)
+        self._next_tok = np.zeros((batch_size, 1), np.int32)
+
+        # donate the cache operand so XLA updates the pool in place —
+        # without it every step/scatter/COW doubles the pool's HBM with
+        # a full copy.  CPU ignores donation with a warning, so only
+        # request it where it does something.
+        donate = jax.default_backend() != "cpu"
+        self._step_fn = jax.jit(
+            functools.partial(model.paged_serve_step, use_kernel=use_kernel),
+            donate_argnums=(2,) if donate else ())
+        self._prefill_fn = jax.jit(model.prefill)
+        self._write_fn = jax.jit(
+            functools.partial(model.write_prefill_to_pages,
+                              page_size=self.page_size),
+            donate_argnums=(0,) if donate else ())
+        self._copy_fn = jax.jit(model.copy_cache_page,
+                                donate_argnums=(0,) if donate else ())
+
+        self.slots: List[Optional[Request]] = [None] * batch_size
+        self._slot_pages: List[List[int]] = [[] for _ in range(batch_size)]
+        # ownership per table entry: a request appends freely into pages
+        # it allocated or COW'd itself even when the prefix cache (or a
+        # prefix-sharing reader) also holds them — sharers only ever
+        # read slots written before they matched, and writes are
+        # strictly append-only past that watermark.  Only pages BORROWED
+        # via a prefix match go through the COW gate before a write.
+        self._slot_owned: List[List[bool]] = [[] for _ in range(batch_size)]
+        self._admit_seq = [-1] * batch_size
+        self._seq_counter = 0
+        self.queue: "deque[Request]" = deque()
+        self.stats: Dict[int, RequestStats] = {}
+        self.logit_trace: Dict[int, List[np.ndarray]] = {}
+        self._trace = trace_logits
+
+        self.clock = 0              # serve passes (prefills + decode steps)
+        self.decode_steps = 0
+        self.prefill_forwards = 0
+        self.wall_seconds = 0.0
+
+    def place_caches(self, shardings) -> None:
+        """Move the page pool onto mesh shardings
+        (launch/specs.paged_state_specs); the jitted steps keep the
+        placement from there on."""
+        self._caches = jax.device_put(self._caches, shardings)
+
+    # -- accounting -------------------------------------------------------
+    def cache_hbm_bytes(self) -> int:
+        """Static pool footprint: every attention-cache byte the engine
+        holds (the number the bench compares to the dense server's
+        ``(B, max_seq)`` caches)."""
+        return attention_cache_bytes(self._caches)
+
+    def cache_page_bytes(self) -> int:
+        return self.cache_hbm_bytes() // max(self.num_pages, 1)
+
+    def cache_in_use_bytes(self) -> int:
+        return self.pool.in_use * self.cache_page_bytes()
+
+    def latency_summary(self) -> dict:
+        lats = [s.latency for s in self.stats.values()
+                if s.latency is not None]
+        ttfts = [s.ttft for s in self.stats.values() if s.ttft is not None]
+        if not lats:
+            return {}
+        return {
+            "requests": len(lats),
+            "latency_p50": float(np.percentile(lats, 50)),
+            "latency_p95": float(np.percentile(lats, 95)),
+            "ttft_p50": float(np.percentile(ttfts, 50)),
+            "ttft_p95": float(np.percentile(ttfts, 95)),
+        }
+
+    def metrics(self) -> dict:
+        return {
+            "clock": self.clock,
+            "decode_steps": self.decode_steps,
+            "prefill_forwards": self.prefill_forwards,
+            "pool": self.pool.metrics.as_dict(),
+            "pool_utilization": self.pool.utilization(),
+            "cache_hbm_bytes": self.cache_hbm_bytes(),
+            "cache_in_use_bytes": self.cache_in_use_bytes(),
+            **self.latency_summary(),
+        }
+
+    # -- admission --------------------------------------------------------
+    def enqueue(self, req: Request) -> None:
+        total = (len(req.prompt) or 1) + req.max_new_tokens
+        if total > self.max_seq:
+            raise ValueError(f"request {req.uid}: {total} tokens exceeds "
+                             f"max_seq_len={self.max_seq}")
+        if -(-total // self.page_size) > self.num_pages:
+            raise ValueError(f"request {req.uid} alone needs more pages "
+                             f"than the pool holds ({self.num_pages})")
+        self.stats.setdefault(req.uid, RequestStats(uid=req.uid,
+                                                    enqueued_at=self.clock))
+        self.queue.append(req)
+
+    def _restart_tokens(self, req: Request) -> List[int]:
+        toks = list(req.prompt) + list(req.generated)
+        return toks if toks else [BOS_TOKEN]
+
+    def _alloc_or_evict(self) -> Optional[int]:
+        pid = self.pool.alloc()
+        while pid is None and self.prefix is not None and len(self.prefix):
+            if self.prefix.evict(1) == 0:
+                continue            # entry dropped but page still held
+            pid = self.pool.alloc()
+        return pid
+
+    def _try_admit(self, slot: int, req: Request) -> bool:
+        toks = self._restart_tokens(req)
+        T = len(toks)
+        P = self.page_size
+        hits_before = self.pool.metrics.prefix_hits
+        if self.prefix is not None:
+            shared, shared_len = self.prefix.match(toks)
+        else:
+            shared, shared_len = [], 0
+        pages = [pid for pid, _ in shared]
+        owned = [False] * len(pages)
+        n_shared = len(pages)
+
+        def rollback():
+            # a failed attempt must not leave traces in the accounting
+            # the benchmarks report: the match above was undone, so its
+            # hit counts are too (a re-queued request retries every
+            # run-loop iteration while the pool stays dry)
+            for pid in pages:
+                self.pool.release(pid)
+            self.pool.metrics.prefix_hits = hits_before
+
+        # fresh pages FIRST: if the pool cannot hold the prompt there
+        # is nothing to admit, and failing here keeps the rollback free
+        # of side effects (no COW bytes were moved yet)
+        for _ in range(-(-T // P) - len(pages)):
+            pid = self._alloc_or_evict()
+            if pid is None:
+                rollback()
+                return False
+            pages.append(pid)
+            owned.append(True)
+
+        # then COW the trailing shared partial page before the prefill
+        # writes the rest of its slots
+        if shared and shared_len < T and shared_len % P != 0:
+            new_pid, copied = self.pool.writable(pages[n_shared - 1])
+            if new_pid is None:
+                rollback()
+                return False
+            if copied:
+                self._caches = self._copy_fn(self._caches,
+                                             pages[n_shared - 1], new_pid)
+                pages[n_shared - 1] = new_pid
+            owned[n_shared - 1] = True
+
+        self.slots[slot] = req
+        self._slot_pages[slot] = pages
+        self._slot_owned[slot] = owned
+        self._admit_seq[slot] = self._seq_counter
+        self._seq_counter += 1
+        self._table[slot, :] = 0
+        self._table[slot, :len(pages)] = pages
+        self._lens[slot] = 0
+
+        # bulk prefill: ONE forward for the whole prompt, then scatter
+        # the resulting KV into this request's pages (shared-prefix
+        # positions drop-routed — their pages already hold those bytes)
+        logits, dstate = self._prefill_fn(
+            self.params, {"tokens": jnp.asarray([toks], jnp.int32)})
+        self._caches = self._write_fn(
+            self._caches, dstate.caches, jnp.asarray(self._table[slot]),
+            jnp.asarray(shared_len), slot)
+        self._next_tok[slot, 0] = int(np.argmax(np.asarray(logits[0])))
+        self._lens[slot] = T
+        self.clock += 1
+        self.prefill_forwards += 1
+
+        st = self.stats[req.uid]
+        st.admitted_at = self.clock if st.admitted_at is None \
+            else st.admitted_at
+        st.prefill_calls += 1
+        st.prefill_tokens += T
+        st.shared_tokens += shared_len
+        if st.first_token_at is None:
+            st.first_token_at = self.clock
+        if self.prefix is not None:
+            self.prefix.register(toks, pages)
+        return True
+
+    def _admit_pending(self) -> None:
+        for slot in range(self.batch):
+            if self.slots[slot] is not None:
+                continue
+            if not self.queue:
+                return
+            req = self.queue.popleft()
+            if not self._try_admit(slot, req):
+                self.queue.appendleft(req)
+                return              # FIFO: no head-of-line skipping
+
+    # -- preemption -------------------------------------------------------
+    def _free_slot(self, slot: int) -> None:
+        for pid in self._slot_pages[slot]:
+            self.pool.release(pid)
+        self._slot_pages[slot] = []
+        self._slot_owned[slot] = []
+        self._table[slot, :] = 0
+        self._lens[slot] = 0
+        self.slots[slot] = None
+        self._admit_seq[slot] = -1
+
+    def _preempt(self, slot: int) -> None:
+        req = self.slots[slot]
+        self.stats[req.uid].preemptions += 1
+        self.pool.metrics.preemptions += 1
+        self._free_slot(slot)
+        # re-queue at the front with everything decoded so far as the
+        # prompt: greedy re-prefill reproduces the pending token exactly
+        self.queue.appendleft(req)
+
+    def _victim(self) -> Optional[int]:
+        """Lowest-priority active slot = latest admitted."""
+        cands = [s for s in range(self.batch) if self.slots[s] is not None]
+        if not cands:
+            return None
+        return max(cands, key=lambda s: self._admit_seq[s])
+
+    def _ensure_capacity(self, slot: int) -> bool:
+        """Make the page the next write lands in writable by this slot:
+        allocate when the sequence crosses a page boundary, COW when the
+        page was borrowed from a prefix match.  Pages this request
+        allocated or COW'd itself are append-writable regardless of how
+        many prefix readers hold them."""
+        pos = int(self._lens[slot])
+        idx = pos // self.page_size
+        pages = self._slot_pages[slot]
+        owned = self._slot_owned[slot]
+        if idx == len(pages):
+            pid = self._alloc_or_evict()
+            if pid is None:
+                return False
+            pages.append(pid)
+            owned.append(True)
+            self._table[slot, idx] = pid
+            return True
+        if not owned[idx]:
+            pid = pages[idx]
+            new_pid, copied = self.pool.writable(pid)
+            if new_pid is None:
+                return False
+            if copied:
+                self._caches = self._copy_fn(self._caches, pid, new_pid)
+                pages[idx] = new_pid
+                self._table[slot, idx] = new_pid
+            owned[idx] = True
+        return True
+
+    # -- the batched decode step -----------------------------------------
+    def _active_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slots)
+                if r is not None and not r.done]
+
+    def step(self) -> bool:
+        """One batched decode pass over the active slots.  Returns False
+        when nothing was active (after capacity preemptions)."""
+        # capacity pass, oldest admissions first so they steal from the
+        # youngest (the preemption priority order)
+        for slot in sorted(self._active_slots(),
+                           key=lambda s: self._admit_seq[s]):
+            if self.slots[slot] is None:
+                continue            # preempted earlier in this pass
+            while not self._ensure_capacity(slot):
+                victim = self._victim()
+                self._preempt(victim)
+                if victim == slot:
+                    break
+
+        active_idx = self._active_slots()
+        if not active_idx:
+            return False
+        active = np.zeros((self.batch,), bool)
+        active[active_idx] = True
+
+        state = PagedDecodeState(caches=self._caches,
+                                 page_table=jnp.asarray(self._table),
+                                 seq_lens=jnp.asarray(self._lens))
+        # synchronous numpy snapshot of the host token buffer: jax's own
+        # copy is async and the mutation below could race it (the
+        # decode.py host-buffer race)
+        logits, new_state = self._step_fn(
+            self.params, jnp.asarray(self._next_tok.copy()), state,
+            jnp.asarray(active))
+        self._caches = new_state.caches
+        self.clock += 1
+        self.decode_steps += 1
+
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        if self._trace:
+            logits_np = np.asarray(logits)
+        for i in active_idx:
+            req = self.slots[i]
+            if self._trace:
+                self.logit_trace.setdefault(req.uid, []).append(
+                    logits_np[i].copy())
+            req.generated.append(int(self._next_tok[i, 0]))
+            self._next_tok[i, 0] = int(nxt[i])
+            self._lens[i] += 1
+            if req.done:
+                self.stats[req.uid].finished_at = self.clock
+                self._free_slot(i)
+        return True
+
+    # -- driver -----------------------------------------------------------
+    def run(self, requests: List[Request]) -> List[Request]:
+        t0 = time.perf_counter()
+        for r in requests:
+            self.enqueue(r)
+        while True:
+            self._admit_pending()
+            if not self._active_slots():
+                if not self.queue:
+                    break
+                # queued work but nothing admissible: spill the prefix
+                # cache back to the pool and retry; a request the empty
+                # pool still cannot hold was rejected at enqueue
+                if self.prefix is not None and len(self.prefix):
+                    self.prefix.drop_all()
+                    continue
+                raise RuntimeError("admission stuck with an empty pool")
+            self.step()
+        self.wall_seconds += time.perf_counter() - t0
+        return requests

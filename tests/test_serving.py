@@ -4,13 +4,14 @@ slots restart their ring position, empty prompts decode from BOS.
 
 The isolation asserts are BITWISE on cache bytes within one server
 instance.  Greedy token ids are deliberately NOT compared across
-separately-run decodes: the tiny random-param smoke models produce
-near-tie logits, and float reductions on the CPU backend are not
-reliably run-to-run deterministic (thread-partition dependent), so
-token-sequence equality flakes even for correct code.  (The byte
-asserts also pin the separate host-buffer race fix: _next_tok is
-copied per step because jnp.asarray can alias numpy memory on CPU and
-race with the in-flight dispatch.)"""
+separately-run decodes here; the run-to-run divergence this suite
+originally dodged turned out to be a live host-buffer race (jnp.array's
+copy happens inside the async dispatch, so mutating _next_tok on the
+next loop iteration could corrupt the in-flight step — fixed in the
+paged-serving PR with a synchronous numpy snapshot; the paged parity
+suite, tests/test_paged_engine.py, now does compare greedy tokens
+across engines).  The byte asserts remain the strongest isolation
+check and also pin that fix."""
 import jax
 import jax.numpy as jnp
 import numpy as np
