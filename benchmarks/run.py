@@ -31,8 +31,8 @@ def main() -> None:
     quick = not args.full
 
     from benchmarks import (bench_async, bench_batch_effect, bench_comm,
-                            bench_kernels, bench_methods, bench_pa_sweep,
-                            bench_serving, roofline)
+                            bench_fleet, bench_kernels, bench_methods,
+                            bench_pa_sweep, bench_serving, roofline)
     suites = {
         "pa_sweep": bench_pa_sweep.main,
         "methods": bench_methods.main,
@@ -41,6 +41,7 @@ def main() -> None:
         "kernels": bench_kernels.main,
         "async": bench_async.main,
         "serving": bench_serving.main,
+        "fleet": bench_fleet.main,
         "roofline": roofline.main,
     }
     if args.only:

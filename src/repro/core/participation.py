@@ -155,6 +155,75 @@ class FullParticipation(ParticipationSampler):
         return jnp.ones((self.n,), dtype=bool)
 
 
+@dataclasses.dataclass(frozen=True)
+class EdgeSNice(ParticipationSampler):
+    """Per-edge s-nice over a contiguous edge partition (DESIGN.md §12).
+
+    The fleet runtime partitions clients into contiguous per-edge
+    chunks (:func:`repro.fl.client_store.edge_partition`); each round,
+    every edge independently picks exactly ``s`` of its clients
+    uniformly without replacement, so cohorts are balanced across edge
+    aggregators by construction and the round's gather touches every
+    chunk equally.  Host-side sampler: the mask is a numpy array drawn
+    from per-edge numpy Generators seeded by a single jax draw from
+    ``key`` — one device round-trip per round regardless of the number
+    of edges, deterministic in ``key`` alone.
+
+    Rates: ``p_a`` is exactly ``s / chunk_size`` when chunks are equal
+    (the :func:`edge_partition` split differs by at most one client;
+    the reported ``p_a`` is the fleet mean ``E*s/n``).  ``p_aa`` is
+    reported as the *maximum* pairwise rate over client pairs —
+    ``(s / min_chunk)**2`` — which is the conservative choice for the
+    paper's step-size bounds since ``1_{p_a}`` shrinks as ``p_aa``
+    grows toward ``p_a``.
+    """
+
+    bounds: tuple
+    s: int
+
+    def __post_init__(self):
+        b = tuple(int(x) for x in self.bounds)
+        object.__setattr__(self, "bounds", b)
+        if len(b) < 2 or b[0] != 0 or any(y <= x for x, y in
+                                          zip(b, b[1:])):
+            raise ValueError(f"bounds must be ascending from 0: {b}")
+        smallest = min(y - x for x, y in zip(b, b[1:]))
+        if not (1 <= self.s <= smallest):
+            raise ValueError(f"need 1 <= s <= min edge size "
+                             f"({smallest}), got s={self.s}")
+
+    @property
+    def n(self) -> int:  # type: ignore[override]
+        return self.bounds[-1]
+
+    @property
+    def num_edges(self) -> int:
+        return len(self.bounds) - 1
+
+    @property
+    def p_a(self) -> float:
+        return self.num_edges * self.s / self.n
+
+    @property
+    def p_aa(self) -> float:
+        smallest = min(y - x for x, y in zip(self.bounds, self.bounds[1:]))
+        if smallest == 1:
+            return 1.0
+        return (self.s / smallest) ** 2
+
+    def sample(self, key: Array):
+        import numpy as np
+        seeds = np.asarray(jax.random.randint(
+            key, (self.num_edges,), 0, jnp.iinfo(jnp.int32).max))
+        mask = np.zeros(self.n, dtype=bool)
+        for e in range(self.num_edges):
+            lo, hi = self.bounds[e], self.bounds[e + 1]
+            rng = np.random.default_rng(int(seeds[e]))
+            picks = rng.choice(hi - lo, size=self.s, replace=False)
+            mask[lo + picks] = True
+        return mask
+
+
 def make_sampler(name: str, n: int, **kwargs) -> ParticipationSampler:
     if name == "s_nice":
         return SNice(n=n, s=kwargs["s"])
@@ -162,4 +231,6 @@ def make_sampler(name: str, n: int, **kwargs) -> ParticipationSampler:
         return Independent(n=n, p=kwargs["p"])
     if name == "full":
         return FullParticipation(n=n)
+    if name == "edge_s_nice":
+        return EdgeSNice(bounds=tuple(kwargs["bounds"]), s=kwargs["s"])
     raise ValueError(f"unknown sampler {name!r}")

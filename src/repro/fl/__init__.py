@@ -1,36 +1,54 @@
 """repro.fl — event-driven asynchronous federated runtime (DESIGN.md
-§9-§10).
+§9-§10, §12).
 
 Layout:
-    events.py    deterministic virtual-time event queue (replayable log)
-    latency.py   per-client latency models (constant, lognormal,
-                 bandwidth-proportional network, dropout/rejoin) +
-                 Poisson client-availability windows
-    staleness.py staleness-weight policies (fixed power law and
-                 delay-adaptive), shared by both async runtimes
-    server.py    AsyncDashaServer: buffered first-K, staleness-aware
-                 DASHA-PP over the shared variant-rule layer
-    cohorts.py   CohortScheduler: gang-scheduled async cohorts for the
-                 sharded SPMD LM trainer (cohort = atomic unit of
-                 asynchrony)
+    events.py       deterministic virtual-time event queue (replayable log)
+    latency.py      per-client latency models (constant, lognormal,
+                    bandwidth-proportional network, dropout/rejoin) +
+                    Poisson client-availability windows
+    staleness.py    staleness-weight policies (fixed power law and
+                    delay-adaptive) + hop composition, shared by all
+                    async runtimes
+    server.py       AsyncDashaServer: buffered first-K, staleness-aware
+                    DASHA-PP over the shared variant-rule layer
+    cohorts.py      CohortScheduler: gang-scheduled async cohorts for the
+                    sharded SPMD LM trainer (cohort = atomic unit of
+                    asynchrony), with mid-flight dropout/rejoin
+    client_store.py out-of-core per-client tracker store, chunked by
+                    edge (numpy / memmap backends)
+    tree.py         HierarchicalFleet: configurable aggregation tree of
+                    edge aggregators pre-reducing DASHA-PP increments
+                    with per-tier buffering + wire accounting
 """
+from repro.fl.client_store import BACKENDS, ClientStore, edge_partition
 from repro.fl.cohorts import (CohortConfig, CohortRunResult,
                               CohortScheduler, train_async)
-from repro.fl.events import ARRIVAL, REJOIN, Event, EventQueue
+from repro.fl.events import (ARRIVAL, DROP, REJOIN, TIER_ARRIVAL, Event,
+                             EventQueue)
 from repro.fl.latency import (ConstantLatency, JobTiming, LatencyModel,
                               LognormalLatency, PoissonAvailability,
                               make_latency)
 from repro.fl.server import AsyncConfig, AsyncDashaServer, AsyncRunResult
 from repro.fl.staleness import (STALENESS_POLICIES, AdaptiveStaleness,
                                 PowerLawStaleness, StalenessPolicy,
-                                make_staleness)
+                                compose_hops, make_staleness)
+from repro.fl.tree import (CommitRecord, DenseProblemWorkload,
+                           FleetConfig, FleetDispatch, FleetRunResult,
+                           FleetState, FleetWorkload, HierarchicalFleet,
+                           MessageRecord, StreamedGradientWorkload,
+                           TierConfig, payload_bits)
 
 __all__ = [
-    "ARRIVAL", "REJOIN", "Event", "EventQueue",
+    "ARRIVAL", "DROP", "REJOIN", "TIER_ARRIVAL", "Event", "EventQueue",
     "ConstantLatency", "JobTiming", "LatencyModel", "LognormalLatency",
     "PoissonAvailability", "make_latency",
     "AsyncConfig", "AsyncDashaServer", "AsyncRunResult",
     "STALENESS_POLICIES", "AdaptiveStaleness", "PowerLawStaleness",
-    "StalenessPolicy", "make_staleness",
+    "StalenessPolicy", "compose_hops", "make_staleness",
     "CohortConfig", "CohortRunResult", "CohortScheduler", "train_async",
+    "BACKENDS", "ClientStore", "edge_partition",
+    "CommitRecord", "DenseProblemWorkload", "FleetConfig",
+    "FleetDispatch", "FleetRunResult", "FleetState", "FleetWorkload",
+    "HierarchicalFleet", "MessageRecord", "StreamedGradientWorkload",
+    "TierConfig", "payload_bits",
 ]

@@ -35,7 +35,17 @@ per-client runtime:
 * cohort members stay busy until their cohort commits, so concurrent
   cohorts never share a node — ``h_i`` row commits cannot conflict —
   and a :class:`~repro.fl.latency.PoissonAvailability` process can
-  additionally gate who is dispatchable.
+  additionally gate who is dispatchable;
+* **mid-flight dropout** (latency models with ``dropout > 0``): the
+  gang's lockstep compute synchronizes over the full cohort, then a
+  dropped member vanishes in the uplink — its ``g_i_inc`` row, its
+  share of ``g_delta`` and its ``part`` flag are excised from the
+  buffered dispatch (:meth:`CohortScheduler._exclude_impl`), so nothing
+  of it leaks into ``g``/``g_i``/``h_i``, and it re-enters the idle
+  pool through a REJOIN event after its rejoin delay, facing fresh
+  round keys on its next dispatch.  The reliable-transport default
+  (``dropout == 0``) never routes through the excision path and stays
+  bit-identical to the sync-parity contract.
 
 Sync-limit parity (the §9 contract, now at trainer scale;
 tests/test_cohorts.py): zero latency jitter + the barrier buffer ⇒
@@ -55,7 +65,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.data.sharding import place_batch
-from repro.fl.events import ARRIVAL, EventQueue
+from repro.fl.events import ARRIVAL, REJOIN, EventQueue
 from repro.fl.latency import LatencyModel, PoissonAvailability
 from repro.fl.staleness import make_staleness
 from repro.training.loop import round_train_key
@@ -98,6 +108,7 @@ class CohortRunResult:
     discarded_stale: int         # cohorts beyond max_staleness
     total_time: float
     event_log: List[Tuple[float, int, str, int, int]]
+    dropped_members: int = 0     # cohort members lost mid-flight
 
 
 class CohortScheduler:
@@ -108,16 +119,6 @@ class CohortScheduler:
     def __init__(self, trainer: Trainer, latency: LatencyModel,
                  config: Optional[CohortConfig] = None,
                  availability: Optional[PoissonAvailability] = None):
-        if getattr(latency, "dropout", 0.0) > 0.0:
-            # The gang transport is reliable by construction (ROADMAP:
-            # cohort-level mid-flight dropout is future work); silently
-            # ignoring the model's dropout would make sweeps against
-            # AsyncDashaServer incomparable, so refuse loudly.  Model
-            # unavailability with PoissonAvailability instead.
-            raise ValueError(
-                "CohortScheduler does not simulate mid-flight dropout; "
-                "use a latency model with dropout=0 (client outages are "
-                "modeled via availability=PoissonAvailability(...))")
         self.trainer = trainer
         self.engine = trainer.engine
         self.latency = latency
@@ -125,6 +126,31 @@ class CohortScheduler:
         self.availability = availability
         self.n = self.engine.n_nodes
         self._gnorm = jax.jit(_tree_norm)
+        self._exclude = jax.jit(self._exclude_impl)
+
+    # -- mid-flight dropout: excise members from a dispatched cohort ----
+    def _exclude_impl(self, disp, keep):
+        """A copy of ``disp`` with the ``keep==0`` members excised:
+        their ``g_i_inc`` rows zeroed, their share subtracted from the
+        cohort's ``g_delta`` (which is ``sum_i g_i_inc[i] / n``), and
+        ``part`` masked so the commit's tracker-set skips their rows.
+        Only called when a cohort actually has drops — the reliable-
+        transport default never routes through here, keeping the sync-
+        parity path bit-identical."""
+        n = self.n
+
+        def rows(x):
+            return keep.reshape((-1,) + (1,) * (x.ndim - 1)) * x
+
+        def fix_delta(gd, gi):
+            drop = (disp.part * (1.0 - keep)).reshape(
+                (-1,) + (1,) * (gi.ndim - 1))
+            return gd - jnp.sum(gi * drop, axis=0) / n
+
+        return disp._replace(
+            g_i_inc=jax.tree.map(rows, disp.g_i_inc),
+            g_delta=jax.tree.map(fix_delta, disp.g_delta, disp.g_i_inc),
+            part=disp.part * keep)
 
     def run(self, state: TrainState, batches: Iterator[dict],
             num_rounds: int) -> Tuple[TrainState, CohortRunResult]:
@@ -153,6 +179,7 @@ class CohortScheduler:
         outstanding = 0
         bits_total = 0.0
         discarded = 0
+        dropped_members = 0
         hist: Counter = Counter()
         rows: List[Dict[str, Any]] = []
 
@@ -162,6 +189,9 @@ class CohortScheduler:
             while len(got) < target:
                 ev = q.pop()
                 now = max(now, ev.time)
+                if ev.kind == REJOIN:
+                    idle[ev.client] = True
+                    continue
                 outstanding -= 1
                 got.append(ev)
             return got
@@ -202,30 +232,58 @@ class CohortScheduler:
             state, disp, mets = dispatch_fn(state, placed, key,
                                             jnp.asarray(eff))
             members = np.nonzero(eff)[0]
+            kept = members
             if len(members):
                 timings = [self.latency.job(int(i), t, wire_per_node)
                            for i in members]
-                # lockstep SPMD: compute synchronizes at the cohort max,
-                # then the uplinks overlap
-                dur = (max(tm.compute_s for tm in timings)
-                       + max(tm.network_s for tm in timings))
                 idle[members] = False
-                jobs[t] = (t, disp, members)
-                q.push(now + dur, ARRIVAL, client=t, round_idx=t)
-                outstanding += 1
-            elif outstanding == 0:
-                # empty cohort and nothing in flight (e.g. the whole
-                # fleet inside Poisson outage windows): advance the
-                # clock one virtual second so availability can recover
-                # instead of spinning the remaining rounds at t=now
-                now += 1.0
+                # Mid-flight dropout: the gang's lockstep compute
+                # synchronizes over the FULL cohort, then dropped
+                # members vanish in the uplink — their increments are
+                # excised from the dispatch, they rejoin the idle pool
+                # after their compute + rejoin delay, and only the
+                # surviving uplinks race to the arrival time.
+                drop_flags = np.asarray([tm.dropped for tm in timings])
+                kept = members[~drop_flags]
+                compute_max = max(tm.compute_s for tm in timings)
+                for i, tm in zip(members, timings):
+                    if tm.dropped:
+                        dropped_members += 1
+                        q.push(now + tm.compute_s + tm.rejoin_s, REJOIN,
+                               client=int(i), round_idx=t)
+                if len(kept):
+                    if drop_flags.any():
+                        keep = np.zeros(n, np.float32)
+                        keep[kept] = 1.0
+                        disp = self._exclude(disp, jnp.asarray(keep))
+                    net_max = max(tm.network_s
+                                  for tm, dr in zip(timings, drop_flags)
+                                  if not dr)
+                    jobs[t] = (t, disp, kept)
+                    q.push(now + compute_max + net_max, ARRIVAL,
+                           client=t, round_idx=t)
+                    outstanding += 1
+            if not len(kept) and outstanding == 0:
+                if len(q):
+                    # only rejoins can be on the heap: advance to the
+                    # next one so the fleet recovers
+                    ev = q.pop()
+                    now = max(now, ev.time)
+                    idle[ev.client] = True
+                else:
+                    # empty cohort and nothing in flight (e.g. the whole
+                    # fleet inside Poisson outage windows): advance the
+                    # clock one virtual second so availability can
+                    # recover instead of spinning the remaining rounds
+                    # at t=now
+                    now += 1.0
 
             # -- commit: drain the flight buffer down to K-1 cohorts so
             # there is room to gang-schedule the next round; the pops
             # are the earliest arrivals among everything buffered ------
             target = (outstanding if K is None
                       else max(0, outstanding - (K - 1)))
-            if target == 0 and not len(members) and outstanding > 0:
+            if target == 0 and not len(kept) and outstanding > 0:
                 # nothing was dispatchable (every node rides an
                 # in-flight cohort or sits in an outage window) and the
                 # buffer is not full: without a commit the clock never
@@ -284,7 +342,8 @@ class CohortScheduler:
             bits_cum=col("bits", np.float64),
             staleness_hist=dict(sorted(hist.items())),
             discarded_stale=discarded,
-            total_time=now, event_log=q.log_tuples())
+            total_time=now, event_log=q.log_tuples(),
+            dropped_members=dropped_members)
         return state, result
 
 

@@ -19,6 +19,11 @@ from typing import List, Optional, Tuple
 
 ARRIVAL = "arrival"    # a client's compressed message reaches the server
 REJOIN = "rejoin"      # a dropped client becomes available again
+# Hierarchical-fleet kinds (fl/tree.py, DESIGN.md §12):
+TIER_ARRIVAL = "tier_arrival"   # an aggregator's merged message reaches
+#                                 its parent tier (or the root)
+DROP = "drop"          # a mid-flight dropout is *detected* at the edge
+#                        (the would-be arrival time passes with no data)
 
 
 @dataclasses.dataclass(frozen=True, order=True)

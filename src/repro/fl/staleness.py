@@ -82,6 +82,28 @@ class AdaptiveStaleness(StalenessPolicy):
         return self._total / self._count if self._count else 0.0
 
 
+def compose_hops(dispatch_round: int, hop_rounds, commit_round: int):
+    """Decompose end-to-end staleness into per-hop increments.
+
+    A contribution dispatched at round ``r`` traverses the tree and is
+    stamped with the (root-clock) round at which each tier flushes it;
+    ``hop_rounds`` is that ascending stamp sequence and ``commit_round``
+    the root commit.  Returns ``(total, increments)`` where
+    ``increments[k]`` is the staleness picked up on hop ``k`` and the
+    telescoping identity ``sum(increments) == commit_round -
+    dispatch_round == total`` holds by construction — the root weights a
+    contribution by ``w(total)``, so composing staleness across hops is
+    exactly the flat-server semantics (tests/test_tree_invariants.py
+    property b).
+    """
+    points = [int(dispatch_round), *[int(h) for h in hop_rounds],
+              int(commit_round)]
+    if any(b < a for a, b in zip(points, points[1:])):
+        raise ValueError(f"hop stamps must be non-decreasing: {points}")
+    increments = tuple(b - a for a, b in zip(points, points[1:]))
+    return int(commit_round) - int(dispatch_round), increments
+
+
 STALENESS_POLICIES = ("power", "adaptive")
 
 

@@ -1,0 +1,156 @@
+"""Hierarchical-fleet training entrypoint (DESIGN.md §12):
+
+    PYTHONPATH=src python -m repro.launch.fleet_train \
+        --n 100000 --d 64 --edges 16 --mid 4 --s 4 \
+        --edge-buffer 2 --root-buffer 2 --store memmap \
+        [--workload streamed|dense] [--rounds N] [--log out.jsonl]
+
+Runs :class:`repro.fl.HierarchicalFleet` — clients report to edge
+aggregators, edges pre-reduce and forward (optionally through a middle
+tier) to the root — over either the fleet-scale streamed workload
+(per-client synthetic data regenerated on demand; out-of-core client
+store, so ``--n 1000000`` is fine) or the reference dense-problem
+workload (all four DASHA-PP variants, the parity anchor).  Logs
+per-root-step metrics (virtual wall-clock, loss, ||∇f||², staleness,
+total and root-hop wire bits) through the training MetricsLogger.
+``--root-buffer 0`` / ``--edge-buffer 0`` mean barrier (flush when the
+subtree is quiet).
+"""
+import argparse
+import math
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workload", default="streamed",
+                    choices=["streamed", "dense"])
+    ap.add_argument("--variant", default="gradient",
+                    choices=["mvr", "gradient", "page", "finite_mvr"],
+                    help="dense workload only (streamed is Alg. 2)")
+    ap.add_argument("--rounds", type=int, default=50)
+    ap.add_argument("--n", type=int, default=10000, help="clients")
+    ap.add_argument("--m", type=int, default=2, help="examples/client")
+    ap.add_argument("--d", type=int, default=64)
+    ap.add_argument("--edges", type=int, default=8,
+                    help="edge aggregators (tier 0)")
+    ap.add_argument("--mid", type=int, default=0,
+                    help="middle-tier aggregators (0 = depth-1 tree; "
+                         "--edges 0 would be flat, use --depth0)")
+    ap.add_argument("--depth0", action="store_true",
+                    help="flat topology: clients feed the root directly")
+    ap.add_argument("--s", type=int, default=4,
+                    help="per-edge s-nice cohort size")
+    ap.add_argument("--edge-buffer", type=int, default=2,
+                    help="per-edge FedBuff K; 0 = barrier")
+    ap.add_argument("--mid-buffer", type=int, default=0,
+                    help="middle-tier FedBuff K; 0 = barrier")
+    ap.add_argument("--root-buffer", type=int, default=2,
+                    help="root first-K messages per step; 0 = barrier")
+    ap.add_argument("--staleness-exponent", type=float, default=0.5)
+    ap.add_argument("--staleness-policy", default="power",
+                    choices=["power", "adaptive"])
+    ap.add_argument("--max-staleness", type=int, default=None)
+    ap.add_argument("--tier-max-staleness", type=int, default=None,
+                    help="discard-at-edge bound (root bound is "
+                         "--max-staleness)")
+    ap.add_argument("--latency", default="lognormal",
+                    choices=["constant", "lognormal"])
+    ap.add_argument("--sigma", type=float, default=0.8)
+    ap.add_argument("--bandwidth", type=float, default=0.0,
+                    help="uplink bits/s (0 = instant network)")
+    ap.add_argument("--dropout", type=float, default=0.0,
+                    help="mid-flight client dropout probability")
+    ap.add_argument("--store", default="ram", choices=["ram", "memmap"])
+    ap.add_argument("--store-dir", default=None)
+    ap.add_argument("--ratio", type=float, default=0.05,
+                    help="K/d of the RandK uplink compressor")
+    ap.add_argument("--gamma", type=float, default=0.05)
+    ap.add_argument("--a", type=float, default=0.1)
+    ap.add_argument("--b", type=float, default=0.3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log", default=None)
+    args = ap.parse_args()
+
+    import jax
+    import numpy as np
+
+    from repro.core import RandK
+    from repro.core.participation import EdgeSNice
+    from repro.fl import (DenseProblemWorkload, FleetConfig,
+                          HierarchicalFleet, StreamedGradientWorkload,
+                          TierConfig, edge_partition, make_latency)
+    from repro.training.metrics import MetricsLogger
+
+    k = max(1, math.ceil(args.ratio * args.d))
+    comp = RandK(k=k)
+    bounds = tuple(int(b)
+                   for b in edge_partition(args.n, args.edges))
+    samp = EdgeSNice(bounds=bounds, s=args.s)
+
+    if args.workload == "streamed":
+        wl = StreamedGradientWorkload(
+            sampler=samp, d=args.d, compressor=comp, gamma=args.gamma,
+            a=args.a, b=args.b, m_per_client=args.m,
+            data_seed=args.seed)
+    else:
+        from repro.core import (LogisticSigmoidProblem,
+                                make_synthetic_classification)
+        from repro.core.dasha_pp import DashaPPConfig
+        feats, y = make_synthetic_classification(
+            jax.random.key(args.seed), args.n, args.m, args.d)
+        wl = DenseProblemWorkload(
+            LogisticSigmoidProblem(feats, y), comp, samp,
+            DashaPPConfig(args.variant, gamma=args.gamma, a=args.a,
+                          b=args.b))
+
+    tiers = ()
+    if not args.depth0:
+        tiers += (TierConfig(aggregators=args.edges,
+                             buffer_size=args.edge_buffer or None,
+                             max_staleness=args.tier_max_staleness),)
+        if args.mid:
+            tiers += (TierConfig(aggregators=args.mid,
+                                 buffer_size=args.mid_buffer or None),)
+    fcfg = FleetConfig(tiers=tiers,
+                       buffer_size=args.root_buffer or None,
+                       staleness_policy=args.staleness_policy,
+                       staleness_exponent=args.staleness_exponent,
+                       max_staleness=args.max_staleness)
+    lat_kw = dict(bandwidth_bps=args.bandwidth or None,
+                  dropout=args.dropout, seed=args.seed)
+    if args.latency == "lognormal":
+        lat_kw.update(sigma=args.sigma, client_sigma=args.sigma)
+    latency = make_latency(args.latency, **lat_kw)
+
+    fleet = HierarchicalFleet(wl, fcfg, latency,
+                              store_backend=args.store,
+                              store_dir=args.store_dir)
+    fs, res = fleet.run(jax.random.key(args.seed + 1),
+                        np.zeros(args.d, np.float32), args.rounds)
+
+    logger = MetricsLogger(args.log, name="fleet_train",
+                           print_every=max(1, len(res.time) // 20))
+    for i in range(len(res.time)):
+        logger.log(i, t_virtual=res.time[i], loss=res.loss[i],
+                   grad_norm_sq=res.grad_norm_sq[i],
+                   committed=int(res.committed[i]),
+                   staleness_mean=res.staleness_mean[i],
+                   mbits=res.bits_cum[i] / 1e6,
+                   root_mbits=res.root_bits_cum[i] / 1e6)
+    logger.close()
+    tier_mb = "/".join(f"{b / 1e6:.2f}" for b in res.tier_bits)
+    print(f"\nfinal ||grad f||^2 = {res.grad_norm_sq[-1]:.3e}  "
+          f"t_virtual = {res.total_time:.1f}s  "
+          f"depth = {fcfg.depth}  store = {fs.store.backend} "
+          f"({fs.store.nbytes / 2**20:.1f} MiB)\n"
+          f"committed = {int(res.committed.sum())}  "
+          f"dropped = {res.dropped}  "
+          f"discarded = {res.discarded_stale}  "
+          f"forced flushes = {res.forced_flushes}\n"
+          f"per-hop Mbits client->root = {tier_mb}  "
+          f"staleness hist = {res.staleness_hist}")
+    fs.store.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -137,3 +137,64 @@ assert int(r1.skipped_offline.sum()) > 0
 print('OK')
 """)
     assert "OK" in out
+
+
+@pytest.mark.slow
+def test_mid_flight_dropout_and_rejoin():
+    """Mid-flight dropout at trainer scale: (0) the reliable-transport
+    default never routes through the excision path; (1) partial dropout
+    excises members, schedules rejoins, and replays deterministically;
+    (2) total dropout (every member lost) leaks NOTHING into the server
+    estimators, never freezes the clock, and re-dispatches rejoined
+    clients in later rounds with fresh round keys."""
+    out = run_sub(COMMON + """
+# (0) reliable default: no drops, no rejoins, excision never engages
+tr = make_trainer('gradient')
+with use_mesh(mesh):
+    sched = CohortScheduler(tr, ConstantLatency(compute_s=1.0),
+                            CohortConfig(buffer_cohorts=None, seed=3))
+    _, res0 = sched.run(tr.init(jax.random.key(0)), fixed(), 4)
+assert res0.dropped_members == 0
+assert not any(e[2] == 'rejoin' for e in res0.event_log)
+
+# (1) partial dropout: excision + rejoin + replay determinism
+lat = LognormalLatency(compute_s=1.0, sigma=0.8, client_sigma=0.8,
+                       dropout=0.5, seed=7)
+def run():
+    tr = make_trainer('gradient')
+    with use_mesh(mesh):
+        sched = CohortScheduler(tr, lat,
+                                CohortConfig(buffer_cohorts=2, seed=3))
+        return sched.run(tr.init(jax.random.key(0)), fixed(), 10)
+s1, r1 = run()
+s2, r2 = run()
+assert r1.dropped_members > 0
+assert int(r1.committed.sum()) > 0
+assert any(e[2] == 'rejoin' for e in r1.event_log)
+assert int(r1.committed.sum()) + r1.discarded_stale \\
+    <= int((r1.participants > 0).sum())
+assert r1.event_log == r2.event_log and len(r1.event_log) > 0
+for a, b in zip(jax.tree.leaves(s1.params), jax.tree.leaves(s2.params)):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+assert np.all(np.isfinite(r1.loss))
+print('partial OK', r1.dropped_members)
+
+# (2) total dropout: no estimator leak, no frozen clock, rejoins
+# re-enter later cohorts
+tr = make_trainer('gradient')
+with use_mesh(mesh):
+    st0 = tr.init(jax.random.key(0))
+    g0 = jax.tree.map(np.asarray, st0.dasha.g)
+    sched = CohortScheduler(
+        tr, ConstantLatency(compute_s=1.0, dropout=1.0, rejoin_s=2.0),
+        CohortConfig(buffer_cohorts=2, seed=3))
+    st, res = sched.run(st0, fixed(), 8)
+for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(st.dasha.g)):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+assert int(res.committed.sum()) == 0
+assert res.dropped_members == int(res.participants.sum()) > 0
+assert res.total_time > 0.0
+assert int((res.participants > 0).sum()) > 1
+print('OK')
+""")
+    assert "OK" in out

@@ -1,0 +1,188 @@
+"""Buffered-async (FedBuff-style) conformance suite, for BOTH the flat
+:class:`AsyncDashaServer` and the hierarchical fleet's tiers:
+
+* exactly K commits per server step whenever K arrivals are available,
+* staleness is stamped at COMMIT time, not arrival time,
+* contributions past ``max_staleness`` are discarded whole (no tracker
+  or estimator write from the discarded contribution at the discarding
+  level),
+* the drain replays deterministically under a fixed seed.
+"""
+from collections import Counter
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (LogisticSigmoidProblem, RandK, SNice,
+                        make_synthetic_classification)
+from repro.core.dasha_pp import DashaPP, DashaPPConfig
+from repro.fl import (AsyncConfig, AsyncDashaServer, ConstantLatency,
+                      DenseProblemWorkload, FleetConfig,
+                      HierarchicalFleet, LognormalLatency, TierConfig)
+from test_fleet import OneSlowClient
+
+N, M, D = 6, 5, 16
+
+
+@pytest.fixture(scope="module")
+def problem():
+    feats, y = make_synthetic_classification(jax.random.key(0),
+                                             n_nodes=N, m_per_node=M, d=D)
+    return LogisticSigmoidProblem(feats, y)
+
+
+def _cfg(variant="gradient"):
+    return DashaPPConfig(variant, gamma=0.02, a=0.1, b=0.3, p_page=0.4,
+                         batch_size=2)
+
+
+def _server(problem, *, s=N, latency, **acfg):
+    return AsyncDashaServer(problem, RandK(k=4), SNice(n=N, s=s),
+                            _cfg(), AsyncConfig(**acfg), latency)
+
+
+# ======================================================================
+# Flat server
+# ======================================================================
+
+def test_server_exactly_k_commits_per_step(problem):
+    """With K arrivals available the server commits exactly K — never
+    more — and every dispatched contribution is eventually committed
+    (no staleness cap, no dropout)."""
+    srv = _server(problem, s=4, buffer_size=2,
+                  latency=LognormalLatency(compute_s=1.0, sigma=0.8,
+                                           client_sigma=0.8, seed=5))
+    _, res = srv.run(jax.random.key(9), jnp.zeros(D), 10)
+    assert res.committed.max() == 2
+    assert np.all(res.committed <= 2)
+    assert int(res.committed.sum()) == int(res.participants.sum())
+    assert res.discarded_stale == 0 and res.dropped == 0
+
+
+def test_server_staleness_stamped_at_commit_not_arrival(problem):
+    """Full participation, zero jitter, K=1: ALL round-0 jobs arrive
+    physically at t=1.0, but the K=1 buffer commits them one server
+    step at a time — so their recorded staleness is 0,1,2,… (the
+    commit round minus the dispatch round), not the 0 an arrival-time
+    stamp would give every one of them."""
+    srv = _server(problem, buffer_size=1,
+                  latency=ConstantLatency(compute_s=1.0))
+    _, res = srv.run(jax.random.key(9), jnp.zeros(D), 4)
+    # rounds 0-3 commit one round-0 job each (s = 0,1,2,3); the drain
+    # commits the remaining two round-0 jobs (s = 4,5) and the three
+    # re-dispatched jobs, each 5 rounds stale by the time its turn comes.
+    assert res.staleness_hist == {0: 1, 1: 1, 2: 1, 3: 1, 4: 1, 5: 4}
+    np.testing.assert_array_equal(res.staleness_max[:4], [0, 1, 2, 3])
+    assert np.all(res.committed == 1)
+
+
+def test_server_late_arrivals_discarded_whole(problem):
+    """max_staleness=0 with arrivals landing after the run: only the
+    single round-0 commit survives; every discarded contribution is
+    discarded WHOLE — its h_i and g_i rows still equal init exactly."""
+    eng = DashaPP(problem, RandK(k=4), SNice(n=N, s=N), _cfg())
+    st0 = eng.init(jax.random.split(jax.random.key(9))[0], jnp.zeros(D))
+    srv = _server(problem, buffer_size=1, max_staleness=0,
+                  latency=ConstantLatency(compute_s=1000.0))
+    state, res = srv.run(jax.random.key(9), jnp.zeros(D), 3)
+    assert int(res.committed.sum()) == 1
+    assert res.discarded_stale == int(res.participants.sum()) - 1
+    # the lone survivor is client 0 (first dispatched, first popped)
+    h_i, g_i = np.asarray(state.h_i), np.asarray(state.g_i)
+    h0, g0 = np.asarray(st0.h_i), np.asarray(st0.g_i)
+    np.testing.assert_array_equal(h_i[1:], h0[1:])
+    np.testing.assert_array_equal(g_i[1:], g0[1:])
+    assert not np.array_equal(h_i[0], h0[0])   # the survivor DID land
+
+
+def test_server_deterministic_drain_order(problem):
+    """Same seed ⇒ identical popped-event log, identical staleness
+    histogram, bitwise-identical final iterate."""
+    def go():
+        srv = _server(problem, s=4, buffer_size=3, max_staleness=4,
+                      latency=LognormalLatency(compute_s=1.0, sigma=1.0,
+                                               client_sigma=1.0, seed=2))
+        return srv.run(jax.random.key(5), jnp.zeros(D), 8)
+    s1, r1 = go()
+    s2, r2 = go()
+    assert r1.event_log == r2.event_log and len(r1.event_log) > 0
+    assert r1.staleness_hist == r2.staleness_hist
+    np.testing.assert_array_equal(np.asarray(s1.x), np.asarray(s2.x))
+    np.testing.assert_array_equal(r1.committed, r2.committed)
+
+
+# ======================================================================
+# Tree tiers
+# ======================================================================
+
+def _wl(problem, s=N):
+    return DenseProblemWorkload(problem, RandK(k=4), SNice(n=N, s=s),
+                                _cfg())
+
+
+def test_tier_flushes_exactly_k_members(problem):
+    """A K-buffered edge flushes messages of exactly K members; only
+    the explicit timeout path (``forced=True``) may go under."""
+    fleet = HierarchicalFleet(
+        _wl(problem),
+        FleetConfig(tiers=(TierConfig(aggregators=2, buffer_size=2),)),
+        ConstantLatency(compute_s=1.0))
+    _, res = fleet.run(jax.random.key(9), jnp.zeros(D), 6)
+    natural = [m for m in res.message_log if not m.forced]
+    assert natural and all(m.n_members == 2 for m in natural)
+    assert all(m.n_members < 2 for m in res.message_log if m.forced)
+    assert set(res.flush_sizes[0]) <= {1, 2}
+    assert int(res.committed.sum()) == int(res.participants.sum())
+
+
+def test_tier_staleness_stamped_at_root_commit(problem):
+    """Every commit record's staleness equals commit round minus
+    dispatch round, its hop stamps are sandwiched between the two and
+    non-decreasing, the histogram is exactly the commit log's, and the
+    K_root-buffered root applies at most K_root messages per step."""
+    fleet = HierarchicalFleet(
+        _wl(problem, s=3),
+        FleetConfig(tiers=(TierConfig(aggregators=2, buffer_size=1),),
+                    buffer_size=2),
+        LognormalLatency(compute_s=1.0, sigma=0.8, client_sigma=0.8,
+                         seed=5))
+    _, res = fleet.run(jax.random.key(9), jnp.zeros(D), 10)
+    assert res.commit_log
+    for rec in res.commit_log:
+        assert rec.staleness == rec.commit_round - rec.dispatch_round
+        stamps = [r for _, r in rec.hops]
+        assert stamps == sorted(stamps)
+        assert all(rec.dispatch_round <= r <= rec.commit_round
+                   for r in stamps)
+    assert Counter(r.staleness for r in res.commit_log) \
+        == res.staleness_hist
+    assert any(r.staleness > 0 for r in res.commit_log)
+    assert res.committed_msgs.max() == 2
+    assert np.all(res.committed_msgs <= 2)
+
+
+def test_root_discard_keeps_edge_tracker_write(problem):
+    """The root-level max_staleness discard happens ABOVE the edge: the
+    straggler's h_i row was already (correctly) written at its edge
+    flush, but nothing of it reaches g_i/g — the documented two-level
+    discard semantics (fl/tree.py docstring)."""
+    eng = DashaPP(problem, RandK(k=4), SNice(n=N, s=N), _cfg())
+    st0 = eng.init(jax.random.split(jax.random.key(7))[0], jnp.zeros(D))
+    fleet = HierarchicalFleet(
+        _wl(problem),
+        FleetConfig(tiers=(TierConfig(aggregators=2, buffer_size=1),),
+                    buffer_size=3, max_staleness=2),
+        OneSlowClient(compute_s=1.0, slow_client=0, slow_s=100.0))
+    fs, res = fleet.run(jax.random.key(7), jnp.zeros(D), 5)
+    assert res.discarded_stale >= 1
+    assert all(rec.client != 0 for rec in res.commit_log)
+    # h WAS written (edge owns the shard) ...
+    assert not np.array_equal(fs.store.gather("h_i", [0])[0],
+                              np.asarray(st0.h_i)[0])
+    # ... but the root excluded it from the estimator state entirely
+    np.testing.assert_array_equal(fs.store.gather("g_i", [0])[0],
+                                  np.asarray(st0.g_i)[0])
+    assert int(res.committed.sum()) + res.discarded_stale \
+        == int(res.participants.sum())

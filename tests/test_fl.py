@@ -304,13 +304,22 @@ def test_server_clock_advances_through_fleet_wide_outage(fl_problem):
     assert res.total_time > 1.0                   # the clock moved
 
 
-def test_cohort_scheduler_rejects_dropout_latency():
-    """The gang transport is reliable by construction: a latency model
-    with dropout > 0 is refused loudly instead of silently simulated
-    as lossless (the guard fires before the trainer is touched)."""
+def test_cohort_scheduler_accepts_dropout_latency():
+    """Mid-flight dropout landed (DESIGN.md §12): a dropout-configured
+    latency model is accepted by the scheduler — the old hard rejection
+    is gone — while the config validation still refuses nonsense.  The
+    full dropout semantics (no-leak, rejoin, conservation) run at
+    trainer scale in tests/test_cohorts.py."""
     from repro.fl import CohortConfig, CohortScheduler
-    with pytest.raises(ValueError, match="dropout"):
-        CohortScheduler(None, LognormalLatency(dropout=0.3))
+
+    class _FakeEngine:
+        n_nodes = 4
+
+    class _FakeTrainer:
+        engine = _FakeEngine()
+
+    sched = CohortScheduler(_FakeTrainer(), LognormalLatency(dropout=0.3))
+    assert sched.latency.dropout == 0.3
     with pytest.raises(ValueError):
         CohortConfig(buffer_cohorts=0)
     with pytest.raises(ValueError):

@@ -1,0 +1,303 @@
+"""The hierarchical edge-aggregator fleet (repro/fl/tree.py, DESIGN.md
+§12): depth-1 sync-limit parity for all four variants (pallas on/off),
+the out-of-core client store, edge-partitioned participation, mid-flight
+dropout/rejoin at the tree runtime, forced-flush progress, and the
+depth-2 memmap smoke at fleet scale."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (LogisticSigmoidProblem, RandK, SNice,
+                        make_synthetic_classification)
+from repro.core.dasha_pp import DashaPP, DashaPPConfig
+from repro.core.participation import EdgeSNice
+from repro.fl import (ClientStore, ConstantLatency, DenseProblemWorkload,
+                      FleetConfig, HierarchicalFleet, LatencyModel,
+                      LognormalLatency, StreamedGradientWorkload,
+                      TierConfig, edge_partition)
+
+N, M, D = 6, 5, 16
+
+
+@pytest.fixture(scope="module")
+def fleet_problem():
+    feats, y = make_synthetic_classification(jax.random.key(0),
+                                             n_nodes=N, m_per_node=M, d=D)
+    return LogisticSigmoidProblem(feats, y)
+
+
+def _cfg(variant, use_pallas=False):
+    return DashaPPConfig(variant, gamma=0.02, a=0.1, b=0.3, p_page=0.4,
+                         batch_size=2, use_pallas=use_pallas)
+
+
+def _fleet(prob, cfg, fcfg, latency, rounds=6, key=7, **kw):
+    wl = DenseProblemWorkload(prob, RandK(k=4), SNice(n=N, s=3), cfg)
+    fleet = HierarchicalFleet(wl, fcfg, latency, **kw)
+    return fleet.run(jax.random.key(key), jnp.zeros(D), rounds)
+
+
+# ----------------------------------------------------------------------
+# The parity anchor: depth-1 zero-jitter tree == sync DashaPP
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("use_pallas", [False, True], ids=["jnp", "pallas"])
+@pytest.mark.parametrize("variant",
+                         ["gradient", "page", "finite_mvr", "mvr"])
+def test_depth1_tree_sync_limit_parity(fleet_problem, variant, use_pallas):
+    """A depth-1 tree with zero jitter and barrier buffers everywhere
+    reproduces the synchronous DashaPP trajectory allclose (x, g, g_i,
+    h_i, and h_ij for finite_mvr) — the fleet is an anchored
+    generalization of the reference engine, through the same
+    dispatch."""
+    cfg = _cfg(variant, use_pallas)
+    alg = DashaPP(fleet_problem, RandK(k=4), SNice(n=N, s=3), cfg)
+    st_sync = jax.jit(lambda k: alg.run(k, jnp.zeros(D), 6))(
+        jax.random.key(7))[0]
+
+    fs, res = _fleet(fleet_problem, cfg,
+                     FleetConfig(tiers=(TierConfig(aggregators=2),)),
+                     ConstantLatency(compute_s=1.0))
+    pairs = [("x", fs.x, st_sync.x), ("g", fs.g, st_sync.g),
+             ("g_i", fs.store.dense("g_i"), st_sync.g_i),
+             ("h_i", fs.store.dense("h_i"), st_sync.h_i)]
+    if variant == "finite_mvr":
+        pairs.append(("h_ij", fs.store.dense("h_ij"), st_sync.h_ij))
+    for name, a, b in pairs:
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-6, err_msg=name)
+    assert set(res.staleness_hist) <= {0}
+    assert res.dropped == 0 and res.discarded_stale == 0
+    assert len(res.message_log) > 0      # contributions went via edges
+
+
+def test_depth0_flat_topology_runs(fleet_problem):
+    """tiers=() feeds clients straight to the root (the flat
+    semantics): zero jitter + barrier still reproduces sync, and the
+    only hop's bits are the client uplinks."""
+    cfg = _cfg("mvr")
+    alg = DashaPP(fleet_problem, RandK(k=4), SNice(n=N, s=3), cfg)
+    st_sync = jax.jit(lambda k: alg.run(k, jnp.zeros(D), 6))(
+        jax.random.key(7))[0]
+    fs, res = _fleet(fleet_problem, cfg, FleetConfig(),
+                     ConstantLatency(compute_s=1.0))
+    np.testing.assert_allclose(fs.x, np.asarray(st_sync.x),
+                               rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(fs.store.dense("h_i"),
+                               np.asarray(st_sync.h_i),
+                               rtol=1e-4, atol=1e-6)
+    assert len(res.tier_bits) == 1
+    assert res.tier_bits[0] == res.root_bits_cum[-1]
+    assert len(res.message_log) == 0
+
+
+# ----------------------------------------------------------------------
+# Out-of-core client store
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["ram", "memmap"])
+def test_client_store_gather_scatter(backend):
+    rng = np.random.default_rng(0)
+    bounds = edge_partition(10, 3)
+    store = ClientStore(bounds, {"a": (4,), "b": (2, 3)}, backend=backend)
+    assert store.n == 10 and store.num_edges == 3
+    va = rng.standard_normal((10, 4)).astype(np.float32)
+    store.scatter_set("a", np.arange(10), va)
+    idx = np.asarray([9, 0, 4, 7])        # crosses every chunk, unsorted
+    np.testing.assert_array_equal(store.gather("a", idx), va[idx])
+    store.scatter_add("a", idx, np.ones((4, 4), np.float32))
+    va[idx] += 1.0
+    np.testing.assert_array_equal(store.dense("a"), va)
+    assert store.gather("b", [3]).shape == (1, 2, 3)
+    np.testing.assert_array_equal(store.edge_of([0, 3, 4, 9]),
+                                  [0, 0, 1, 2])
+    with pytest.raises(IndexError):
+        store.gather("a", [10])
+    store.flush()
+    store.close()
+
+
+def test_client_store_backend_equivalence(tmp_path):
+    """ram and memmap backends are interchangeable bit-for-bit."""
+    bounds = edge_partition(17, 4)
+    rng = np.random.default_rng(1)
+    stores = [ClientStore(bounds, {"h": (5,)}, backend="ram"),
+              ClientStore(bounds, {"h": (5,)}, backend="memmap",
+                          directory=str(tmp_path))]
+    for _ in range(5):
+        idx = rng.choice(17, size=6, replace=False)
+        vals = rng.standard_normal((6, 5)).astype(np.float32)
+        for s in stores:
+            s.scatter_add("h", idx, vals)
+    np.testing.assert_array_equal(stores[0].dense("h"),
+                                  stores[1].dense("h"))
+    assert stores[1].nbytes == 17 * 5 * 4
+
+
+def test_edge_partition_and_sampler():
+    bounds = edge_partition(10, 3)
+    np.testing.assert_array_equal(bounds, [0, 4, 7, 10])
+    with pytest.raises(ValueError):
+        edge_partition(2, 3)
+
+    samp = EdgeSNice(bounds=(0, 5, 10, 15), s=2)
+    assert samp.n == 15 and samp.num_edges == 3
+    assert samp.p_a == pytest.approx(6 / 15)
+    assert samp.p_aa == pytest.approx((2 / 5) ** 2)
+    assert 0.0 <= samp.one_pa <= 1.0
+    m1 = samp.sample(jax.random.key(3))
+    m2 = samp.sample(jax.random.key(3))
+    np.testing.assert_array_equal(m1, m2)           # deterministic in key
+    for e in range(3):
+        assert m1[5 * e:5 * (e + 1)].sum() == 2     # exactly s per edge
+    assert not np.array_equal(m1, samp.sample(jax.random.key(4)))
+    with pytest.raises(ValueError):
+        EdgeSNice(bounds=(0, 2, 4), s=3)
+
+
+# ----------------------------------------------------------------------
+# Mid-flight dropout / rejoin at the tree runtime
+# ----------------------------------------------------------------------
+
+def test_fleet_total_dropout_no_leak_no_freeze(fleet_problem):
+    """dropout=1.0: every contribution is lost mid-flight.  g and the
+    store must stay EXACTLY at init (nothing leaks), the clock must
+    keep advancing (no freeze), and rejoins must re-enter clients into
+    later cohorts."""
+    cfg = _cfg("gradient")
+    eng = DashaPP(fleet_problem, RandK(k=4), SNice(n=N, s=3), cfg)
+    st0 = eng.init(jax.random.split(jax.random.key(7))[0], jnp.zeros(D))
+    fs, res = _fleet(fleet_problem, cfg,
+                     FleetConfig(tiers=(TierConfig(aggregators=2),)),
+                     ConstantLatency(compute_s=1.0, dropout=1.0,
+                                     rejoin_s=2.0), rounds=8)
+    np.testing.assert_array_equal(fs.g, np.asarray(st0.g, np.float64))
+    np.testing.assert_array_equal(fs.store.dense("g_i"),
+                                  np.asarray(st0.g_i))
+    np.testing.assert_array_equal(fs.store.dense("h_i"),
+                                  np.asarray(st0.h_i))
+    assert res.committed.sum() == 0
+    assert res.dropped == int(res.participants.sum()) > 0
+    assert res.total_time > 0.0
+    assert (res.participants > 0).sum() > 1     # rejoins re-dispatched
+    assert any(e[2] == "rejoin" for e in res.event_log)
+    # x still walked: the broadcast happens regardless of commits
+    assert np.any(fs.x != 0.0)
+
+
+def test_fleet_partial_dropout_conservation_and_replay(fleet_problem):
+    """Every dispatched contribution commits, drops, or is discarded —
+    nothing is lost or double-counted — and the same seed replays the
+    identical event log and final iterate."""
+    cfg = _cfg("mvr")
+    fcfg = FleetConfig(tiers=(TierConfig(aggregators=2, buffer_size=2),),
+                       buffer_size=2, max_staleness=3)
+    lat = LognormalLatency(compute_s=1.0, sigma=1.0, client_sigma=1.0,
+                           dropout=0.3, seed=11)
+    fs1, r1 = _fleet(fleet_problem, cfg, fcfg, lat, rounds=10)
+    fs2, r2 = _fleet(fleet_problem, cfg, fcfg, lat, rounds=10)
+    assert r1.dropped > 0
+    total = int(r1.participants.sum())
+    assert int(r1.committed.sum()) + r1.dropped + r1.discarded_stale \
+        == total
+    assert r1.event_log == r2.event_log and len(r1.event_log) > 0
+    np.testing.assert_array_equal(fs1.x, fs2.x)
+    np.testing.assert_array_equal(fs1.g, fs2.g)
+    assert np.all(np.isfinite(r1.loss))
+
+
+@dataclasses.dataclass(frozen=True)
+class OneSlowClient(LatencyModel):
+    """Client ``slow_client`` takes ``slow_s`` to compute; everyone
+    else is the zero-jitter constant — a deterministic straggler."""
+    slow_client: int = 0
+    slow_s: float = 100.0
+
+    def _compute(self, client, rng):
+        return self.slow_s if client == self.slow_client \
+            else self.compute_s
+
+
+def test_edge_discard_is_whole(fleet_problem):
+    """A contribution discarded for staleness AT ITS OWN EDGE is
+    discarded whole: no h_i write, no g_i write — the straggler's rows
+    still equal their init values after the run."""
+    cfg = _cfg("gradient")
+    eng = DashaPP(fleet_problem, RandK(k=4), SNice(n=N, s=N), cfg)
+    st0 = eng.init(jax.random.split(jax.random.key(7))[0], jnp.zeros(D))
+    # Full participation makes the schedule deterministic: client 0 is
+    # dispatched at round 0, stays busy until its arrival at t=100 —
+    # during the drain, far past the tier's staleness bound — and is
+    # never re-dispatched (no dispatches during drain).
+    wl = DenseProblemWorkload(fleet_problem, RandK(k=4),
+                              SNice(n=N, s=N), cfg)
+    fleet = HierarchicalFleet(
+        wl,
+        FleetConfig(tiers=(TierConfig(aggregators=2, buffer_size=1,
+                                      max_staleness=2),),
+                    buffer_size=3),
+        OneSlowClient(compute_s=1.0, slow_client=0, slow_s=100.0))
+    fs, res = fleet.run(jax.random.key(7), jnp.zeros(D), 5)
+    assert res.discarded_stale >= 1
+    np.testing.assert_array_equal(fs.store.gather("h_i", [0])[0],
+                                  np.asarray(st0.h_i)[0])
+    np.testing.assert_array_equal(fs.store.gather("g_i", [0])[0],
+                                  np.asarray(st0.g_i)[0])
+    total = int(res.participants.sum())
+    assert int(res.committed.sum()) + res.dropped \
+        + res.discarded_stale == total
+
+
+def test_forced_flush_progress(fleet_problem):
+    """Under-full K-buffers cannot deadlock the root: when the heap
+    dries up the runtime force-flushes the lowest buffered aggregator
+    (the timeout path), and conservation still holds."""
+    cfg = _cfg("gradient")
+    fs, res = _fleet(
+        fleet_problem, cfg,
+        FleetConfig(tiers=(TierConfig(aggregators=2, buffer_size=4),)),
+        ConstantLatency(compute_s=1.0), rounds=5)
+    assert res.forced_flushes > 0
+    total = int(res.participants.sum())
+    assert int(res.committed.sum()) == total
+    assert np.all(np.isfinite(res.loss))
+
+
+# ----------------------------------------------------------------------
+# Fleet scale: depth-2 tree over a memmap store
+# ----------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_depth2_memmap_fleet_smoke():
+    """The acceptance-scale smoke: a depth-2 tree over n = 1e5
+    memmap-backed clients completes, conserves contributions, prices
+    every hop, and the streamed workload's loss stays finite — without
+    ever materializing an (n, d) array in RAM."""
+    n, d, E = 100_000, 16, 8
+    bounds = edge_partition(n, E)
+    samp = EdgeSNice(bounds=tuple(int(b) for b in bounds), s=4)
+    wl = StreamedGradientWorkload(sampler=samp, d=d,
+                                  compressor=RandK(k=4), gamma=0.1,
+                                  a=0.1, b=0.5, m_per_client=1)
+    fleet = HierarchicalFleet(
+        wl, FleetConfig(tiers=(TierConfig(aggregators=E, buffer_size=2),
+                               TierConfig(aggregators=2)),
+                        buffer_size=2, max_staleness=4),
+        LognormalLatency(compute_s=1.0, sigma=0.6, client_sigma=0.6,
+                         dropout=0.05, seed=3),
+        store_backend="memmap")
+    fs, res = fleet.run(jax.random.key(0), np.zeros(d, np.float32), 8)
+    assert fs.store.backend == "memmap"
+    assert fs.store.n == n
+    total = int(res.participants.sum())
+    assert total > 0
+    assert int(res.committed.sum()) + res.dropped \
+        + res.discarded_stale == total
+    assert np.all(np.isfinite(res.loss))
+    assert len(res.tier_bits) == 3 and np.all(res.tier_bits > 0)
+    # pre-reduction: the root hop is cheaper than the client hop
+    assert res.tier_bits[-1] < res.tier_bits[0]
+    fs.store.close()
