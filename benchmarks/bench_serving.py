@@ -1,28 +1,40 @@
 """Serving-layer benchmark: dense ``DecodeServer`` vs ``PagedEngine``
-(DESIGN.md §11) over a batch x prompt-mix x page-size sweep.
+(DESIGN.md §11) — prefill/memory sweep plus the decode-throughput
+head-to-head.
 
-Per cell, both engines serve the SAME mixed workload (many short
-prompts + a few long ones — the shape that makes dense per-slot
-``(B, max_seq)`` caches wasteful) and we report
+Two kinds of cells, both serving the SAME workloads on both engines:
 
-* ``prefill_steps`` — model passes spent ingesting prompts: the dense
-  server teacher-forces token-by-token (one serve pass per prompt
-  token), the paged engine runs ONE bulk ``Model.prefill`` forward per
-  admission (re-admissions after preemption included);
-* ``cache_hbm_bytes`` — attention-cache bytes held: dense allocates
-  ``B * max_seq`` rows up front, the paged pool is sized to the
-  workload (half the dense worst case here) and COW-shares prefixes;
-* ``tok/s`` wall-clock (CPU smoke: jit-compile noise included, so the
-  acceptance asserts are on the deterministic step/byte counts, not
-  wall time);
-* greedy token agreement between the two engines (REPORTED, not
-  asserted: argmax near-ties on random-param smoke models can flip —
-  the seeded parity asserts live in tests/test_paged_engine.py).
+* **prefill/memory cells** (batch x page-size sweep, mixed short/long
+  prompts): ``prefill_steps`` (dense teacher-forces one serve pass per
+  prompt token; the paged engine chunk-folds prompts into shared fused
+  passes, with bulk one-forward-per-admission as the reference point)
+  and ``cache_hbm_bytes`` (dense allocates ``B * max_seq`` rows up
+  front; the pool is sized to half that and COW-shares prefixes);
+* **decode cells** (short prompts, long ``max_seq``): steady-state
+  decode tok/s from the engines' ``decode_tokens / decode_seconds``
+  counters — pure decode passes only, prefill excluded on both sides.
+  Each engine gets a warmup run (jit compiles, every page-table width)
+  before the measured runs; best-of-N damps scheduler noise.  The paged
+  engine wins because its fused pass attends ``table_width *
+  page_size`` positions (live context, power-of-two bucketed) while the
+  dense ring always pays ``max_seq``.
 
-Smoke acceptance (the CI row): paged prefill passes < dense prefill
-passes on every cell, and paged cache bytes < dense cache bytes.
-Results land in ``results/BENCH_serving.json`` so the perf trajectory
-records serving numbers from this PR on.
+Token agreement between the engines is REPORTED, not asserted (argmax
+near-ties on random-param smoke models can flip; the seeded parity
+asserts live in tests/test_paged_engine.py and
+tests/test_chunked_prefill.py).
+
+Acceptance (the CI row): on every prefill cell, chunked paged prefill
+passes <= bulk passes < dense passes and paged cache bytes < dense
+cache bytes; on every decode cell, paged decode tok/s >= dense.
+
+``results/BENCH_serving.json`` is a TRAJECTORY: each bench run appends
+one entry (timestamp, backend, cells) instead of overwriting, so the
+perf history accumulates across PRs.  ``--check-baseline`` replays the
+bench and compares against the last committed entry of the same mode
+WITHOUT appending — the CI regression gate: deterministic counters
+(prefill passes, byte ratios) must not regress at all, the wall-clock
+decode ratio must stay >= 1 and within noise of the baseline.
 """
 from __future__ import annotations
 
@@ -32,6 +44,11 @@ import time
 
 import jax
 import numpy as np
+
+RESULTS_PATH = "results/BENCH_serving.json"
+# wall-clock gate slack: the decode ratio is machine-dependent, so the
+# baseline comparison only fails when the advantage collapses
+DECODE_RATIO_NOISE = 0.6
 
 
 def _workload(cfg, n_short: int, n_long: int, new_tokens: int,
@@ -73,6 +90,13 @@ def _cell(model, params, cfg, *, batch: int, page_size: int,
 
     # pool sized to the workload: half the dense worst-case capacity
     num_pages = max(1, (batch * max_seq) // (2 * page_size))
+    # bulk reference: one prefill forward per admission (the pre-chunked
+    # engine behavior) — the bound chunked admission must not exceed
+    bulk = PagedEngine(model, params, batch_size=batch, max_seq_len=max_seq,
+                       page_size=page_size, num_pages=num_pages,
+                       prefill_chunk_tokens=0)
+    bulk.run(mk())
+
     paged = PagedEngine(model, params, batch_size=batch, max_seq_len=max_seq,
                         page_size=page_size, num_pages=num_pages)
     t0 = time.perf_counter()
@@ -83,8 +107,7 @@ def _cell(model, params, cfg, *, batch: int, page_size: int,
     # mathematically identical greedy decodes but reduce in different
     # shapes, so an argmax near-tie on these random-param smoke models
     # can legitimately flip a token — the hard parity asserts live in
-    # the seeded tests (tests/test_paged_engine.py); a benchmark cell
-    # must not flake CI on a tie
+    # the seeded tests; a benchmark cell must not flake CI on a tie
     mismatches = sum(a.generated != b.generated
                      for a, b in zip(d_out, p_out))
 
@@ -94,9 +117,12 @@ def _cell(model, params, cfg, *, batch: int, page_size: int,
         "batch": batch, "page_size": page_size, "max_seq": max_seq,
         "requests": len(d_out), "tokens": tokens,
         "dense_prefill_steps": dense_prefill_steps,
+        "bulk_prefill_steps": bulk.prefill_forwards,
         "paged_prefill_steps": paged.prefill_forwards,
+        "mixed_passes": m["mixed_passes"],
         "dense_cache_bytes": dense_bytes,
         "paged_cache_bytes": m["cache_hbm_bytes"],
+        "bytes_ratio": m["cache_hbm_bytes"] / dense_bytes,
         "dense_tok_s": tokens / max(t_dense, 1e-9),
         "paged_tok_s": tokens / max(t_paged, 1e-9),
         "token_mismatches": mismatches,
@@ -106,10 +132,56 @@ def _cell(model, params, cfg, *, batch: int, page_size: int,
         "pool_peak_pages": m["pool"]["peak_in_use"],
         "latency_p50": m.get("latency_p50"),
         "latency_p95": m.get("latency_p95"),
+        "ttft_p50": m.get("ttft_p50"),
+        "ttft_p95": m.get("ttft_p95"),
     }
 
 
-def run(quick: bool = False, arch: str = "granite-3-2b"):
+def _decode_requests(cfg, n: int, new_tokens: int, seed: int):
+    from repro.serving import Request
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i,
+                    prompt=rng.integers(1, cfg.vocab_size, 4).tolist(),
+                    max_new_tokens=new_tokens)
+            for i in range(n)]
+
+
+def _decode_cell(model, params, cfg, *, batch: int, max_seq: int,
+                 page_size: int, new_tokens: int, repeats: int) -> dict:
+    """Steady-state decode tok/s head-to-head.  Short prompts + a long
+    ``max_seq``: the dense ring attends (and masks) ``max_seq``
+    positions every step while the paged fused pass attends only the
+    power-of-two table width covering the live context."""
+    from repro.serving import DecodeServer, PagedEngine
+
+    n_req = 2 * batch
+
+    def measure(server):
+        server.run(_decode_requests(cfg, n_req, new_tokens, seed=0))
+        best = 0.0
+        for s in range(1, repeats + 1):
+            server.reset_perf_counters()
+            server.run(_decode_requests(cfg, n_req, new_tokens, seed=s))
+            best = max(best, server.decode_tokens
+                       / max(server.decode_seconds, 1e-9))
+        return best, server
+
+    dense_tps, _ = measure(DecodeServer(model, params, batch_size=batch,
+                                        max_seq_len=max_seq))
+    paged_tps, paged = measure(PagedEngine(model, params, batch_size=batch,
+                                           max_seq_len=max_seq,
+                                           page_size=page_size))
+    return {
+        "batch": batch, "max_seq": max_seq, "page_size": page_size,
+        "new_tokens": new_tokens, "repeats": repeats,
+        "decode_tokens": paged.decode_tokens,
+        "dense_decode_tok_s": dense_tps,
+        "paged_decode_tok_s": paged_tps,
+        "decode_ratio": paged_tps / max(dense_tps, 1e-9),
+    }
+
+
+def run(quick: bool = False, arch: str = "granite-3-2b") -> dict:
     from repro.models import Model, get_smoke_config
     cfg = get_smoke_config(arch)
     model = Model(cfg)
@@ -122,30 +194,115 @@ def run(quick: bool = False, arch: str = "granite-3-2b"):
         rows.append(_cell(model, params, cfg, batch=batch,
                           page_size=page_size, max_seq=max_seq,
                           new_tokens=new_tokens, long_len=long_len))
-    return rows
+    dcells = ([(8, 256, 8, 16, 2)] if quick
+              else [(8, 128, 8, 16, 3), (8, 256, 8, 16, 3)])
+    decode = [
+        _decode_cell(model, params, cfg, batch=b, max_seq=ms,
+                     page_size=p, new_tokens=nt, repeats=rep)
+        for b, ms, p, nt, rep in dcells]
+    return {"cells": rows, "decode": decode}
 
 
-def main(quick: bool = True):
-    rows = run(quick=quick)
+def _assert_gates(res: dict) -> None:
+    for r in res["cells"]:
+        # §11 acceptance: both paged modes beat dense token-by-token,
+        # and the workload-sized pool undercuts the dense cache
+        assert r["paged_prefill_steps"] < r["dense_prefill_steps"], r
+        assert r["bulk_prefill_steps"] < r["dense_prefill_steps"], r
+        assert r["paged_cache_bytes"] < r["dense_cache_bytes"], r
+    # chunk folding wins in aggregate: a single prompt longer than the
+    # chunk budget legitimately takes more passes than one bulk forward,
+    # but across the sweep the folded admissions more than pay for it
+    assert (sum(r["paged_prefill_steps"] for r in res["cells"])
+            <= sum(r["bulk_prefill_steps"] for r in res["cells"])), \
+        res["cells"]
+    for d in res["decode"]:
+        # the PR 7 headline: the fused launch + table-width bucketing
+        # flip the decode gap — paged wins steady-state tok/s
+        assert d["paged_decode_tok_s"] >= d["dense_decode_tok_s"], d
+
+
+def _load_trajectory(path: str) -> list:
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        data = json.load(f)
+    if data and isinstance(data, list) and "cells" not in data[0]:
+        # pre-trajectory format (a bare row list): keep it as one entry
+        return [{"mode": "legacy", "cells": data, "decode": []}]
+    return data
+
+
+def _check_baseline(res: dict, mode: str, path: str = RESULTS_PATH) -> None:
+    """CI regression gate: compare a fresh run against the last
+    committed entry of the same mode.  Deterministic counters must not
+    regress at all; the wall-clock decode ratio gets noise slack."""
+    entries = [e for e in _load_trajectory(path) if e.get("mode") == mode]
+    if not entries:
+        raise SystemExit(f"no '{mode}' baseline entry in {path}; run the "
+                         "bench once without --check-baseline and commit "
+                         "the result")
+    base = entries[-1]
+    by_key = {(c["batch"], c["page_size"]): c for c in base["cells"]}
+    for r in res["cells"]:
+        b = by_key.get((r["batch"], r["page_size"]))
+        if b is None:
+            continue
+        assert r["paged_prefill_steps"] <= b["paged_prefill_steps"], (
+            "prefill-pass regression", r, b)
+        assert r["bytes_ratio"] <= b["bytes_ratio"] * 1.001, (
+            "HBM-bytes-ratio regression", r, b)
+    dbase = {(d["batch"], d["max_seq"]): d for d in base.get("decode", [])}
+    for d in res["decode"]:
+        b = dbase.get((d["batch"], d["max_seq"]))
+        floor = max(1.0, b["decode_ratio"] * DECODE_RATIO_NOISE) \
+            if b is not None else 1.0
+        assert d["decode_ratio"] >= floor, (
+            "decode-tok/s regression", d, b)
+    print(f"baseline check OK vs entry of {base.get('ts', '?')} "
+          f"({len(res['cells'])} cells, {len(res['decode'])} decode cells)")
+
+
+def _append_trajectory(res: dict, mode: str, path: str = RESULTS_PATH):
+    entry = {
+        "ts": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "mode": mode,
+        "backend": jax.default_backend(),
+        "cells": res["cells"],
+        "decode": res["decode"],
+    }
+    traj = _load_trajectory(path)
+    traj.append(entry)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(traj, f, indent=1, default=str)
+
+
+def main(quick: bool = True, check_baseline: bool = False):
+    mode = "smoke" if quick else "full"
+    res = run(quick=quick)
     print("# serving layer: dense ring cache vs paged pool")
-    for r in rows:
+    for r in res["cells"]:
         print(f"  serving,b={r['batch']},P={r['page_size']},"
-              f"prefill={r['paged_prefill_steps']}/{r['dense_prefill_steps']},"
+              f"prefill={r['paged_prefill_steps']}"
+              f"/{r['bulk_prefill_steps']}/{r['dense_prefill_steps']},"
               f"bytes={r['paged_cache_bytes']}/{r['dense_cache_bytes']},"
-              f"tok_s={r['paged_tok_s']:.1f}/{r['dense_tok_s']:.1f},"
               f"preempt={r['preemptions']},prefix={r['prefix_hits']},"
               f"mismatch={r['token_mismatches']},"
-              f"p95={r['latency_p95']:.0f}")
-        # the §11 acceptance: bulk prefill beats token-by-token, and the
-        # workload-sized pool undercuts the dense worst-case cache
-        assert r["paged_prefill_steps"] < r["dense_prefill_steps"], r
-        assert r["paged_cache_bytes"] < r["dense_cache_bytes"], r
-    print("OK: paged bulk prefill beats dense token-by-token prefill "
-          "with a smaller cache footprint")
-    os.makedirs("results", exist_ok=True)
-    with open("results/BENCH_serving.json", "w") as f:
-        json.dump(rows, f, indent=1, default=str)
-    yield rows
+              f"ttft_p95={r['ttft_p95']:.0f},p95={r['latency_p95']:.0f}")
+    for d in res["decode"]:
+        print(f"  decode,b={d['batch']},S={d['max_seq']},"
+              f"paged={d['paged_decode_tok_s']:.0f},"
+              f"dense={d['dense_decode_tok_s']:.0f},"
+              f"ratio={d['decode_ratio']:.2f}")
+    _assert_gates(res)
+    print("OK: chunked paged prefill beats dense token-by-token, smaller "
+          "cache footprint, paged decode tok/s >= dense")
+    if check_baseline:
+        _check_baseline(res, mode)
+    else:
+        _append_trajectory(res, mode)
+    yield res["cells"] + res["decode"]
 
 
 if __name__ == "__main__":
@@ -153,6 +310,9 @@ if __name__ == "__main__":
 
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
-                    help="two cells, small shapes — the CI row")
+                    help="two prefill cells + one decode cell — the CI row")
+    ap.add_argument("--check-baseline", action="store_true",
+                    help="compare against the last committed trajectory "
+                         "entry instead of appending (the CI gate)")
     args = ap.parse_args()
-    list(main(quick=args.smoke))
+    list(main(quick=args.smoke, check_baseline=args.check_baseline))

@@ -62,7 +62,7 @@ def main():
           f"batch={args.batch})")
     if args.engine == "paged":
         m = server.metrics()
-        print(f"prefill: {m['prefill_forwards']} bulk forwards "
+        print(f"prefill: {m['prefill_forwards']} prompt-ingesting passes "
               f"(dense would take {sum(len(r.prompt) or 1 for r in done)} "
               f"token-by-token serve steps)")
         print(f"pool: {m['pool']['allocs']} allocs, "

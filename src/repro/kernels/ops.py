@@ -21,7 +21,9 @@ from repro.kernels.dasha_update import (buffered_commit_pallas,
                                         dasha_tail_batched_pallas,
                                         dasha_update_batched_pallas,
                                         dasha_update_pallas)
-from repro.kernels.paged_attention import paged_attention_pallas
+from repro.kernels.paged_attention import (paged_attention_batched_pallas,
+                                           paged_attention_pallas,
+                                           paged_mla_attention_pallas)
 from repro.kernels.randk import block_gather_pallas, block_scatter_pallas
 
 Array = jax.Array
@@ -172,6 +174,44 @@ def paged_attention_op(q: Array, k_pages: Array, v_pages: Array,
         q.astype(jnp.float32), k_pages.astype(jnp.float32),
         v_pages.astype(jnp.float32), page_table.astype(jnp.int32),
         lens.astype(jnp.int32),
+        window=None if window is None else int(window), interpret=interp)
+
+
+def paged_attention_batched_op(q: Array, k_pages: Array, v_pages: Array,
+                               page_table: Array, start: Array,
+                               q_lens: Array, *,
+                               window: int | None = None,
+                               interpret: bool | None = None) -> Array:
+    """Fused multi-request paged-attention launch (DESIGN.md §11): one
+    kernel invocation serves every active slot of a serve pass, each
+    carrying up to C queries (chunked prefill folds prompt chunks into
+    the same launch as single-token decode).  q (B, C, H, hd), start
+    (B,) tokens per slot BEFORE this pass's writes, q_lens (B,) valid
+    queries per slot.  Returns (B, C, H, hd) f32; rows ``c >= q_lens``
+    are garbage by contract."""
+    interp = _interpret_default() if interpret is None else interpret
+    return paged_attention_batched_pallas(
+        q.astype(jnp.float32), k_pages.astype(jnp.float32),
+        v_pages.astype(jnp.float32), page_table.astype(jnp.int32),
+        start.astype(jnp.int32), q_lens.astype(jnp.int32),
+        window=None if window is None else int(window), interpret=interp)
+
+
+def paged_mla_attention_op(q_abs: Array, q_rope: Array, ckv_pages: Array,
+                           kr_pages: Array, page_table: Array,
+                           start: Array, q_lens: Array, *, scale: float,
+                           window: int | None = None,
+                           interpret: bool | None = None) -> Array:
+    """Paged MLA latent attention in the absorbed form (DESIGN.md §11):
+    scores taken directly against the rank-r latent pages, output
+    accumulated in latent space (caller applies W_uv).  q_abs (B, C, H,
+    r) is ``q_nope · W_uk``; pages are (NP, P, r) / (NP, P, rope_hd)."""
+    interp = _interpret_default() if interpret is None else interpret
+    return paged_mla_attention_pallas(
+        q_abs.astype(jnp.float32), q_rope.astype(jnp.float32),
+        ckv_pages.astype(jnp.float32), kr_pages.astype(jnp.float32),
+        page_table.astype(jnp.int32), start.astype(jnp.int32),
+        q_lens.astype(jnp.int32), scale=float(scale),
         window=None if window is None else int(window), interpret=interp)
 
 

@@ -12,9 +12,11 @@ state placed via launch/specs (``decode_state_specs`` for the dense
 engine, ``paged_state_specs`` for the page pool — pages replicate over
 'data', heads shard over 'model').
 
-``--engine paged`` serves through the PagedEngine (bulk prefill +
-continuous batching + preemption, DESIGN.md §11); ``dense`` keeps the
-ring-cache DecodeServer parity anchor.
+``--engine paged`` serves through the PagedEngine (chunked/bucketed
+prefill + continuous batching + preemption, DESIGN.md §11); ``dense``
+keeps the ring-cache DecodeServer parity anchor.
+``--prefill-chunk-tokens`` and ``--bucket-sizes`` expose the chunked-
+prefill budget and the bulk-prefill prompt-length buckets.
 """
 import argparse
 import os
@@ -38,6 +40,16 @@ def main():
                     help="paged engine: pool pages (0 = dense-equivalent)")
     ap.add_argument("--no-kernel", action="store_true",
                     help="paged engine: force the jnp gather read")
+    ap.add_argument("--prefill-chunk-tokens", type=int, default=None,
+                    help="paged engine: fold prompt prefill into the fused "
+                         "decode pass, this many prompt tokens per pass "
+                         "(0 = bulk prefill; default: auto, 16 for "
+                         "attention-only archs)")
+    ap.add_argument("--bucket-sizes", type=str, default=None,
+                    help="paged engine: comma-separated prompt-length "
+                         "buckets for bulk prefill, e.g. 8,16,32 "
+                         "('' = exact-length, one compile per length; "
+                         "default: auto powers of two)")
     args = ap.parse_args()
 
     if args.smoke and "xla_force_host_platform_device_count" not in \
@@ -74,12 +86,17 @@ def main():
         server = DecodeServer(model, params, batch_size=args.batch,
                               max_seq_len=args.max_seq)
     else:
+        buckets = None
+        if args.bucket_sizes is not None:
+            buckets = [int(b) for b in args.bucket_sizes.split(",") if b]
         server = PagedEngine(model, params, batch_size=args.batch,
                              max_seq_len=args.max_seq,
                              page_size=args.page_size,
                              num_pages=args.pages or None,
                              use_kernel=not args.no_kernel and
-                             jax.default_backend() == "tpu")
+                             jax.default_backend() == "tpu",
+                             prefill_chunk_tokens=args.prefill_chunk_tokens,
+                             bucket_sizes=buckets)
 
     if not args.smoke:
         # place the decode state on the mesh; the jitted serve steps

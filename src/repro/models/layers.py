@@ -252,6 +252,7 @@ def attention_block(p: dict, x: Array, positions: Array, cfg,
                     update: Optional[Array] = None,
                     paged_table: Optional[Array] = None,
                     paged_kernel: bool = False,
+                    q_lens: Optional[Array] = None,
                     ) -> Tuple[Array, Optional[KVCache]]:
     """Full attention sub-block (pre-norm residual handled by caller).
 
@@ -271,6 +272,14 @@ def attention_block(p: dict, x: Array, positions: Array, cfg,
     Pallas paged-attention kernel when ``paged_kernel``).  Requires
     per-slot ``cache_pos``; the serving engine guarantees every written
     page is exclusively owned (copy-on-write upstream).
+
+    Fused multi-query paged decode (``q_lens`` given): x is (B, C, D)
+    with up to C tokens per slot — chunked-prefill chunks and decode
+    tokens share one forward.  ``cache_pos`` is the tokens per slot
+    BEFORE this pass ("start"); token ``c`` of slot ``b`` sits at
+    absolute position ``start[b] + c``, writes its page, and attends
+    everything up to itself.  Tokens ``c >= q_lens[b]`` are padding:
+    their writes are drop-routed and their outputs garbage by contract.
     """
     B, T, D = x.shape
     hd = cfg.hd
@@ -292,26 +301,33 @@ def attention_block(p: dict, x: Array, positions: Array, cfg,
         # the same masked gqa_attention as the per-slot dense branch —
         # the parity-anchor contract (DESIGN.md §11).
         NP, P = cache.k.shape[0], cache.k.shape[1]
-        pos = cache_pos.astype(jnp.int32)                   # (B,)
-        pid = paged_table[jnp.arange(B), pos // P]
-        if update is not None:
-            pid = jnp.where(update, pid, NP)                # drop write
-        slot = pos % P
-        k_new = cache.k.at[pid, slot].set(k[:, 0].astype(cache.k.dtype),
+        M = paged_table.shape[1]
+        start = cache_pos.astype(jnp.int32)                 # (B,)
+        if q_lens is None:   # legacy single-token contract via update
+            qlens = (jnp.ones((B,), jnp.int32) if update is None
+                     else jnp.where(update, 1, 0).astype(jnp.int32))
+        else:
+            qlens = q_lens.astype(jnp.int32)
+        pos_mat = start[:, None] + jnp.arange(T, dtype=jnp.int32)[None]
+        pid = jnp.take_along_axis(paged_table,
+                                  jnp.minimum(pos_mat // P, M - 1), axis=1)
+        pid = jnp.where(jnp.arange(T)[None] < qlens[:, None], pid, NP)
+        slot = pos_mat % P
+        k_new = cache.k.at[pid, slot].set(k.astype(cache.k.dtype),
                                           mode="drop")
-        v_new = cache.v.at[pid, slot].set(v[:, 0].astype(cache.v.dtype),
+        v_new = cache.v.at[pid, slot].set(v.astype(cache.v.dtype),
                                           mode="drop")
         if paged_kernel:
-            from repro.kernels.ops import paged_attention_op
-            out = paged_attention_op(
-                q[:, 0], k_new, v_new, paged_table, pos + 1,
-                window=cfg.attention_window).astype(v.dtype)[:, None]
+            from repro.kernels.ops import paged_attention_batched_op
+            out = paged_attention_batched_op(
+                q, k_new, v_new, paged_table, start, qlens,
+                window=cfg.attention_window).astype(v.dtype)
         else:
             kg = paged_gather(k_new, paged_table)           # (B, M*P, ...)
             vg = paged_gather(v_new, paged_table)
             k_pos = jnp.broadcast_to(jnp.arange(kg.shape[1])[None],
                                      (B, kg.shape[1]))
-            mask = decode_attention_mask(pos[:, None], k_pos, causal,
+            mask = decode_attention_mask(pos_mat, k_pos, causal,
                                          cfg.attention_window)
             out = gqa_attention(q, kg, vg, mask)
         out = out.reshape(B, T, cfg.num_heads * hd)

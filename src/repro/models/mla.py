@@ -58,6 +58,7 @@ def mla_block(p: dict, x: Array, positions: Array, cfg,
               update: Optional[Array] = None,
               paged_table: Optional[Array] = None,
               paged_kernel: bool = False,
+              q_lens: Optional[Array] = None,
               ) -> Tuple[Array, Optional[MLACache]]:
     a = cfg.mla
     B, T, D = x.shape
@@ -74,30 +75,54 @@ def mla_block(p: dict, x: Array, positions: Array, cfg,
 
     if cache is not None and paged_table is not None:
         # paged latent decode (DESIGN.md §11): the (c_kv, k_rope) pair
-        # is written into the slot's owned pool page, then the read
-        # gathers the slot's pages into a contiguous (B, M*P, r) latent
-        # view and falls through to the standard decode math.  The MLA
-        # paged read stays jnp-only: the cache is rank-r latent, so the
-        # per-token traffic the GQA kernel saves is already compressed
-        # away and the cost sits in the MXU up-projections below
-        # (``paged_kernel`` is accepted for API symmetry and ignored).
-        del paged_kernel
+        # of every valid token is written into the slot's owned pool
+        # page, then the read runs in the ABSORBED form when
+        # ``paged_kernel``: scores directly against the latent pages
+        # with W_uk folded into the query and the output accumulated in
+        # latent space (W_uv applied after) — the up-projected K/V
+        # never exist.  The jnp fallback gathers the latent pages and
+        # falls through to the shared unabsorbed decode math below;
+        # both paths support the fused multi-query contract (``q_lens``
+        # per slot, padding tokens drop-routed / garbage by contract).
         NP, P = cache.c_kv.shape[0], cache.c_kv.shape[1]
-        pos = cache_pos.astype(jnp.int32)                    # (B,)
-        pid = paged_table[jnp.arange(B), pos // P]
-        if update is not None:
-            pid = jnp.where(update, pid, NP)
-        slot = pos % P
+        M = paged_table.shape[1]
+        start = cache_pos.astype(jnp.int32)                  # (B,)
+        if q_lens is None:   # legacy single-token contract via update
+            qlens = (jnp.ones((B,), jnp.int32) if update is None
+                     else jnp.where(update, 1, 0).astype(jnp.int32))
+        else:
+            qlens = q_lens.astype(jnp.int32)
+        pos_mat = start[:, None] + jnp.arange(T, dtype=jnp.int32)[None]
+        pid = jnp.take_along_axis(paged_table,
+                                  jnp.minimum(pos_mat // P, M - 1), axis=1)
+        pid = jnp.where(jnp.arange(T)[None] < qlens[:, None], pid, NP)
+        slot = pos_mat % P
         pages_kv = cache.c_kv.at[pid, slot].set(
-            c_kv[:, 0].astype(cache.c_kv.dtype), mode="drop")
+            c_kv.astype(cache.c_kv.dtype), mode="drop")
         pages_kr = cache.k_rope.at[pid, slot].set(
-            k_rope[:, 0].astype(cache.k_rope.dtype), mode="drop")
+            k_rope.astype(cache.k_rope.dtype), mode="drop")
+        new_cache = MLACache(c_kv=pages_kv, k_rope=pages_kr)
+        if paged_kernel:
+            from repro.kernels.ops import paged_mla_attention_op
+            r = a.kv_lora_rank
+            w_uk = p["w_uk"].reshape(r, H, a.qk_nope_head_dim)
+            q_abs = jnp.einsum("bthx,rhx->bthr",
+                               q_nope.astype(jnp.float32),
+                               w_uk.astype(jnp.float32))
+            o_lat = paged_mla_attention_op(
+                q_abs, q_rope, pages_kv, pages_kr, paged_table, start,
+                qlens, scale=1.0 / math.sqrt(qk_hd),
+                window=cfg.attention_window)
+            w_uv = p["w_uv"].reshape(r, H, a.v_head_dim)
+            out = jnp.einsum("bthr,rhx->bthx", o_lat,
+                             w_uv.astype(jnp.float32)).astype(x.dtype)
+            out = out.reshape(B, T, H * a.v_head_dim)
+            return out @ p["w_o"], new_cache
         kv_lat = paged_gather(pages_kv, paged_table)         # (B, M*P, r)
         kr = paged_gather(pages_kr, paged_table)
         k_pos = jnp.broadcast_to(jnp.arange(kv_lat.shape[1])[None],
                                  (B, kv_lat.shape[1]))
-        q_pos = pos[:, None]
-        new_cache = MLACache(c_kv=pages_kv, k_rope=pages_kr)
+        q_pos = pos_mat
     elif cache is None:
         kv_lat, kr = c_kv, k_rope
         k_pos = positions[0] if positions.ndim > 1 else positions

@@ -94,12 +94,15 @@ def _block_init(key: Array, cfg: ArchConfig, kind: str) -> dict:
 def _block_apply(p: dict, x: Array, positions: Array, cfg: ArchConfig,
                  kind: str, cache=None, cache_pos=None, prefix_len: int = 0,
                  update=None, paged_table=None,
-                 paged_kernel: bool = False) -> Tuple[Array, Any, Array]:
+                 paged_kernel: bool = False,
+                 q_lens=None) -> Tuple[Array, Any, Array]:
     """-> (x_out, new_cache, aux_loss).  ``update`` (decode only): (B,)
     mask of batch slots whose attention caches may be written; recurrent
     (SSM) states are masked by the caller (:meth:`Model.serve_step`).
     ``paged_table`` (paged decode only): the (B, max_pages) page table
-    routed to the attention caches — recurrent states never page."""
+    routed to the attention caches — recurrent states never page.
+    ``q_lens`` (fused paged decode only): per-slot valid-token counts
+    for the multi-query contract (layers.attention_block)."""
     aux = jnp.zeros((), jnp.float32)
     causal = not cfg.is_encoder
     if kind in ("dense", "encoder", "vlm"):
@@ -109,7 +112,8 @@ def _block_apply(p: dict, x: Array, positions: Array, cfg: ArchConfig,
                                        full_prefix=prefix_len,
                                        update=update,
                                        paged_table=paged_table,
-                                       paged_kernel=paged_kernel)
+                                       paged_kernel=paged_kernel,
+                                       q_lens=q_lens)
         x = x + h
         x = x + mlp_block(p["mlp"], rmsnorm(x, p["ln2"], cfg.rms_eps),
                           activation="gelu" if kind == "vlm" else "silu")
@@ -120,13 +124,15 @@ def _block_apply(p: dict, x: Array, positions: Array, cfg: ArchConfig,
                                      cache=cache, cache_pos=cache_pos,
                                      update=update,
                                      paged_table=paged_table,
-                                     paged_kernel=paged_kernel)
+                                     paged_kernel=paged_kernel,
+                                     q_lens=q_lens)
         else:
             h, new_cache = attention_block(p["attn"], xn, positions, cfg,
                                            cache=cache, cache_pos=cache_pos,
                                            causal=True, update=update,
                                            paged_table=paged_table,
-                                           paged_kernel=paged_kernel)
+                                           paged_kernel=paged_kernel,
+                                           q_lens=q_lens)
         x = x + h
         mo, aux = moe_block(p["moe"], rmsnorm(x, p["ln2"], cfg.rms_eps), cfg)
         x = x + mo
@@ -139,7 +145,8 @@ def _block_apply(p: dict, x: Array, positions: Array, cfg: ArchConfig,
                                         cache=a_cache, cache_pos=cache_pos,
                                         causal=True, update=update,
                                         paged_table=paged_table,
-                                        paged_kernel=paged_kernel)
+                                        paged_kernel=paged_kernel,
+                                        q_lens=q_lens)
         h_mamba, m_new = ssm_lib.mamba_forward(p["mamba"], xn, cfg,
                                                state=m_state)
         # parallel-head fusion (arXiv:2411.13676): mean of normalized outputs
@@ -256,6 +263,16 @@ class Model:
         self.uniform = len(set(self.kinds)) == 1
         self.scan = cfg.scan_layers and self.uniform
 
+    @property
+    def attention_only(self) -> bool:
+        """True when every layer's decode state is attention cache only
+        (no recurrent SSM/mamba leaves) — the archs eligible for padded-
+        bucket prefill and chunked (multi-token) paged decode: tail
+        padding sits behind the causal mask, whereas a recurrent scan
+        would thread garbage tokens through its state."""
+        return all(k in ("dense", "encoder", "vlm", "moe")
+                   for k in self.kinds)
+
     # -- params ----------------------------------------------------------
     def init_params(self, key: Array) -> dict:
         cfg = self.cfg
@@ -306,9 +323,15 @@ class Model:
 
     # -- forward ----------------------------------------------------------
     def forward(self, params: dict, batch: dict, *,
-                collect_caches: bool = False, last_token_only: bool = False):
+                collect_caches: bool = False, last_token_only: bool = False,
+                last_index: Optional[Array] = None):
         """Training/prefill forward.  -> (logits (B, T, V_pad), aux_loss)
-        [+ per-layer caches if ``collect_caches``]."""
+        [+ per-layer caches if ``collect_caches``].  ``last_index``
+        (bucketed prefill): dynamic true prompt length — the head runs
+        on the single hidden state at position ``last_index - 1``, so a
+        prompt padded to its bucket emits the same logits as the
+        unpadded run (causal masking keeps tail padding out of every
+        earlier position)."""
         cfg = self.cfg
         x, positions = self._embed(params, batch)
         prefix_len = (batch["embeds"].shape[1]
@@ -343,7 +366,10 @@ class Model:
             caches = tuple(cache_list) if collect_caches else None
 
         x = rmsnorm(x, params["final_norm"], cfg.rms_eps)
-        if last_token_only:
+        if last_index is not None:
+            idx = jnp.maximum(jnp.asarray(last_index, jnp.int32) - 1, 0)
+            x = jax.lax.dynamic_slice_in_dim(x, idx, 1, 1)
+        elif last_token_only:
             x = x[:, -1:]
         head = (params["embed"].T if self.cfg.tie_embeddings
                 and "lm_head" not in params else params["lm_head"])
@@ -352,16 +378,24 @@ class Model:
             return logits, aux, caches
         return logits, aux
 
-    def prefill(self, params: dict, batch: dict, extra_capacity: int = 0
+    def prefill(self, params: dict, batch: dict, extra_capacity: int = 0,
+                true_len: Optional[Array] = None
                 ) -> Tuple[Array, "DecodeState"]:
         """Inference prefill: run the full prompt once, return the
         last-position logits (B, vocab) and a DecodeState holding the
         per-layer KV caches / recurrent states for subsequent decode.
         Cache capacity is prompt length + ``extra_capacity`` (ring
-        semantics evict the oldest tokens once exhausted)."""
+        semantics evict the oldest tokens once exhausted).
+
+        ``true_len`` (bucketed prefill, attention-only archs): the
+        prompt is padded to a bucket length and ``true_len`` is its real
+        length — the returned logits come from position ``true_len - 1``
+        and the decode position starts there, so one jit compile serves
+        every prompt length in the bucket."""
         cfg = self.cfg
-        logits, _, caches = self.forward(params, batch, collect_caches=True,
-                                         last_token_only=True)
+        logits, _, caches = self.forward(
+            params, batch, collect_caches=True,
+            last_token_only=true_len is None, last_index=true_len)
         if extra_capacity:
             caches = _pad_cache_capacity(caches, extra_capacity)
         if cfg.frontend == "vision":
@@ -370,9 +404,10 @@ class Model:
             T = batch["embeds"].shape[1]
         else:
             T = batch["tokens"].shape[1]
+        pos = (jnp.asarray(T, jnp.int32) if true_len is None
+               else jnp.asarray(true_len, jnp.int32))
         return (logits[:, 0, :cfg.vocab_size],
-                DecodeState(caches=caches,
-                            position=jnp.asarray(T, jnp.int32)))
+                DecodeState(caches=caches, position=pos))
 
     # -- loss --------------------------------------------------------------
     def loss(self, params: dict, batch: dict) -> Array:
@@ -574,22 +609,34 @@ class Model:
             page_table=jnp.zeros((batch, max_pages), jnp.int32),
             seq_lens=jnp.zeros((batch,), jnp.int32))
 
-    def paged_serve_step(self, params: dict, tokens: Array,
-                         state: PagedDecodeState,
-                         update: Optional[Array] = None,
+    def paged_fused_step(self, params: dict, tokens: Array,
+                         state: PagedDecodeState, q_lens: Array,
                          use_kernel: bool = False
                          ) -> Tuple[Array, PagedDecodeState]:
-        """One decode step against the page pool: write the fed token's
-        KV at page ``table[b, len // P]`` slot ``len % P``, attend the
-        slot's gathered pages (jnp, or the Pallas paged-attention
-        kernel), advance ``seq_lens``.  Same ``update`` contract as
-        :meth:`serve_step`: masked-out slots touch nothing and their
-        logits are garbage."""
+        """THE paged forward (DESIGN.md §11): one launch over all active
+        slots, each carrying up to C tokens.  tokens: (B, C) int32 —
+        slot ``b``'s tokens land at absolute positions ``seq_lens[b] +
+        c`` for ``c < q_lens[b]``; the rest are padding (writes
+        drop-routed, outputs garbage).  A pure decode pass is C == 1
+        with ``q_lens`` of ones; a chunked-prefill pass folds prompt
+        chunks (q_lens up to C) into the same launch.  Returns the
+        logits of each slot's LAST valid token (B, vocab) — garbage for
+        slots with ``q_lens == 0`` — and the advanced state
+        (``seq_lens += q_lens``).  C > 1 requires an attention-only arch
+        (recurrent states cannot mask a mid-scan tail)."""
         cfg = self.cfg
+        C = tokens.shape[1]
+        if C > 1 and not self.attention_only:
+            raise ValueError(
+                f"fused multi-token paged decode (C={C}) needs an "
+                f"attention-only arch; {cfg.arch_type} carries recurrent "
+                "state — serve it with C=1 (bulk prefill + plain decode)")
         x = params["embed"][tokens]
         x = x * jnp.sqrt(jnp.asarray(cfg.d_model, x.dtype))
-        pos = state.seq_lens
-        positions = pos[:, None].astype(jnp.int32)     # (B, 1)
+        start = state.seq_lens
+        q_lens = q_lens.astype(jnp.int32)
+        positions = (start[:, None]
+                     + jnp.arange(C, dtype=jnp.int32)[None])   # (B, C)
         table = state.page_table
 
         if self.scan:
@@ -599,9 +646,10 @@ class Model:
                 layer_p, cache = xs
                 h, new_cache, _ = _block_apply(layer_p, h, positions, cfg,
                                                kind, cache=cache,
-                                               cache_pos=pos, update=update,
+                                               cache_pos=start,
                                                paged_table=table,
-                                               paged_kernel=use_kernel)
+                                               paged_kernel=use_kernel,
+                                               q_lens=q_lens)
                 return h, new_cache
 
             x, new_caches = jax.lax.scan(body, x,
@@ -613,45 +661,67 @@ class Model:
                 lp = (layers[i] if isinstance(layers, tuple)
                       else jax.tree.map(lambda t: t[i], layers))
                 x, nc, _ = _block_apply(lp, x, positions, cfg, kind,
-                                        cache=state.caches[i], cache_pos=pos,
-                                        update=update, paged_table=table,
-                                        paged_kernel=use_kernel)
+                                        cache=state.caches[i],
+                                        cache_pos=start, paged_table=table,
+                                        paged_kernel=use_kernel,
+                                        q_lens=q_lens)
                 new_caches.append(nc)
             new_caches = tuple(new_caches)
 
-        if update is not None:
-            new_caches = _mask_recurrent_states(
-                state.caches, new_caches, update,
-                batch_axis=1 if self.scan else 0)
+        # recurrent leaves update wholesale — restore rows of inactive
+        # slots (attention caches already drop-routed their writes)
+        new_caches = _mask_recurrent_states(
+            state.caches, new_caches, q_lens > 0,
+            batch_axis=1 if self.scan else 0)
 
         x = rmsnorm(x, params["final_norm"], cfg.rms_eps)
         head = (params["embed"].T if cfg.tie_embeddings
                 and "lm_head" not in params else params["lm_head"])
-        logits = (x @ head)[:, 0, :cfg.vocab_size]
-        if update is None:
-            new_lens = pos + 1
-        else:
-            new_lens = jnp.where(update, pos + 1, pos)
+        logits_all = x @ head                          # (B, C, V_pad)
+        last = jnp.maximum(q_lens - 1, 0)[:, None, None]
+        logits = jnp.take_along_axis(logits_all, last,
+                                     axis=1)[:, 0, :cfg.vocab_size]
         return logits, PagedDecodeState(caches=new_caches, page_table=table,
-                                        seq_lens=new_lens)
+                                        seq_lens=start + q_lens)
+
+    def paged_serve_step(self, params: dict, tokens: Array,
+                         state: PagedDecodeState,
+                         update: Optional[Array] = None,
+                         use_kernel: bool = False
+                         ) -> Tuple[Array, PagedDecodeState]:
+        """One decode step against the page pool — the C == 1 view of
+        :meth:`paged_fused_step`.  Same ``update`` contract as
+        :meth:`serve_step`: masked-out slots touch nothing and their
+        logits are garbage."""
+        B = tokens.shape[0]
+        q_lens = (jnp.ones((B,), jnp.int32) if update is None
+                  else jnp.where(update, 1, 0).astype(jnp.int32))
+        return self.paged_fused_step(params, tokens, state, q_lens,
+                                     use_kernel=use_kernel)
 
     def write_prefill_to_pages(self, caches: Any, prefill_caches: Any,
                                table_row: Array, shared_len: Array,
-                               slot, *, page_size: int) -> Any:
+                               slot, *, page_size: int,
+                               true_len: Optional[Array] = None) -> Any:
         """Scatter a bulk-prefill handoff (:meth:`prefill` on one (1, T)
         prompt) into the pool: attention KV of positions
         ``[shared_len, T)`` lands in the pages of ``table_row`` (the
         shared-prefix positions are already resident in shared pages and
         are drop-routed); recurrent leaves overwrite ``slot``'s row
         wholesale — the prefill state IS the recurrent state after the
-        prompt, so nothing of a previous occupant survives."""
+        prompt, so nothing of a previous occupant survives.
+        ``true_len`` (bucketed prefill): positions past the real prompt
+        length are bucket padding and are drop-routed too."""
         scan = self.scan
         P = page_size
 
         def page_idx(T, n_pages):
             pos = jnp.arange(T)
-            pid = table_row[pos // P]
+            idx = jnp.minimum(pos // P, table_row.shape[0] - 1)
+            pid = table_row[idx]
             pid = jnp.where(pos >= shared_len, pid, n_pages)   # drop shared
+            if true_len is not None:
+                pid = jnp.where(pos < true_len, pid, n_pages)  # drop pad
             return pid, pos % P
 
         def pages_write(pages, seq):

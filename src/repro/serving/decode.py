@@ -22,6 +22,7 @@ so that
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable, List, Optional, Tuple
 
 import jax
@@ -68,6 +69,14 @@ class DecodeServer:
         self._step = jax.jit(model.serve_step)
         self.slots: List[Optional[Request]] = [None] * batch_size
         self._next_tok = np.zeros((batch_size, 1), np.int32)
+        self.decode_seconds = 0.0   # wall time of decode step() passes
+        self.decode_tokens = 0      # tokens generated in those passes
+
+    def reset_perf_counters(self) -> None:
+        """Zero the decode-throughput counters: benches warm the jit
+        cache with a throwaway run, then reset and measure."""
+        self.decode_seconds = 0.0
+        self.decode_tokens = 0
 
     def place_state(self, shardings) -> None:
         """Move the decode state onto mesh shardings
@@ -130,14 +139,17 @@ class DecodeServer:
                              for r in self.slots])
         if not active.any():
             return
+        t0 = time.perf_counter()
         logits, self.state = self._step(
             self.params, jnp.asarray(self._next_tok.copy()), self.state,
             jnp.asarray(active))   # synchronous host copy, see prefill
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        self.decode_seconds += time.perf_counter() - t0
         for i, req in enumerate(self.slots):
             if active[i]:
                 req.generated.append(int(self._next_tok[i, 0]))
                 self._next_tok[i, 0] = nxt[i]
+                self.decode_tokens += 1
 
     def run(self, requests: List[Request]) -> List[Request]:
         pending = list(requests)

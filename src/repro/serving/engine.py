@@ -9,25 +9,40 @@ ingestion costs O(prompt) serve passes.  The paged engine replaces both:
 * **memory** — attention KV lives in a shared :class:`PagePool`; a
   request holds exactly ``ceil(tokens / page_size)`` pages, prompt
   prefixes shared copy-on-write across requests;
-* **prefill** — ONE ``Model.prefill`` forward per prompt, scattered
-  into the request's pages (``Model.write_prefill_to_pages``);
+* **prefill** — chunked (attention-only archs): prompt tokens ride the
+  fused multi-query decode launch a few at a time, so several waiting
+  prompts fold into the SAME pass that advances live decodes — no
+  dedicated prefill forward at all.  Bulk (recurrent archs, or
+  ``prefill_chunk_tokens=0``): ONE ``Model.prefill`` forward per
+  prompt, padded to a length bucket so jit compiles once per bucket,
+  scattered into the request's pages;
+* **decode** — every pass runs ONE fused launch over all active slots
+  against a page table sliced to the smallest power-of-two width
+  covering the pages actually in use, so attention work scales with
+  live context instead of ``max_seq`` (the dense server always pays
+  worst case);
 * **capacity** — admission queues until pages are available, and a
-  decode step that cannot grow preempts the lowest-priority (latest
-  admitted) request: its pages return to the pool and it re-queues with
-  ``prompt + generated`` as the new prompt, which under greedy decoding
-  reproduces the evicted trajectory exactly (the re-prefill's last-token
-  argmax IS the pending token).
+  pass that cannot grow preempts the lowest-priority (latest admitted)
+  request — even mid-chunked-prefill: its pages return to the pool and
+  it re-queues with ``prompt + generated`` as the new prompt, which
+  under greedy decoding reproduces the evicted trajectory exactly.
 
 Parity anchor: with ``page_size >= max_seq`` (one page per request),
 ``num_pages = batch`` and greedy sampling, the decode read degenerates
 to the dense masked attention over a contiguous cache row, and
 :meth:`run` reproduces ``DecodeServer.run`` token-for-token on the same
-requests (tests/test_paged_engine.py).  SSM/hybrid archs keep their
-recurrent state dense in the engine — only attention caches page.
+requests, in every mode (tests/test_paged_engine.py,
+tests/test_chunked_prefill.py).  SSM/hybrid archs keep their recurrent
+state dense in the engine — only attention caches page — and serve via
+bulk admission (a recurrent scan cannot mask a mid-chunk tail).
+
+TTFT accounting: ``first_token_at`` is stamped at the pass that EMITS
+the request's first logit — the bulk-prefill forward, or the chunked
+pass that feeds the prompt's last token — never at admission.
 
 Scheduling is host-side Python (like the pool): the device sees one
-jitted ``paged_serve_step`` per decode step and one ``prefill`` +
-page-scatter per admission.
+jitted fused pass per clock tick (plus one ``prefill`` + page-scatter
+per bulk admission).
 """
 from __future__ import annotations
 
@@ -35,7 +50,7 @@ import dataclasses
 import functools
 import time
 from collections import deque
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -46,6 +61,8 @@ from repro.serving.decode import BOS_TOKEN, Request
 from repro.serving.pages import PagePool, PrefixCache
 
 Array = jax.Array
+
+DEFAULT_CHUNK_TOKENS = 16
 
 
 def attention_cache_bytes(caches) -> int:
@@ -63,10 +80,29 @@ def attention_cache_bytes(caches) -> int:
     return total
 
 
+def default_buckets(max_seq: int) -> List[int]:
+    """Powers of two up to ``max_seq`` (inclusive of max_seq itself):
+    one jit compile per bucket instead of one per distinct length."""
+    out = []
+    b = 8
+    while b < max_seq:
+        out.append(b)
+        b *= 2
+    out.append(max_seq)
+    return out
+
+
+def _pow2_at_least(n: int, cap: int) -> int:
+    b = 1
+    while b < n:
+        b *= 2
+    return min(b, cap)
+
+
 @dataclasses.dataclass
 class RequestStats:
     """Per-request lifecycle in serve-pass clock ticks (one tick = one
-    model pass: a bulk prefill or a batched decode step)."""
+    model pass: a bulk prefill or a fused batched pass)."""
     uid: int
     enqueued_at: int
     admitted_at: Optional[int] = None
@@ -96,7 +132,9 @@ class PagedEngine:
     def __init__(self, model: Model, params, batch_size: int,
                  max_seq_len: int, page_size: Optional[int] = None,
                  num_pages: Optional[int] = None, use_kernel: bool = False,
-                 share_prefixes: bool = True, trace_logits: bool = False):
+                 share_prefixes: bool = True, trace_logits: bool = False,
+                 prefill_chunk_tokens: Optional[int] = None,
+                 bucket_sizes: Optional[Sequence[int]] = None):
         cfg = model.cfg
         if not cfg.supports_decode:
             raise ValueError(f"{cfg.name} is encoder-only: no decode")
@@ -117,6 +155,35 @@ class PagedEngine:
         self.prefix: Optional[PrefixCache] = (
             PrefixCache(self.pool) if share_prefixes else None)
 
+        # chunked prefill and padded-bucket prefill both require every
+        # layer's decode state to be attention-only: tail padding and
+        # per-slot variable chunk lengths hide behind the causal mask,
+        # which recurrent scans don't have
+        if prefill_chunk_tokens is None:
+            self.chunk = (DEFAULT_CHUNK_TOKENS if model.attention_only
+                          else 0)
+        else:
+            if prefill_chunk_tokens > 0 and not model.attention_only:
+                raise ValueError(
+                    f"chunked prefill needs an attention-only arch; "
+                    f"{cfg.name} ({cfg.arch_type}) carries recurrent "
+                    "state — use prefill_chunk_tokens=0 (bulk)")
+            self.chunk = int(prefill_chunk_tokens)
+        if bucket_sizes is not None:
+            if bucket_sizes and not model.attention_only:
+                raise ValueError(
+                    "prompt-length bucketing pads prompts, which corrupts "
+                    f"recurrent state; {cfg.name} must prefill unpadded")
+            # an explicit empty sequence disables bucketing entirely
+            # (exact-length prefill, one compile per distinct length)
+            self.bucket_sizes = sorted(int(b) for b in bucket_sizes)
+            if self.bucket_sizes and self.bucket_sizes[-1] < max_seq_len:
+                self.bucket_sizes.append(max_seq_len)
+        elif model.attention_only:
+            self.bucket_sizes = default_buckets(max_seq_len)
+        else:
+            self.bucket_sizes = []      # exact-length prefill
+
         state = model.init_paged_state(batch_size, self.num_pages,
                                        self.page_size, self.max_pages)
         self._caches = state.caches
@@ -131,6 +198,9 @@ class PagedEngine:
         donate = jax.default_backend() != "cpu"
         self._step_fn = jax.jit(
             functools.partial(model.paged_serve_step, use_kernel=use_kernel),
+            donate_argnums=(2,) if donate else ())
+        self._fused_fn = jax.jit(
+            functools.partial(model.paged_fused_step, use_kernel=use_kernel),
             donate_argnums=(2,) if donate else ())
         self._prefill_fn = jax.jit(model.prefill)
         self._write_fn = jax.jit(
@@ -149,6 +219,9 @@ class PagedEngine:
         # strictly append-only past that watermark.  Only pages BORROWED
         # via a prefix match go through the COW gate before a write.
         self._slot_owned: List[List[bool]] = [[] for _ in range(batch_size)]
+        # chunked prefill: the full token list still being fed (None =
+        # slot is decoding); the next token to feed is toks[_lens[slot]]
+        self._pending: List[Optional[List[int]]] = [None] * batch_size
         self._admit_seq = [-1] * batch_size
         self._seq_counter = 0
         self.queue: "deque[Request]" = deque()
@@ -156,10 +229,14 @@ class PagedEngine:
         self.logit_trace: Dict[int, List[np.ndarray]] = {}
         self._trace = trace_logits
 
-        self.clock = 0              # serve passes (prefills + decode steps)
+        self.clock = 0              # serve passes (prefills + fused passes)
         self.decode_steps = 0
-        self.prefill_forwards = 0
+        self.prefill_forwards = 0   # passes that ingested prompt tokens
+        self.mixed_passes = 0       # fused passes mixing prefill + decode
+        self.mid_prefill_preemptions = 0
         self.wall_seconds = 0.0
+        self.decode_seconds = 0.0   # wall time of PURE decode passes
+        self.decode_tokens = 0      # tokens generated in those passes
 
     def place_caches(self, shardings) -> None:
         """Move the page pool onto mesh shardings
@@ -180,6 +257,25 @@ class PagedEngine:
     def cache_in_use_bytes(self) -> int:
         return self.pool.in_use * self.cache_page_bytes()
 
+    def prefill_cache_size(self) -> int:
+        """Jit compile-cache entries of the bulk-prefill fn — with
+        bucketing this stays at the number of distinct buckets touched,
+        not the number of distinct prompt lengths (tests assert it)."""
+        return int(self._prefill_fn._cache_size())
+
+    def reset_perf_counters(self) -> None:
+        """Zero the wall-clock/throughput counters (NOT the request
+        stats): benches warm the jit caches with a throwaway run, then
+        reset and measure."""
+        self.clock = 0
+        self.decode_steps = 0
+        self.prefill_forwards = 0
+        self.mixed_passes = 0
+        self.mid_prefill_preemptions = 0
+        self.wall_seconds = 0.0
+        self.decode_seconds = 0.0
+        self.decode_tokens = 0
+
     def latency_summary(self) -> dict:
         lats = [s.latency for s in self.stats.values()
                 if s.latency is not None]
@@ -199,6 +295,10 @@ class PagedEngine:
             "clock": self.clock,
             "decode_steps": self.decode_steps,
             "prefill_forwards": self.prefill_forwards,
+            "mixed_passes": self.mixed_passes,
+            "mid_prefill_preemptions": self.mid_prefill_preemptions,
+            "decode_seconds": self.decode_seconds,
+            "decode_tokens": self.decode_tokens,
             "pool": self.pool.metrics.as_dict(),
             "pool_utilization": self.pool.utilization(),
             "cache_hbm_bytes": self.cache_hbm_bytes(),
@@ -231,8 +331,18 @@ class PagedEngine:
             pid = self.pool.alloc()
         return pid
 
-    def _try_admit(self, slot: int, req: Request) -> bool:
-        toks = self._restart_tokens(req)
+    def _bucket_len(self, T: int) -> int:
+        for b in self.bucket_sizes:
+            if b >= T:
+                return b
+        return T
+
+    def _acquire_pages(self, toks: List[int]):
+        """Prefix-match ``toks`` and secure every page the prompt needs:
+        borrowed prefix pages first, fresh pages for the rest, COW on
+        the trailing partially-shared page.  Returns ``(pages, owned,
+        shared_len)`` or None (with all side effects rolled back) when
+        the pool cannot hold the prompt."""
         T = len(toks)
         P = self.page_size
         hits_before = self.pool.metrics.prefix_hits
@@ -242,6 +352,17 @@ class PagedEngine:
             shared, shared_len = [], 0
         pages = [pid for pid, _ in shared]
         owned = [False] * len(pages)
+
+        # chunked mode feeds ``toks[shared_len:]`` through the fused
+        # pass and needs at least the LAST prompt token to produce the
+        # first logit: trim a whole-prompt match by one token (and drop
+        # the final matched page if that token was all it covered)
+        if self.chunk and shared_len == T:
+            shared_len = T - 1
+            if shared_len % P == 0 and pages:
+                self.pool.release(pages.pop())
+                owned.pop()
+
         n_shared = len(pages)
 
         def rollback():
@@ -260,22 +381,31 @@ class PagedEngine:
             pid = self._alloc_or_evict()
             if pid is None:
                 rollback()
-                return False
+                return None
             pages.append(pid)
             owned.append(True)
 
-        # then COW the trailing shared partial page before the prefill
-        # writes the rest of its slots
-        if shared and shared_len < T and shared_len % P != 0:
+        # then COW the trailing shared partial page before later writes
+        # fill the rest of its slots
+        if n_shared and shared_len < T and shared_len % P != 0:
             new_pid, copied = self.pool.writable(pages[n_shared - 1])
             if new_pid is None:
                 rollback()
-                return False
+                return None
             if copied:
                 self._caches = self._copy_fn(self._caches,
                                              pages[n_shared - 1], new_pid)
                 pages[n_shared - 1] = new_pid
             owned[n_shared - 1] = True
+        return pages, owned, shared_len
+
+    def _try_admit(self, slot: int, req: Request) -> bool:
+        toks = self._restart_tokens(req)
+        T = len(toks)
+        got = self._acquire_pages(toks)
+        if got is None:
+            return False
+        pages, owned, shared_len = got
 
         self.slots[slot] = req
         self._slot_pages[slot] = pages
@@ -284,32 +414,78 @@ class PagedEngine:
         self._seq_counter += 1
         self._table[slot, :] = 0
         self._table[slot, :len(pages)] = pages
-        self._lens[slot] = 0
+        st = self.stats[req.uid]
 
-        # bulk prefill: ONE forward for the whole prompt, then scatter
-        # the resulting KV into this request's pages (shared-prefix
-        # positions drop-routed — their pages already hold those bytes)
-        logits, dstate = self._prefill_fn(
-            self.params, {"tokens": jnp.asarray([toks], jnp.int32)})
+        if self.chunk:
+            # chunked admission: every prompt page is secured up front,
+            # but the tokens themselves ride the next fused passes.  No
+            # forward here — and no first_token stamp: the first logit
+            # hasn't been computed (the TTFT contract).  The prefix is
+            # registered only when the prompt is fully written, so
+            # sharers can never read unwritten bytes.
+            self._lens[slot] = shared_len
+            self._pending[slot] = toks
+            st.admitted_at = self.clock if st.admitted_at is None \
+                else st.admitted_at
+            st.shared_tokens += shared_len
+            return True
+
+        # bulk prefill: ONE forward for the whole prompt — padded to a
+        # length bucket when the arch allows it, so jit compiles once
+        # per bucket — then scatter the resulting KV into this
+        # request's pages (shared-prefix positions drop-routed: their
+        # pages already hold those bytes; bucket padding drop-routed
+        # behind ``true_len``)
+        self._lens[slot] = 0
+        Tb = self._bucket_len(T) if self.bucket_sizes else T
+        padded = toks + [BOS_TOKEN] * (Tb - T)
+        if Tb != T:
+            logits, dstate = self._prefill_fn(
+                self.params, {"tokens": jnp.asarray([padded], jnp.int32)},
+                true_len=jnp.asarray(T, jnp.int32))
+        else:
+            logits, dstate = self._prefill_fn(
+                self.params, {"tokens": jnp.asarray([padded], jnp.int32)})
         self._caches = self._write_fn(
             self._caches, dstate.caches, jnp.asarray(self._table[slot]),
-            jnp.asarray(shared_len), slot)
+            jnp.asarray(shared_len), slot,
+            true_len=jnp.asarray(T, jnp.int32))
         self._next_tok[slot, 0] = int(np.argmax(np.asarray(logits[0])))
         self._lens[slot] = T
         self.clock += 1
         self.prefill_forwards += 1
 
-        st = self.stats[req.uid]
         st.admitted_at = self.clock if st.admitted_at is None \
             else st.admitted_at
         st.prefill_calls += 1
         st.prefill_tokens += T
         st.shared_tokens += shared_len
         if st.first_token_at is None:
-            st.first_token_at = self.clock
+            st.first_token_at = self.clock   # this pass emitted the logit
         if self.prefix is not None:
             self.prefix.register(toks, pages)
         return True
+
+    def _blocked_by_inflight_prefix(self, toks: List[int]) -> bool:
+        """Chunked admission is cheap enough that several prompts enter
+        in one pass — but a prefix is only registered once fully
+        written, so a request sharing at least one page with a prompt
+        STILL BEING FED waits for it (a couple of passes) instead of
+        allocating duplicate pages it could have borrowed."""
+        if self.prefix is None or not self.chunk:
+            return False
+        for s in range(self.batch):
+            pend = self._pending[s]
+            if pend is None:
+                continue
+            n = 0
+            for a, b in zip(pend, toks):
+                if a != b:
+                    break
+                n += 1
+            if n >= self.page_size:
+                return True
+        return False
 
     def _admit_pending(self) -> None:
         for slot in range(self.batch):
@@ -317,10 +493,13 @@ class PagedEngine:
                 continue
             if not self.queue:
                 return
+            if self._blocked_by_inflight_prefix(
+                    self._restart_tokens(self.queue[0])):
+                return              # FIFO: no head-of-line skipping
             req = self.queue.popleft()
             if not self._try_admit(slot, req):
                 self.queue.appendleft(req)
-                return              # FIFO: no head-of-line skipping
+                return
 
     # -- preemption -------------------------------------------------------
     def _free_slot(self, slot: int) -> None:
@@ -331,12 +510,17 @@ class PagedEngine:
         self._table[slot, :] = 0
         self._lens[slot] = 0
         self.slots[slot] = None
+        self._pending[slot] = None
         self._admit_seq[slot] = -1
 
     def _preempt(self, slot: int) -> None:
         req = self.slots[slot]
         self.stats[req.uid].preemptions += 1
         self.pool.metrics.preemptions += 1
+        if self._pending[slot] is not None:
+            # mid-chunked-prefill: the prefix was never registered, so
+            # the partially-written pages vanish with the release
+            self.mid_prefill_preemptions += 1
         self._free_slot(slot)
         # re-queue at the front with everything decoded so far as the
         # prompt: greedy re-prefill reproduces the pending token exactly
@@ -379,20 +563,35 @@ class PagedEngine:
             owned[idx] = True
         return True
 
-    # -- the batched decode step -----------------------------------------
+    # -- the fused batched pass ------------------------------------------
     def _active_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slots)
                 if r is not None and not r.done]
 
+    def _table_width(self) -> int:
+        """Power-of-two page-table slice covering every active slot's
+        pages: the fused pass attends ``width * page_size`` positions
+        instead of ``max_seq``, which is THE decode wall-clock lever —
+        work scales with live context (compiles are bounded by the
+        log2-many widths)."""
+        widest = max((len(self._slot_pages[s])
+                      for s in range(self.batch)
+                      if self.slots[s] is not None), default=1)
+        return _pow2_at_least(max(widest, 1), self.max_pages)
+
     def step(self) -> bool:
-        """One batched decode pass over the active slots.  Returns False
-        when nothing was active (after capacity preemptions)."""
-        # capacity pass, oldest admissions first so they steal from the
-        # youngest (the preemption priority order)
+        """One fused pass over the active slots: single-token decode for
+        slots past their prompt, up to ``prefill_chunk_tokens`` prompt
+        tokens spread over the slots still ingesting (chunked mode).
+        Returns False when nothing was active (after capacity
+        preemptions)."""
+        # capacity pass for decoding slots (prefilling slots secured
+        # every prompt page at admission), oldest admissions first so
+        # they steal from the youngest (the preemption priority order)
         for slot in sorted(self._active_slots(),
                            key=lambda s: self._admit_seq[s]):
-            if self.slots[slot] is None:
-                continue            # preempted earlier in this pass
+            if self.slots[slot] is None or self._pending[slot] is not None:
+                continue            # preempted earlier / still prefilling
             while not self._ensure_capacity(slot):
                 victim = self._victim()
                 self._preempt(victim)
@@ -402,36 +601,92 @@ class PagedEngine:
         active_idx = self._active_slots()
         if not active_idx:
             return False
-        active = np.zeros((self.batch,), bool)
-        active[active_idx] = True
 
+        # plan the pass: decode slots feed their pending token; chunked
+        # prompt tokens fill a shared budget FIFO over prefilling slots
+        q_lens = np.zeros((self.batch,), np.int32)
+        budget = self.chunk
+        any_prefill = False
+        for i in sorted(active_idx, key=lambda s: self._admit_seq[s]):
+            if self._pending[i] is None:
+                q_lens[i] = 1
+            elif budget > 0:
+                remaining = len(self._pending[i]) - int(self._lens[i])
+                take = min(remaining, budget)
+                q_lens[i] = take
+                budget -= take
+                any_prefill = take > 0
+
+        C = self.chunk if any_prefill else 1
+        tokens = np.zeros((self.batch, C), np.int32)
+        for i in active_idx:
+            n = int(q_lens[i])
+            if n == 0:
+                continue
+            if self._pending[i] is None:
+                tokens[i, 0] = self._next_tok[i, 0]
+            else:
+                lo = int(self._lens[i])
+                tokens[i, :n] = self._pending[i][lo:lo + n]
+
+        W = self._table_width()
         state = PagedDecodeState(caches=self._caches,
-                                 page_table=jnp.asarray(self._table),
+                                 page_table=jnp.asarray(self._table[:, :W]),
                                  seq_lens=jnp.asarray(self._lens))
-        # synchronous numpy snapshot of the host token buffer: jax's own
-        # copy is async and the mutation below could race it (the
-        # decode.py host-buffer race)
-        logits, new_state = self._step_fn(
-            self.params, jnp.asarray(self._next_tok.copy()), state,
-            jnp.asarray(active))
+        pure_decode = not any_prefill
+        t0 = time.perf_counter() if pure_decode else 0.0
+        # tokens is a fresh numpy buffer (no host-buffer race: nothing
+        # mutates it before the synchronous asarray conversion)
+        logits, new_state = self._fused_fn(
+            self.params, jnp.asarray(tokens), state, jnp.asarray(q_lens))
         self._caches = new_state.caches
-        self.clock += 1
-        self.decode_steps += 1
-
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        self.clock += 1
+        if pure_decode:
+            self.decode_steps += 1
+            self.decode_seconds += time.perf_counter() - t0
+        else:
+            self.mixed_passes += 1
+            self.prefill_forwards += 1
+
         if self._trace:
             logits_np = np.asarray(logits)
         for i in active_idx:
+            n = int(q_lens[i])
+            if n == 0:
+                continue
             req = self.slots[i]
-            if self._trace:
-                self.logit_trace.setdefault(req.uid, []).append(
-                    logits_np[i].copy())
-            req.generated.append(int(self._next_tok[i, 0]))
-            self._next_tok[i, 0] = int(nxt[i])
-            self._lens[i] += 1
-            if req.done:
-                self.stats[req.uid].finished_at = self.clock
-                self._free_slot(i)
+            st = self.stats[req.uid]
+            if self._pending[i] is None:
+                # decode slot: the fed token materializes, the new
+                # argmax becomes next pass's feed
+                if self._trace:
+                    self.logit_trace.setdefault(req.uid, []).append(
+                        logits_np[i].copy())
+                req.generated.append(int(tokens[i, 0]))
+                self._next_tok[i, 0] = int(nxt[i])
+                self._lens[i] += 1
+                if pure_decode:
+                    self.decode_tokens += 1
+                if req.done:
+                    st.finished_at = self.clock
+                    self._free_slot(i)
+            else:
+                # prefilling slot: advance the prompt watermark
+                self._lens[i] += n
+                st.prefill_calls += 1
+                st.prefill_tokens += n
+                if int(self._lens[i]) >= len(self._pending[i]):
+                    # prompt complete — THIS pass emitted the first
+                    # logit (the TTFT stamp), and only now is the
+                    # prefix safe for sharers to read
+                    toks = self._pending[i]
+                    self._pending[i] = None
+                    self._next_tok[i, 0] = int(nxt[i])
+                    if st.first_token_at is None:
+                        st.first_token_at = self.clock
+                    if self.prefix is not None:
+                        self.prefix.register(toks, self._slot_pages[i])
         return True
 
     # -- driver -----------------------------------------------------------

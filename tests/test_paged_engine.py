@@ -68,8 +68,10 @@ def test_dense_parity_anchor(arch, use_kernel):
                         page_size=32, num_pages=2, use_kernel=use_kernel)
     p = paged.run(_requests(cfg, 5))
     _assert_token_parity(d, p)
-    # bulk prefill: one forward per admission, not one per prompt token
-    assert paged.prefill_forwards == 5
+    # prompt ingestion never costs one pass per token: bulk mode is one
+    # forward per admission, and the default chunked mode folds several
+    # admissions into shared fused passes (3 observed here vs 5 bulk)
+    assert 0 < paged.prefill_forwards <= 5
     assert paged.pool.metrics.preemptions == 0
 
 
@@ -129,12 +131,15 @@ def test_pool_exhaustion_preempts_and_completes():
     outputs equal an uncontended reference run (the re-queued prompt =
     prompt + generated reconstruction is exact under greedy)."""
     cfg, model, params = _model()
+    # bulk mode: the prefill_forwards assert below counts one forward
+    # per (re-)admission (chunked-mode preemption is covered in
+    # tests/test_chunked_prefill.py)
     reference = PagedEngine(model, params, batch_size=3, max_seq_len=32,
-                            page_size=4)
+                            page_size=4, prefill_chunk_tokens=0)
     ref = reference.run(_requests(cfg, 6, new=8))
 
     tight = PagedEngine(model, params, batch_size=3, max_seq_len=32,
-                        page_size=4, num_pages=6)
+                        page_size=4, num_pages=6, prefill_chunk_tokens=0)
     out = tight.run(_requests(cfg, 6, new=8))
     assert tight.pool.metrics.preemptions >= 1
     assert all(len(r.generated) == 8 for r in out)
