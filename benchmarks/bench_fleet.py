@@ -19,7 +19,13 @@ Smoke acceptance (the CI row): on every cell the tree's root-hop
 bits/contribution are strictly below the flat fleet's at equal cohort
 size — pre-reduction (round-grouped float64 merge + sparse-or-dense
 re-encoding) turns E*s client uplinks into at most a few near-dense
-messages per round.  Results land in ``results/BENCH_fleet.json``.
+messages per round.
+
+``results/BENCH_fleet.json`` is a TRAJECTORY (same contract as
+``results/BENCH_serving.json``): each run appends one entry
+``{ts, mode, backend, provenance, cells}`` instead of overwriting, so
+the wire-cost history accumulates across PRs; a pre-trajectory file (a
+bare row list) is absorbed as one legacy entry on first append.
 """
 from __future__ import annotations
 
@@ -27,6 +33,8 @@ import json
 import math
 import os
 import time
+
+RESULTS_PATH = "results/BENCH_fleet.json"
 
 
 def _run_topology(*, depth: int, n: int, d: int, edges: int, mid: int,
@@ -106,8 +114,47 @@ def run(quick: bool = True):
     return [_cell(**c) for c in cells]
 
 
-def main(quick: bool = True):
+def _load_trajectory(path: str) -> list:
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        data = json.load(f)
+    if data and isinstance(data, list) and "cells" not in data[0]:
+        # pre-trajectory format (a bare row list): keep it as one entry
+        return [{"mode": "legacy", "cells": data}]
+    return data
+
+
+def _append_trajectory(rows: list, mode: str, path: str = RESULTS_PATH):
+    import jax
+
+    from repro.obs import provenance
+
+    entry = {
+        "ts": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "mode": mode,
+        "backend": jax.default_backend(),
+        "provenance": provenance.collect(),
+        "cells": rows,
+    }
+    traj = _load_trajectory(path)
+    traj.append(entry)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(traj, f, indent=1, default=str)
+
+
+def main(quick: bool = True, trace_out: str = None, metrics_out: str = None):
+    from repro.obs import start_run
+
+    mode = "smoke" if quick else "full"
+    obsrun = start_run(
+        trace_out=trace_out or f"results/traces/bench_fleet_{mode}.trace.json",
+        metrics_out=metrics_out
+        or f"results/traces/bench_fleet_{mode}.metrics.json",
+        meta={"cli": "bench_fleet", "mode": mode})
     rows = run(quick=quick)
+    obsrun.finish()
     print("# hierarchical fleet: root-hop bits vs flat, equal cohort")
     for r in rows:
         print(f"  fleet,n={r['n']},d={r['d']},E={r['edges']},"
@@ -124,9 +171,7 @@ def main(quick: bool = True):
             < r["flat_bits_per_contribution"], r
     print("OK: tree pre-reduction undercuts the flat root uplink at "
           "equal cohort size")
-    os.makedirs("results", exist_ok=True)
-    with open("results/BENCH_fleet.json", "w") as f:
-        json.dump(rows, f, indent=1, default=str)
+    _append_trajectory(rows, mode)
     yield rows
 
 
@@ -136,5 +181,12 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="two small cells — the CI row")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="Chrome trace artifact path (default under "
+                         "results/traces/)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="metrics snapshot path (default under "
+                         "results/traces/)")
     args = ap.parse_args()
-    list(main(quick=args.smoke))
+    list(main(quick=args.smoke, trace_out=args.trace_out,
+              metrics_out=args.metrics_out))

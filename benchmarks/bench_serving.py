@@ -264,10 +264,13 @@ def _check_baseline(res: dict, mode: str, path: str = RESULTS_PATH) -> None:
 
 
 def _append_trajectory(res: dict, mode: str, path: str = RESULTS_PATH):
+    from repro.obs import provenance
+
     entry = {
         "ts": time.strftime("%Y-%m-%dT%H:%M:%S"),
         "mode": mode,
         "backend": jax.default_backend(),
+        "provenance": provenance.collect(),
         "cells": res["cells"],
         "decode": res["decode"],
     }
@@ -278,9 +281,20 @@ def _append_trajectory(res: dict, mode: str, path: str = RESULTS_PATH):
         json.dump(traj, f, indent=1, default=str)
 
 
-def main(quick: bool = True, check_baseline: bool = False):
+def main(quick: bool = True, check_baseline: bool = False,
+         trace_out: str = None, metrics_out: str = None):
+    from repro.obs import start_run
+
     mode = "smoke" if quick else "full"
+    # every bench run leaves trace + metrics artifacts next to the
+    # trajectory (results/* is gitignored; only the BENCH jsons commit)
+    obsrun = start_run(
+        trace_out=trace_out or f"results/traces/bench_serving_{mode}.trace.json",
+        metrics_out=metrics_out
+        or f"results/traces/bench_serving_{mode}.metrics.json",
+        meta={"cli": "bench_serving", "mode": mode})
     res = run(quick=quick)
+    obsrun.finish()
     print("# serving layer: dense ring cache vs paged pool")
     for r in res["cells"]:
         print(f"  serving,b={r['batch']},P={r['page_size']},"
@@ -314,5 +328,12 @@ if __name__ == "__main__":
     ap.add_argument("--check-baseline", action="store_true",
                     help="compare against the last committed trajectory "
                          "entry instead of appending (the CI gate)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="Chrome trace artifact path (default under "
+                         "results/traces/)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="metrics snapshot path (default under "
+                         "results/traces/)")
     args = ap.parse_args()
-    list(main(quick=args.smoke, check_baseline=args.check_baseline))
+    list(main(quick=args.smoke, check_baseline=args.check_baseline,
+              trace_out=args.trace_out, metrics_out=args.metrics_out))

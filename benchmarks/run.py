@@ -32,7 +32,8 @@ def main() -> None:
 
     from benchmarks import (bench_async, bench_batch_effect, bench_comm,
                             bench_fleet, bench_kernels, bench_methods,
-                            bench_pa_sweep, bench_serving, roofline)
+                            bench_obs, bench_pa_sweep, bench_serving,
+                            roofline)
     suites = {
         "pa_sweep": bench_pa_sweep.main,
         "methods": bench_methods.main,
@@ -42,6 +43,7 @@ def main() -> None:
         "async": bench_async.main,
         "serving": bench_serving.main,
         "fleet": bench_fleet.main,
+        "obs": bench_obs.main,
         "roofline": roofline.main,
     }
     if args.only:

@@ -70,9 +70,10 @@ def main():
               f"{m['pool']['cow_copies']} COW copies, "
               f"peak {m['pool']['peak_in_use']}/{server.num_pages} pages, "
               f"{m['cache_hbm_bytes']} cache bytes")
-        print(f"latency (serve-passes): p50={m['latency_p50']:.0f} "
-              f"p95={m['latency_p95']:.0f}; "
-              f"ttft p50={m['ttft_p50']:.0f} p95={m['ttft_p95']:.0f}")
+        if m["latency_p50"] is not None:
+            print(f"latency (serve-passes): p50={m['latency_p50']:.0f} "
+                  f"p95={m['latency_p95']:.0f}; "
+                  f"ttft p50={m['ttft_p50']:.0f} p95={m['ttft_p95']:.0f}")
 
 
 if __name__ == "__main__":

@@ -68,6 +68,8 @@ from repro.data.sharding import place_batch
 from repro.fl.events import ARRIVAL, REJOIN, EventQueue
 from repro.fl.latency import LatencyModel, PoissonAvailability
 from repro.fl.staleness import make_staleness
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.training.loop import round_train_key
 from repro.training.trainer import TrainState, Trainer, _tree_norm
 
@@ -174,6 +176,7 @@ class CohortScheduler:
 
         q = EventQueue()
         now = 0.0
+        obs_trace.set_virtual_time(now)
         idle = np.ones(n, bool)
         jobs: Dict[int, Tuple[int, Any, np.ndarray]] = {}
         outstanding = 0
@@ -189,6 +192,7 @@ class CohortScheduler:
             while len(got) < target:
                 ev = q.pop()
                 now = max(now, ev.time)
+                obs_trace.set_virtual_time(now)
                 if ev.kind == REJOIN:
                     idle[ev.client] = True
                     continue
@@ -229,8 +233,10 @@ class CohortScheduler:
             skipped_off = int((sampled & idle & ~avail).sum())
 
             placed = place_batch(batch, mesh, data_axes)
-            state, disp, mets = dispatch_fn(state, placed, key,
-                                            jnp.asarray(eff))
+            with obs_trace.span("train.dispatch", track="train",
+                                round=t, cohort=int(eff.sum())):
+                state, disp, mets = dispatch_fn(state, placed, key,
+                                                jnp.asarray(eff))
             members = np.nonzero(eff)[0]
             kept = members
             if len(members):
@@ -269,6 +275,7 @@ class CohortScheduler:
                     # next one so the fleet recovers
                     ev = q.pop()
                     now = max(now, ev.time)
+                    obs_trace.set_virtual_time(now)
                     idle[ev.client] = True
                 else:
                     # empty cohort and nothing in flight (e.g. the whole
@@ -277,6 +284,7 @@ class CohortScheduler:
                     # recover instead of spinning the remaining rounds
                     # at t=now
                     now += 1.0
+                    obs_trace.set_virtual_time(now)
 
             # -- commit: drain the flight buffer down to K-1 cohorts so
             # there is room to gang-schedule the next round; the pops
@@ -295,7 +303,10 @@ class CohortScheduler:
             clients = 0
             if target > 0:
                 arrivals = collect(target)
-                stale, clients = commit(arrivals, t)
+                with obs_trace.span("train.commit", track="train",
+                                    round=t, cohorts=target) as sp:
+                    stale, clients = commit(arrivals, t)
+                    sp.set(clients=clients)
             rows.append(dict(
                 time=now, loss=float(mets.loss),
                 gnorm=float(self._gnorm(state.dasha.g)),
@@ -316,7 +327,10 @@ class CohortScheduler:
         while outstanding:
             chunk = outstanding if K is None else 1
             arrivals = collect(chunk)
-            stale, clients = commit(arrivals, t_eff)
+            with obs_trace.span("train.commit", track="train",
+                                round=t_eff, cohorts=chunk) as sp:
+                stale, clients = commit(arrivals, t_eff)
+                sp.set(clients=clients)
             t_eff += 1
             rows.append(dict(
                 time=now, loss=rows[-1]["loss"] if rows else 0.0,
@@ -344,6 +358,10 @@ class CohortScheduler:
             discarded_stale=discarded,
             total_time=now, event_log=q.log_tuples(),
             dropped_members=dropped_members)
+        reg = obs_metrics.get_registry()
+        reg.gauge("train.bits_sent").set(float(bits_total))
+        reg.gauge("train.committed").set(float(result.committed.sum()))
+        reg.gauge("train.virtual_time").set(float(now))
         return state, result
 
 

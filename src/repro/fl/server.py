@@ -51,6 +51,8 @@ from repro.core.participation import ParticipationSampler
 from repro.fl.events import ARRIVAL, REJOIN, EventQueue
 from repro.fl.latency import LatencyModel, PoissonAvailability
 from repro.fl.staleness import make_staleness
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 Array = jax.Array
 
@@ -163,6 +165,7 @@ class AsyncDashaServer:
 
         q = EventQueue()
         now = 0.0
+        obs_trace.set_virtual_time(now)
         idle = np.ones(n, bool)
         jobs: Dict[int, _Job] = {}
         outstanding = 0               # undelivered ARRIVAL events
@@ -183,6 +186,7 @@ class AsyncDashaServer:
             while len(got) < target:
                 ev = q.pop()
                 now = max(now, ev.time)
+                obs_trace.set_virtual_time(now)
                 if ev.kind == REJOIN:
                     idle[ev.client] = True
                     continue
@@ -239,7 +243,9 @@ class AsyncDashaServer:
             skipped = int((sampled & ~idle).sum())
             skipped_off = int((sampled & idle & ~avail).sum())
 
-            out = self._dispatch(key_t, state, jnp.asarray(eff))
+            with obs_trace.span("fleet.dispatch", track="async",
+                                round=t, cohort=int(eff.sum())):
+                out = self._dispatch(key_t, state, jnp.asarray(eff))
             m_np = np.asarray(out.m_i, np.float32)
             h_np = np.asarray(out.h_new, np.float32)
             hij_np = (np.asarray(out.h_ij_delta, np.float32)
@@ -270,6 +276,7 @@ class AsyncDashaServer:
                 # let the fleet recover instead of idling out the run.
                 ev = q.pop()
                 now = max(now, ev.time)
+                obs_trace.set_virtual_time(now)
                 idle[ev.client] = True
             elif target == 0 and self.availability is not None:
                 # Frozen-clock guard (mirrors fl/cohorts.py): nothing
@@ -278,9 +285,13 @@ class AsyncDashaServer:
                 # function of `now`, so the clock must advance for the
                 # windows to ever end.
                 now += 1.0
+                obs_trace.set_virtual_time(now)
             elif target > 0:
                 arrivals = collect(target)
-                state, stale = commit(arrivals, t)
+                with obs_trace.span("fleet.commit", track="async",
+                                    round=t, units=target) as sp:
+                    state, stale = commit(arrivals, t)
+                    sp.set(committed=len(stale))
             loss, gnsq = self._measure(state.x)
             rows.append(dict(
                 time=now, loss=float(loss), gnsq=float(gnsq),
@@ -300,7 +311,10 @@ class AsyncDashaServer:
         while outstanding:
             chunk = outstanding if K is None else min(K, outstanding)
             arrivals = collect(chunk)
-            state, stale = commit(arrivals, t_eff)
+            with obs_trace.span("fleet.commit", track="async",
+                                round=t_eff, units=chunk) as sp:
+                state, stale = commit(arrivals, t_eff)
+                sp.set(committed=len(stale))
             t_eff += 1
             loss, gnsq = self._measure(state.x)
             rows.append(dict(
@@ -330,4 +344,10 @@ class AsyncDashaServer:
             utilization=busy_s / total,
             dropped=dropped, discarded_stale=discarded,
             total_time=now, event_log=q.log_tuples())
+        reg = obs_metrics.get_registry()
+        reg.gauge("fleet.async.bits_total").set(float(bits_total))
+        reg.gauge("fleet.async.committed").set(
+            float(result.committed.sum()))
+        reg.gauge("fleet.async.dropped").set(float(dropped))
+        reg.gauge("fleet.async.virtual_time").set(float(now))
         return state, result

@@ -74,6 +74,9 @@ from repro.fl.events import (ARRIVAL, DROP, REJOIN, TIER_ARRIVAL,
                              EventQueue)
 from repro.fl.latency import LatencyModel, PoissonAvailability
 from repro.fl.staleness import compose_hops, make_staleness
+from repro.obs import metrics as obs_metrics
+from repro.obs import monitors as obs_monitors
+from repro.obs import trace as obs_trace
 
 Array = jax.Array
 
@@ -512,6 +515,7 @@ class HierarchicalFleet:
 
         q = EventQueue()
         now = 0.0
+        obs_trace.set_virtual_time(now)
         round_now = 0                       # the root's round clock
         idle = np.ones(n, bool)
         contribs: Dict[int, _Contrib] = {}
@@ -624,6 +628,9 @@ class HierarchicalFleet:
             msgs[mid] = _Msg(src_tier=k, src_agg=j, groups=groups,
                              bits=bits, n_members=len(members))
             q.push(now + delay, TIER_ARRIVAL, mid, round_now)
+            obs_trace.instant("fleet.flush", track="fleet", tier=k, agg=j,
+                              members=len(members), bits=bits,
+                              forced=forced)
             message_log.append(MessageRecord(
                 tier=k, agg=j, round_idx=round_now, bits=bits,
                 n_groups=len(groups), n_members=len(members),
@@ -642,6 +649,7 @@ class HierarchicalFleet:
         def handle(ev) -> None:
             nonlocal now, dropped
             now = max(now, ev.time)
+            obs_trace.set_virtual_time(now)
             if ev.kind == REJOIN:
                 idle[ev.client] = True
             elif ev.kind == DROP:
@@ -711,10 +719,19 @@ class HierarchicalFleet:
             if K_root is None:
                 while pending[ROOT] > 0:
                     step_event()
-                return commit(len(root_buffer))
+                return commit_traced(len(root_buffer))
             while len(root_buffer) < K_root and pending[ROOT] > 0:
                 step_event()
-            return commit(min(K_root, len(root_buffer)))
+            return commit_traced(min(K_root, len(root_buffer)))
+
+        def commit_traced(ncommit: int) -> Tuple[List[int], int]:
+            with obs_trace.span("fleet.commit", track="fleet",
+                                round=round_now, units=ncommit) as sp:
+                stale, nmsgs = commit(ncommit)
+                sp.set(committed=len(stale))
+            obs_trace.counter("fleet.bits_cum", float(hop_bits.sum()),
+                              track="fleet")
+            return stale, nmsgs
 
         def commit(ncommit: int) -> Tuple[List[int], int]:
             nonlocal g
@@ -801,7 +818,9 @@ class HierarchicalFleet:
             skipped = int((sampled & ~idle).sum())
             skipped_off = int((sampled & idle & ~avail).sum())
 
-            disp = wl.dispatch(key_t, t, x, g, store, eff)
+            with obs_trace.span("fleet.dispatch", track="fleet",
+                                round=t, cohort=int(eff.sum())):
+                disp = wl.dispatch(key_t, t, x, g, store, eff)
             x = disp.x_new
             for row_i, client in enumerate(disp.idx):
                 client = int(client)
@@ -836,6 +855,7 @@ class HierarchicalFleet:
                 # Frozen-clock guard: whole fleet idle inside Poisson
                 # outage windows; availability depends on `now`.
                 now += 1.0
+                obs_trace.set_virtual_time(now)
             elif alive() > 0:
                 stale, nmsgs = collect_and_commit()
             record(stale, nmsgs, int(eff.sum()), skipped, skipped_off)
@@ -870,4 +890,7 @@ class HierarchicalFleet:
             event_log=q.log_tuples(), message_log=message_log,
             commit_log=commit_log,
             flush_sizes={k: dict(v) for k, v in flush_sizes.items()})
+        obs_metrics.publish_fleet(result)
+        if obs_trace.active():
+            obs_monitors.run_fleet_monitors(result)
         return FleetState(x=x, g=g, store=store), result

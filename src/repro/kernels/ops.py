@@ -6,6 +6,7 @@ executes in Python, numerics identical); on TPU set
 """
 from __future__ import annotations
 
+import functools
 import os
 from typing import Tuple
 
@@ -25,8 +26,22 @@ from repro.kernels.paged_attention import (paged_attention_batched_pallas,
                                            paged_attention_pallas,
                                            paged_mla_attention_pallas)
 from repro.kernels.randk import block_gather_pallas, block_scatter_pallas
+from repro.obs.trace import kernel_scope
 
 Array = jax.Array
+
+
+def _scoped(name: str):
+    """Wrap an op in :func:`repro.obs.trace.kernel_scope` so its Pallas
+    launch is attributable (``repro.kernel.<name>``) in jax.profiler /
+    Perfetto device traces.  named_scope costs only at trace time."""
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            with kernel_scope(name):
+                return fn(*args, **kwargs)
+        return wrapper
+    return deco
 
 
 def interpret_default() -> bool:
@@ -45,6 +60,7 @@ def _f32(*xs: Array) -> tuple:
     return tuple(x.astype(jnp.float32) for x in xs)
 
 
+@_scoped("dasha_update")
 def dasha_update_op(gn: Array, go: Array, h: Array, gi: Array, *,
                     b: float, a: float, pa: float, participates: Array,
                     interpret: bool | None = None
@@ -57,6 +73,7 @@ def dasha_update_op(gn: Array, go: Array, h: Array, gi: Array, *,
         b=float(b), a=float(a), pa=float(pa), interpret=interp)
 
 
+@_scoped("dasha_update_batched")
 def dasha_update_batched_op(gn: Array, go: Array, h: Array, gi: Array,
                             mask: Array, *, b: float, a: float, pa: float,
                             interpret: bool | None = None
@@ -71,6 +88,7 @@ def dasha_update_batched_op(gn: Array, go: Array, h: Array, gi: Array,
         b=float(b), a=float(a), pa=float(pa), interpret=interp)
 
 
+@_scoped("dasha_page_update")
 def dasha_page_update_op(gn: Array, go: Array, bn: Array, bo: Array,
                          h: Array, gi: Array, mask: Array, coin: Array, *,
                          b: float, a: float, pa: float, p_page: float,
@@ -86,6 +104,7 @@ def dasha_page_update_op(gn: Array, go: Array, bn: Array, bo: Array,
         interpret=interp)
 
 
+@_scoped("dasha_tail")
 def dasha_tail_op(k: Array, h: Array, gi: Array, mask: Array, *,
                   a: float, pa: float, interpret: bool | None = None
                   ) -> Tuple[Array, Array]:
@@ -96,6 +115,7 @@ def dasha_tail_op(k: Array, h: Array, gi: Array, mask: Array, *,
         a=float(a), pa=float(pa), interpret=interp)
 
 
+@_scoped("dasha_h_update")
 def dasha_h_update_op(gn: Array, go: Array, h: Array, *, b: float,
                       pa: float, participates: Array,
                       interpret: bool | None = None) -> Array:
@@ -106,6 +126,7 @@ def dasha_h_update_op(gn: Array, go: Array, h: Array, *, b: float,
         b=float(b), pa=float(pa), interpret=interp)
 
 
+@_scoped("dasha_payload_blocks")
 def dasha_payload_blocks_op(gn: Array, go: Array, h: Array, gi: Array,
                             block_idx: Array, *, b: float, a: float,
                             pa: float, scale: float, block_size: int,
@@ -120,6 +141,7 @@ def dasha_payload_blocks_op(gn: Array, go: Array, h: Array, gi: Array,
         block_size=int(block_size), interpret=interp)
 
 
+@_scoped("dasha_page_h_update")
 def dasha_page_h_update_op(gn: Array, go: Array, bn: Array, bo: Array,
                            h: Array, coin: Array, *, b: float, pa: float,
                            p_page: float, participates: Array,
@@ -133,6 +155,7 @@ def dasha_page_h_update_op(gn: Array, go: Array, bn: Array, bo: Array,
         b=float(b), pa=float(pa), p_page=float(p_page), interpret=interp)
 
 
+@_scoped("dasha_page_payload_blocks")
 def dasha_page_payload_blocks_op(gn: Array, go: Array, bn: Array,
                                  bo: Array, h: Array, gi: Array,
                                  block_idx: Array, coin: Array, *,
@@ -150,6 +173,7 @@ def dasha_page_payload_blocks_op(gn: Array, go: Array, bn: Array,
         scale=float(scale), block_size=int(block_size), interpret=interp)
 
 
+@_scoped("buffered_commit")
 def buffered_commit_op(g: Array, m_buf: Array, weights: Array, *,
                        n_nodes: int, interpret: bool | None = None
                        ) -> Array:
@@ -161,6 +185,7 @@ def buffered_commit_op(g: Array, m_buf: Array, weights: Array, *,
         interpret=interp)
 
 
+@_scoped("paged_attention")
 def paged_attention_op(q: Array, k_pages: Array, v_pages: Array,
                        page_table: Array, lens: Array, *,
                        window: int | None = None,
@@ -177,6 +202,7 @@ def paged_attention_op(q: Array, k_pages: Array, v_pages: Array,
         window=None if window is None else int(window), interpret=interp)
 
 
+@_scoped("paged_attention_batched")
 def paged_attention_batched_op(q: Array, k_pages: Array, v_pages: Array,
                                page_table: Array, start: Array,
                                q_lens: Array, *,
@@ -197,6 +223,7 @@ def paged_attention_batched_op(q: Array, k_pages: Array, v_pages: Array,
         window=None if window is None else int(window), interpret=interp)
 
 
+@_scoped("paged_mla_attention")
 def paged_mla_attention_op(q_abs: Array, q_rope: Array, ckv_pages: Array,
                            kr_pages: Array, page_table: Array,
                            start: Array, q_lens: Array, *, scale: float,
@@ -215,6 +242,7 @@ def paged_mla_attention_op(q_abs: Array, q_rope: Array, ckv_pages: Array,
         window=None if window is None else int(window), interpret=interp)
 
 
+@_scoped("block_gather")
 def block_gather_op(x_blocks: Array, block_idx: Array, *, scale: float,
                     interpret: bool | None = None) -> Array:
     interp = _interpret_default() if interpret is None else interpret
@@ -224,6 +252,7 @@ def block_gather_op(x_blocks: Array, block_idx: Array, *, scale: float,
         interpret=interp)
 
 
+@_scoped("block_scatter")
 def block_scatter_op(base_blocks: Array, vals: Array, block_idx: Array,
                      interpret: bool | None = None) -> Array:
     interp = _interpret_default() if interpret is None else interpret

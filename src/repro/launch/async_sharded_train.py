@@ -51,6 +51,8 @@ def main():
     ap.add_argument("--availability-off-mean", type=float, default=5.0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log", default=None)
+    from repro.obs import add_cli_flags
+    add_cli_flags(ap)
     args = ap.parse_args()
 
     if args.smoke and "xla_force_host_platform_device_count" not in \
@@ -69,6 +71,7 @@ def main():
                                    make_production_mesh, num_nodes)
     from repro.models import Model, get_config, get_smoke_config
     from repro.models.registry import INPUT_SHAPES
+    from repro.obs import start_run
     from repro.training.metrics import MetricsLogger
     from repro.training.optim import paper_server
     from repro.training.trainer import Trainer, TrainerConfig
@@ -128,6 +131,10 @@ def main():
                         max_staleness=args.max_staleness,
                         seed=args.seed)
 
+    obsrun = start_run(trace_out=args.trace_out,
+                       metrics_out=args.metrics_out,
+                       meta={"cli": "async_sharded_train",
+                             "arch": args.arch})
     logger = MetricsLogger(args.log, name="async_sharded_train",
                            print_every=max(1, args.rounds // 10))
     with use_mesh(mesh):
@@ -147,6 +154,7 @@ def main():
           f"clients={int(res.committed_clients.sum())} "
           f"mbits={res.bits_cum[-1] / 1e6:.3f} "
           f"s_mean={float(np.sum(res.staleness_mean * res.committed) / max(1, res.committed.sum())):.3f}")
+    obsrun.finish()
 
 
 if __name__ == "__main__":

@@ -48,6 +48,8 @@ def main():
                     help="fused dispatch + buffered-commit kernels")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log", default=None)
+    from repro.obs import add_cli_flags
+    add_cli_flags(ap)
     args = ap.parse_args()
 
     import jax
@@ -59,7 +61,13 @@ def main():
                             make_synthetic_classification)
     from repro.core.dasha_pp import DashaPPConfig
     from repro.fl import AsyncConfig, AsyncDashaServer, make_latency
+    from repro.obs import start_run
     from repro.training.metrics import MetricsLogger
+
+    obsrun = start_run(trace_out=args.trace_out,
+                       metrics_out=args.metrics_out,
+                       meta={"cli": "async_train",
+                             "variant": args.variant})
 
     feats, y = make_synthetic_classification(
         jax.random.key(args.seed), args.n, args.m, args.d)
@@ -103,6 +111,7 @@ def main():
           f"util = {float(np.mean(res.utilization)):.2f}  "
           f"dropped = {res.dropped}  "
           f"staleness hist = {res.staleness_hist}")
+    obsrun.finish()
 
 
 if __name__ == "__main__":

@@ -69,6 +69,8 @@ def main():
     ap.add_argument("--b", type=float, default=0.3)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log", default=None)
+    from repro.obs import add_cli_flags
+    add_cli_flags(ap)
     args = ap.parse_args()
 
     import jax
@@ -122,6 +124,11 @@ def main():
         lat_kw.update(sigma=args.sigma, client_sigma=args.sigma)
     latency = make_latency(args.latency, **lat_kw)
 
+    from repro.obs import start_run
+    obsrun = start_run(trace_out=args.trace_out,
+                       metrics_out=args.metrics_out,
+                       meta={"cli": "fleet_train",
+                             "depth": fcfg.depth})
     fleet = HierarchicalFleet(wl, fcfg, latency,
                               store_backend=args.store,
                               store_dir=args.store_dir)
@@ -149,6 +156,7 @@ def main():
           f"forced flushes = {res.forced_flushes}\n"
           f"per-hop Mbits client->root = {tier_mb}  "
           f"staleness hist = {res.staleness_hist}")
+    obsrun.finish()
     fs.store.close()
 
 

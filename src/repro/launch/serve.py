@@ -50,6 +50,8 @@ def main():
                          "buckets for bulk prefill, e.g. 8,16,32 "
                          "('' = exact-length, one compile per length; "
                          "default: auto powers of two)")
+    from repro.obs import add_cli_flags
+    add_cli_flags(ap)
     args = ap.parse_args()
 
     if args.smoke and "xla_force_host_platform_device_count" not in \
@@ -60,7 +62,13 @@ def main():
     import jax
     import numpy as np
     from repro.models import Model, get_config, get_smoke_config
+    from repro.obs import start_run
     from repro.serving import DecodeServer, PagedEngine, Request
+
+    obsrun = start_run(trace_out=args.trace_out,
+                       metrics_out=args.metrics_out,
+                       meta={"cli": "serve", "engine": args.engine,
+                             "arch": args.arch})
 
     cfg = (get_smoke_config(args.arch) if args.smoke
            else get_config(args.arch))
@@ -126,10 +134,11 @@ def main():
               f"decode_steps={m['decode_steps']} "
               f"pool_util={m['pool_utilization']:.2f} "
               f"cache_hbm_bytes={m['cache_hbm_bytes']}")
-        if "latency_p50" in m:
+        if m["latency_p50"] is not None:
             print(f"  latency p50={m['latency_p50']:.0f} "
                   f"p95={m['latency_p95']:.0f} serve-passes; "
                   f"ttft p50={m['ttft_p50']:.0f} p95={m['ttft_p95']:.0f}")
+    obsrun.finish()
 
 
 if __name__ == "__main__":

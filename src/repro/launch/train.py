@@ -38,6 +38,8 @@ def main():
     ap.add_argument("--gamma", type=float, default=1e-3)
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--log", default=None)
+    from repro.obs import add_cli_flags
+    add_cli_flags(ap)
     args = ap.parse_args()
 
     if args.smoke and "xla_force_host_platform_device_count" not in \
@@ -47,6 +49,7 @@ def main():
 
     import jax
     from repro.compat import use_mesh
+    from repro.obs import start_run
     from repro.core.sharded import ShardedDashaConfig
     from repro.data.synthetic import DataConfig, make_batch
     from repro.launch.mesh import (data_axes_of, make_host_mesh,
@@ -110,11 +113,16 @@ def main():
             yield make_batch(cfg, data, i, dtype=cfg.dtype)
             i += 1
 
+    obsrun = start_run(trace_out=args.trace_out,
+                       metrics_out=args.metrics_out,
+                       meta={"cli": "train", "arch": args.arch,
+                             "variant": args.variant})
     with use_mesh(mesh):
         train(trainer, state, batches(), num_steps=args.steps,
               logger=MetricsLogger(args.log, print_every=10),
               checkpoint_dir=args.ckpt,
               checkpoint_every=50 if args.ckpt else 0)
+    obsrun.finish()
 
 
 if __name__ == "__main__":

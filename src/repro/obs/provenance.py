@@ -1,0 +1,48 @@
+"""Run provenance: who/what/where produced an artifact.
+
+Stamped into bench trajectory entries (results/BENCH_*.json), trace
+metadata, and metrics snapshots so `--check-baseline` comparisons are
+attributable to a commit + backend + host.  Everything degrades to
+``None`` rather than raising — provenance must never fail a run.
+"""
+from __future__ import annotations
+
+import os
+import platform
+import socket
+import subprocess
+import sys
+from typing import Any, Dict, Optional
+
+__all__ = ["git_sha", "collect"]
+
+
+def git_sha(cwd: Optional[str] = None) -> Optional[str]:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            cwd=cwd or os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=5)
+        if out.returncode == 0:
+            return out.stdout.strip()
+    except (OSError, subprocess.SubprocessError):
+        pass
+    return None
+
+
+def collect(cwd: Optional[str] = None) -> Dict[str, Any]:
+    backend = jax_version = None
+    try:
+        import jax
+        jax_version = jax.__version__
+        backend = jax.default_backend()
+    except Exception:
+        pass
+    return {
+        "git_sha": git_sha(cwd),
+        "backend": backend,
+        "jax_version": jax_version,
+        "hostname": socket.gethostname(),
+        "platform": platform.platform(),
+        "python": sys.version.split()[0],
+    }

@@ -1,0 +1,296 @@
+"""Span tracing with dual clocks and a Chrome trace-event exporter.
+
+Design (DESIGN.md §13):
+
+- **Spans** are nestable timed regions opened with :func:`span` (a
+  context manager) or the :func:`traced` decorator.  Each span records
+  wall time from ``time.perf_counter`` relative to the tracer's origin.
+- **Dual clocks.**  The FL runtimes are event-driven simulations with a
+  *virtual* clock (seconds of simulated time).  A runtime publishes its
+  clock via :func:`set_virtual_time`; while a virtual time is known,
+  every span/instant/counter is emitted twice — once on the wall-clock
+  process (pid 1) and once on the virtual-clock process (pid 2) with
+  ``ts = virtual_seconds * 1e6``.  Virtual-clock events are
+  replay-deterministic: the same seed produces byte-identical virtual
+  tracks, whatever the host machine is doing.
+- **Disabled fast path.**  With no tracer installed the module-level
+  helpers return a shared no-op span / return immediately — no
+  allocation, no branching beyond one global load — so instrumentation
+  can stay unconditional on hot paths (benchmarks/bench_obs.py asserts
+  the cost is < 3% of a fused serve pass).
+- **Export** is the Chrome trace-event JSON format (``"traceEvents"``
+  list of ``ph`` X/i/C/M events, microsecond timestamps), loadable in
+  Perfetto (https://ui.perfetto.dev) or ``chrome://tracing``.
+
+The module is stdlib-only.  :func:`kernel_scope` lazily imports jax to
+wrap Pallas kernel launch sites in ``jax.named_scope`` so kernels show
+up named in ``jax.profiler`` device traces; it degrades to a no-op
+when jax is absent.
+
+Event appends are plain list appends (atomic under CPython); the
+runtimes instrumented here are single-threaded per process.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any, Dict, List, Optional
+
+__all__ = [
+    "Tracer", "configure", "install", "uninstall", "get_tracer",
+    "active", "span", "instant", "counter", "set_virtual_time",
+    "traced", "kernel_scope", "export",
+]
+
+WALL_PID = 1      # wall-clock process in the exported trace
+VIRTUAL_PID = 2   # virtual-clock (simulator) process
+
+
+class _NullSpan:
+    """Shared no-op span returned when tracing is disabled."""
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+    def set(self, **args):
+        pass
+
+
+_NULL_SPAN = _NullSpan()
+
+
+class Span:
+    """A single open span; created via :meth:`Tracer.span`."""
+    __slots__ = ("_tracer", "name", "cat", "track", "args", "_t0", "_v0")
+
+    def __init__(self, tracer: "Tracer", name: str, cat: str,
+                 track: Optional[str], args: Dict[str, Any]):
+        self._tracer = tracer
+        self.name = name
+        self.cat = cat
+        self.track = track
+        self.args = args
+        self._t0 = 0.0
+        self._v0: Optional[float] = None
+
+    def set(self, **args):
+        """Attach/overwrite span args (shown in the trace viewer)."""
+        self.args.update(args)
+
+    def __enter__(self):
+        self._t0 = time.perf_counter()
+        self._v0 = self._tracer.virtual_now
+        return self
+
+    def __exit__(self, *exc):
+        self._tracer._finish_span(self)
+        return False
+
+
+class Tracer:
+    """Collects trace events; export with :meth:`export_chrome`."""
+
+    def __init__(self, meta: Optional[Dict[str, Any]] = None):
+        self._origin = time.perf_counter()
+        self.virtual_now: Optional[float] = None
+        self.events: List[Dict[str, Any]] = []
+        self.meta: Dict[str, Any] = dict(meta or {})
+        self._tids: Dict[str, int] = {}
+
+    # -- clocks -----------------------------------------------------
+    def wall_us(self) -> float:
+        return (time.perf_counter() - self._origin) * 1e6
+
+    def set_virtual_time(self, t: float) -> None:
+        self.virtual_now = float(t)
+
+    # -- tracks -----------------------------------------------------
+    def _tid(self, track: Optional[str]) -> int:
+        name = track or "main"
+        tid = self._tids.get(name)
+        if tid is None:
+            tid = len(self._tids)
+            self._tids[name] = tid
+        return tid
+
+    # -- emit -------------------------------------------------------
+    def span(self, name: str, cat: str = "", track: Optional[str] = None,
+             **args) -> Span:
+        return Span(self, name, cat, track, args)
+
+    def _finish_span(self, sp: Span) -> None:
+        t1 = time.perf_counter()
+        ts = (sp._t0 - self._origin) * 1e6
+        dur = (t1 - sp._t0) * 1e6
+        tid = self._tid(sp.track)
+        ev: Dict[str, Any] = {"ph": "X", "pid": WALL_PID, "tid": tid,
+                              "name": sp.name, "ts": ts, "dur": dur}
+        if sp.cat:
+            ev["cat"] = sp.cat
+        if sp.args:
+            ev["args"] = sp.args
+        self.events.append(ev)
+        if sp._v0 is not None and self.virtual_now is not None:
+            vts = sp._v0 * 1e6
+            # clamp: zero-width virtual spans would be invisible
+            vdur = max((self.virtual_now - sp._v0) * 1e6, 1.0)
+            vev = dict(ev)
+            vev["pid"] = VIRTUAL_PID
+            vev["ts"] = vts
+            vev["dur"] = vdur
+            self.events.append(vev)
+
+    def instant(self, name: str, track: Optional[str] = None, **args):
+        tid = self._tid(track)
+        ev: Dict[str, Any] = {"ph": "i", "pid": WALL_PID, "tid": tid,
+                              "name": name, "ts": self.wall_us(), "s": "t"}
+        if args:
+            ev["args"] = args
+        self.events.append(ev)
+        if self.virtual_now is not None:
+            vev = dict(ev)
+            vev["pid"] = VIRTUAL_PID
+            vev["ts"] = self.virtual_now * 1e6
+            self.events.append(vev)
+
+    def counter(self, name: str, value: float, track: Optional[str] = None):
+        ev: Dict[str, Any] = {"ph": "C", "pid": WALL_PID,
+                              "tid": self._tid(track), "name": name,
+                              "ts": self.wall_us(),
+                              "args": {"value": float(value)}}
+        self.events.append(ev)
+        if self.virtual_now is not None:
+            vev = dict(ev)
+            vev["pid"] = VIRTUAL_PID
+            vev["ts"] = self.virtual_now * 1e6
+            self.events.append(vev)
+
+    # -- export -----------------------------------------------------
+    def _metadata_events(self) -> List[Dict[str, Any]]:
+        evs: List[Dict[str, Any]] = [
+            {"ph": "M", "pid": WALL_PID, "tid": 0, "name": "process_name",
+             "args": {"name": "wall"}},
+            {"ph": "M", "pid": VIRTUAL_PID, "tid": 0, "name": "process_name",
+             "args": {"name": "virtual"}},
+        ]
+        for track, tid in self._tids.items():
+            for pid in (WALL_PID, VIRTUAL_PID):
+                evs.append({"ph": "M", "pid": pid, "tid": tid,
+                            "name": "thread_name", "args": {"name": track}})
+        return evs
+
+    def to_chrome(self) -> Dict[str, Any]:
+        return {"traceEvents": self._metadata_events() + self.events,
+                "displayTimeUnit": "ms",
+                "metadata": self.meta}
+
+    def export_chrome(self, path: str) -> str:
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(self.to_chrome(), f)
+        return path
+
+
+# ---------------------------------------------------------------------
+# module-level API (the instrumented code uses only these)
+# ---------------------------------------------------------------------
+_tracer: Optional[Tracer] = None
+
+
+def install(tracer: Tracer) -> Tracer:
+    global _tracer
+    _tracer = tracer
+    return tracer
+
+
+def uninstall() -> Optional[Tracer]:
+    global _tracer
+    t, _tracer = _tracer, None
+    return t
+
+
+def configure(meta: Optional[Dict[str, Any]] = None) -> Tracer:
+    """Create and install a fresh global tracer."""
+    return install(Tracer(meta=meta))
+
+
+def get_tracer() -> Optional[Tracer]:
+    return _tracer
+
+
+def active() -> bool:
+    return _tracer is not None
+
+
+def span(name: str, cat: str = "", track: Optional[str] = None, **args):
+    """Open a span on the installed tracer (no-op span when disabled)."""
+    t = _tracer
+    if t is None:
+        return _NULL_SPAN
+    return t.span(name, cat, track, **args)
+
+
+def instant(name: str, track: Optional[str] = None, **args) -> None:
+    t = _tracer
+    if t is not None:
+        t.instant(name, track, **args)
+
+
+def counter(name: str, value: float, track: Optional[str] = None) -> None:
+    t = _tracer
+    if t is not None:
+        t.counter(name, value, track)
+
+
+def set_virtual_time(t_virtual: float) -> None:
+    t = _tracer
+    if t is not None:
+        t.set_virtual_time(t_virtual)
+
+
+def traced(name: Optional[str] = None, cat: str = "",
+           track: Optional[str] = None):
+    """Decorator form of :func:`span`."""
+    def deco(fn):
+        label = name or fn.__qualname__
+
+        def wrapper(*a, **kw):
+            with span(label, cat, track):
+                return fn(*a, **kw)
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__wrapped__ = fn
+        return wrapper
+    return deco
+
+
+def kernel_scope(name: str):
+    """Annotate a Pallas kernel launch site.
+
+    Returns ``jax.named_scope("repro.kernel.<name>")`` so the kernel is
+    attributable in ``jax.profiler`` device traces (named_scope works
+    under jit tracing, unlike runtime TraceAnnotation).  Degrades to a
+    no-op context when jax is unavailable, keeping the obs core
+    stdlib-only.
+    """
+    try:
+        import jax
+    except Exception:      # pragma: no cover - jax is present in CI
+        return _NULL_SPAN
+    return jax.named_scope(f"repro.kernel.{name}")
+
+
+def export(path: str) -> Optional[str]:
+    """Export the installed tracer's events to ``path`` (Chrome JSON)."""
+    t = _tracer
+    if t is None:
+        return None
+    return t.export_chrome(path)

@@ -1,0 +1,136 @@
+"""Schema checker for obs artifacts (CI `obs-smoke` gate).
+
+Validates the two JSON artifact shapes this package emits:
+
+- **Chrome trace** (``obs/trace.py::Tracer.export_chrome``): top-level
+  object with a ``traceEvents`` list; every event needs ``ph``/``pid``/
+  ``name``, phase-specific fields (``ts``+``dur`` for X, ``ts`` for
+  i/C, ``args.value`` numeric for C, known names for M), and
+  non-negative microsecond timestamps.
+- **Metrics snapshot** (``obs/metrics.py::Registry.write_snapshot``):
+  ``{"ts": ..., "metrics": {name: {"kind": ...}}}`` with per-kind
+  required numeric fields.
+
+CLI (exit 1 on any invalid file)::
+
+    python -m repro.obs.validate trace.json metrics.json ...
+"""
+from __future__ import annotations
+
+import json
+import sys
+from typing import Any, Dict, List, Tuple
+
+__all__ = ["validate_trace", "validate_metrics", "validate_file", "main"]
+
+_PHASES = {"X", "i", "I", "C", "M"}
+_META_NAMES = {"process_name", "thread_name", "process_sort_index",
+               "thread_sort_index", "process_labels"}
+_KINDS = {"counter", "gauge", "histogram"}
+
+
+def _num(x: Any) -> bool:
+    return isinstance(x, (int, float)) and not isinstance(x, bool)
+
+
+def validate_trace(doc: Any) -> List[str]:
+    errors: List[str] = []
+    if not isinstance(doc, dict):
+        return ["trace: top level must be an object"]
+    evs = doc.get("traceEvents")
+    if not isinstance(evs, list):
+        return ["trace: missing 'traceEvents' list"]
+    if not evs:
+        errors.append("trace: 'traceEvents' is empty")
+    for i, ev in enumerate(evs):
+        where = f"traceEvents[{i}]"
+        if not isinstance(ev, dict):
+            errors.append(f"{where}: not an object")
+            continue
+        ph = ev.get("ph")
+        if ph not in _PHASES:
+            errors.append(f"{where}: bad ph {ph!r}")
+            continue
+        if not isinstance(ev.get("name"), str) or not ev["name"]:
+            errors.append(f"{where}: missing name")
+        if not isinstance(ev.get("pid"), int):
+            errors.append(f"{where}: missing pid")
+        if ph == "M":
+            if ev.get("name") not in _META_NAMES:
+                errors.append(f"{where}: unknown metadata {ev.get('name')!r}")
+            continue
+        if not isinstance(ev.get("tid"), int):
+            errors.append(f"{where}: missing tid")
+        if not _num(ev.get("ts")) or ev["ts"] < 0:
+            errors.append(f"{where}: bad ts {ev.get('ts')!r}")
+        if ph == "X" and (not _num(ev.get("dur")) or ev["dur"] < 0):
+            errors.append(f"{where}: bad dur {ev.get('dur')!r}")
+        if ph == "C":
+            args = ev.get("args")
+            if (not isinstance(args, dict) or not args
+                    or not all(_num(v) for v in args.values())):
+                errors.append(f"{where}: counter needs numeric args")
+    return errors
+
+
+def validate_metrics(doc: Any) -> List[str]:
+    errors: List[str] = []
+    if not isinstance(doc, dict):
+        return ["metrics: top level must be an object"]
+    if not _num(doc.get("ts")):
+        errors.append("metrics: missing numeric 'ts'")
+    metrics = doc.get("metrics")
+    if not isinstance(metrics, dict):
+        return errors + ["metrics: missing 'metrics' object"]
+    for name, m in metrics.items():
+        where = f"metrics[{name!r}]"
+        if not isinstance(m, dict):
+            errors.append(f"{where}: not an object")
+            continue
+        kind = m.get("kind")
+        if kind not in _KINDS:
+            errors.append(f"{where}: bad kind {kind!r}")
+            continue
+        if kind in ("counter", "gauge"):
+            if not _num(m.get("value")):
+                errors.append(f"{where}: missing numeric 'value'")
+        else:
+            if not isinstance(m.get("count"), int) or m["count"] < 0:
+                errors.append(f"{where}: bad histogram count")
+            if not _num(m.get("sum")):
+                errors.append(f"{where}: bad histogram sum")
+    return errors
+
+
+def validate_file(path: str) -> Tuple[str, List[str]]:
+    """Auto-detect artifact kind; returns (kind, errors)."""
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        return "unknown", [f"{path}: unreadable: {e}"]
+    if isinstance(doc, dict) and "traceEvents" in doc:
+        return "trace", validate_trace(doc)
+    return "metrics", validate_metrics(doc)
+
+
+def main(argv: List[str]) -> int:
+    if not argv:
+        print("usage: python -m repro.obs.validate FILE [FILE ...]",
+              file=sys.stderr)
+        return 2
+    failed = False
+    for path in argv:
+        kind, errors = validate_file(path)
+        if errors:
+            failed = True
+            print(f"INVALID {kind} {path}")
+            for e in errors[:20]:
+                print(f"  - {e}")
+        else:
+            print(f"ok {kind} {path}")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

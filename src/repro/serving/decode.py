@@ -30,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import DecodeState, Model
+from repro.obs import trace as obs_trace
 
 Array = jax.Array
 
@@ -111,28 +112,33 @@ class DecodeServer:
         batching refill) cannot corrupt in-flight sequences.  A bulk
         prefill path exists via Model.forward; this keeps the example
         dependency-free."""
-        self.slots[slot] = req
-        # reuse: ring position restarts at 0 AND the slot's cache rows
-        # (attention KV and recurrent states alike) return to their
-        # initial values — nothing of the previous occupant survives
-        self._reset_slot(slot)
-        upd = np.zeros((self.batch,), bool)
-        upd[slot] = True
-        upd = jnp.asarray(upd)
-        prompt = req.prompt if req.prompt else [BOS_TOKEN]
-        for t in prompt:
-            self._next_tok[slot, 0] = t
-            # snapshot with a SYNCHRONOUS numpy copy before handing the
-            # buffer to jax: jnp.array's copy is part of the async
-            # dispatch, so mutating _next_tok on the next iteration
-            # could still race with it (observed as run-to-run decode
-            # divergence on the CPU backend; the jnp.asarray aliasing
-            # was only the larger half of the same bug)
-            logits, self.state = self._step(
-                self.params, jnp.asarray(self._next_tok.copy()),
-                self.state, upd)
-        self._next_tok[slot, 0] = int(np.argmax(
-            np.asarray(logits[slot])))
+        with obs_trace.span("serve.dense.prefill", track="serve",
+                            uid=req.uid, slot=slot,
+                            tokens=len(req.prompt) or 1):
+            self.slots[slot] = req
+            # reuse: ring position restarts at 0 AND the slot's cache
+            # rows (attention KV and recurrent states alike) return to
+            # their initial values — nothing of the previous occupant
+            # survives
+            self._reset_slot(slot)
+            upd = np.zeros((self.batch,), bool)
+            upd[slot] = True
+            upd = jnp.asarray(upd)
+            prompt = req.prompt if req.prompt else [BOS_TOKEN]
+            for t in prompt:
+                self._next_tok[slot, 0] = t
+                # snapshot with a SYNCHRONOUS numpy copy before handing
+                # the buffer to jax: jnp.array's copy is part of the
+                # async dispatch, so mutating _next_tok on the next
+                # iteration could still race with it (observed as
+                # run-to-run decode divergence on the CPU backend; the
+                # jnp.asarray aliasing was only the larger half of the
+                # same bug)
+                logits, self.state = self._step(
+                    self.params, jnp.asarray(self._next_tok.copy()),
+                    self.state, upd)
+            self._next_tok[slot, 0] = int(np.argmax(
+                np.asarray(logits[slot])))
 
     def step(self) -> None:
         active = np.asarray([r is not None and not r.done
@@ -140,10 +146,13 @@ class DecodeServer:
         if not active.any():
             return
         t0 = time.perf_counter()
-        logits, self.state = self._step(
-            self.params, jnp.asarray(self._next_tok.copy()), self.state,
-            jnp.asarray(active))   # synchronous host copy, see prefill
-        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        with obs_trace.span("serve.dense.pass", track="serve",
+                            active=int(active.sum())):
+            logits, self.state = self._step(
+                self.params, jnp.asarray(self._next_tok.copy()),
+                self.state,
+                jnp.asarray(active))  # synchronous host copy, see prefill
+            nxt = np.asarray(jnp.argmax(logits, axis=-1))
         self.decode_seconds += time.perf_counter() - t0
         for i, req in enumerate(self.slots):
             if active[i]:

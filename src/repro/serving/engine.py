@@ -57,6 +57,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import Model, PagedDecodeState, map_cache_tree
+from repro.obs import metrics as obs_metrics
+from repro.obs import monitors as obs_monitors
+from repro.obs import trace as obs_trace
 from repro.serving.decode import BOS_TOKEN, Request
 from repro.serving.pages import PagePool, PrefixCache
 
@@ -277,17 +280,23 @@ class PagedEngine:
         self.decode_tokens = 0
 
     def latency_summary(self) -> dict:
+        """Latency/TTFT percentiles in serve-pass ticks.  The keys are
+        always present; fields whose source list is empty (no request
+        completed / no first token emitted yet) are ``None`` rather
+        than feeding ``np.percentile`` an empty array."""
         lats = [s.latency for s in self.stats.values()
                 if s.latency is not None]
         ttfts = [s.ttft for s in self.stats.values() if s.ttft is not None]
-        if not lats:
-            return {}
+
+        def pct(vals, q):
+            return float(np.percentile(vals, q)) if vals else None
+
         return {
             "requests": len(lats),
-            "latency_p50": float(np.percentile(lats, 50)),
-            "latency_p95": float(np.percentile(lats, 95)),
-            "ttft_p50": float(np.percentile(ttfts, 50)),
-            "ttft_p95": float(np.percentile(ttfts, 95)),
+            "latency_p50": pct(lats, 50),
+            "latency_p95": pct(lats, 95),
+            "ttft_p50": pct(ttfts, 50),
+            "ttft_p95": pct(ttfts, 95),
         }
 
     def metrics(self) -> dict:
@@ -400,6 +409,13 @@ class PagedEngine:
         return pages, owned, shared_len
 
     def _try_admit(self, slot: int, req: Request) -> bool:
+        with obs_trace.span("serve.admit", track="serve",
+                            uid=req.uid, slot=slot) as sp:
+            ok = self._try_admit_impl(slot, req)
+            sp.set(admitted=ok)
+        return ok
+
+    def _try_admit_impl(self, slot: int, req: Request) -> bool:
         toks = self._restart_tokens(req)
         T = len(toks)
         got = self._acquire_pages(toks)
@@ -439,18 +455,21 @@ class PagedEngine:
         self._lens[slot] = 0
         Tb = self._bucket_len(T) if self.bucket_sizes else T
         padded = toks + [BOS_TOKEN] * (Tb - T)
-        if Tb != T:
-            logits, dstate = self._prefill_fn(
-                self.params, {"tokens": jnp.asarray([padded], jnp.int32)},
+        with obs_trace.span("serve.prefill.bulk", track="serve",
+                            uid=req.uid, tokens=T, bucket=Tb):
+            if Tb != T:
+                logits, dstate = self._prefill_fn(
+                    self.params,
+                    {"tokens": jnp.asarray([padded], jnp.int32)},
+                    true_len=jnp.asarray(T, jnp.int32))
+            else:
+                logits, dstate = self._prefill_fn(
+                    self.params, {"tokens": jnp.asarray([padded], jnp.int32)})
+            self._caches = self._write_fn(
+                self._caches, dstate.caches, jnp.asarray(self._table[slot]),
+                jnp.asarray(shared_len), slot,
                 true_len=jnp.asarray(T, jnp.int32))
-        else:
-            logits, dstate = self._prefill_fn(
-                self.params, {"tokens": jnp.asarray([padded], jnp.int32)})
-        self._caches = self._write_fn(
-            self._caches, dstate.caches, jnp.asarray(self._table[slot]),
-            jnp.asarray(shared_len), slot,
-            true_len=jnp.asarray(T, jnp.int32))
-        self._next_tok[slot, 0] = int(np.argmax(np.asarray(logits[0])))
+            self._next_tok[slot, 0] = int(np.argmax(np.asarray(logits[0])))
         self._lens[slot] = T
         self.clock += 1
         self.prefill_forwards += 1
@@ -515,6 +534,9 @@ class PagedEngine:
 
     def _preempt(self, slot: int) -> None:
         req = self.slots[slot]
+        obs_trace.instant("serve.preempt", track="serve", uid=req.uid,
+                          slot=slot,
+                          mid_prefill=self._pending[slot] is not None)
         self.stats[req.uid].preemptions += 1
         self.pool.metrics.preemptions += 1
         if self._pending[slot] is not None:
@@ -585,6 +607,10 @@ class PagedEngine:
         tokens spread over the slots still ingesting (chunked mode).
         Returns False when nothing was active (after capacity
         preemptions)."""
+        with obs_trace.span("serve.pass", track="serve") as sp:
+            return self._step_impl(sp)
+
+    def _step_impl(self, sp) -> bool:
         # capacity pass for decoding slots (prefilling slots secured
         # every prompt page at admission), oldest admissions first so
         # they steal from the youngest (the preemption priority order)
@@ -648,6 +674,10 @@ class PagedEngine:
         else:
             self.mixed_passes += 1
             self.prefill_forwards += 1
+        sp.set(clock=self.clock, width=W, active=len(active_idx),
+               tokens=int(q_lens.sum()), pure_decode=pure_decode)
+        obs_trace.counter("pool.pages_live", self.pool.in_use,
+                          track="serve")
 
         if self._trace:
             logits_np = np.asarray(logits)
@@ -691,6 +721,16 @@ class PagedEngine:
 
     # -- driver -----------------------------------------------------------
     def run(self, requests: List[Request]) -> List[Request]:
+        with obs_trace.span("serve.run", track="serve",
+                            requests=len(requests)):
+            out = self._run_impl(requests)
+        obs_metrics.publish_serving(self.metrics())
+        if obs_trace.active():
+            obs_monitors.emit(
+                [obs_monitors.check_pool_conservation(self.pool)])
+        return out
+
+    def _run_impl(self, requests: List[Request]) -> List[Request]:
         t0 = time.perf_counter()
         for r in requests:
             self.enqueue(r)

@@ -15,6 +15,8 @@ import jax
 import numpy as np
 
 from repro.data.sharding import place_batch
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.training.checkpoints import save_checkpoint
 from repro.training.metrics import MetricsLogger
 from repro.training.trainer import Trainer, TrainState
@@ -44,11 +46,19 @@ def train(trainer: Trainer, state: TrainState,
     start = int(jax.device_get(state.step))
 
     batch = first
+    # per-step device scalars, summed once at the end: publishing the
+    # wire ledger must not force a host sync every step
+    bits_seen = []
+    parts_seen = []
+    metrics = None
     for i in range(num_steps):
         gstep = start + i
         placed = place_batch(batch, mesh, data_axes)
         key = round_train_key(seed, gstep)
-        state, metrics = step_fn(state, placed, key)
+        with obs_trace.span("train.step", track="train", step=gstep):
+            state, metrics = step_fn(state, placed, key)
+        bits_seen.append(metrics.bits_sent)
+        parts_seen.append(metrics.participants)
         if i % log_every == 0 or i == num_steps - 1:
             logger.log(gstep, loss=metrics.loss, grad_norm=metrics.grad_norm,
                        bits_sent=metrics.bits_sent,
@@ -58,4 +68,13 @@ def train(trainer: Trainer, state: TrainState,
             save_checkpoint(checkpoint_dir, state, gstep + 1)
         if i < num_steps - 1:
             batch = next(batches)
+    if metrics is not None:
+        reg = obs_metrics.get_registry()
+        reg.gauge("train.bits_sent").set(
+            float(np.sum(jax.device_get(bits_seen), dtype=np.float64)))
+        # one oracle call per participating node per round
+        reg.gauge("train.oracle_calls").set(
+            float(np.sum(jax.device_get(parts_seen), dtype=np.float64)))
+        reg.gauge("train.steps").set(float(num_steps))
+        reg.gauge("train.loss").set(float(jax.device_get(metrics.loss)))
     return state

@@ -1,22 +1,33 @@
-"""Lightweight metrics logging: stdout + CSV/JSONL sinks."""
+"""Lightweight metrics logging: stdout + JSONL sink.
+
+Since PR 8 this is a thin shim over the observability layer
+(``repro.obs.metrics``): the jsonl file goes through
+:class:`~repro.obs.metrics.JsonlSink` and every numeric field is
+mirrored into the metrics registry as a ``<name>.<field>`` gauge, so a
+``--metrics-out`` snapshot sees whatever was logged.  The public API
+and the on-disk jsonl / stdout formats are unchanged.
+"""
 from __future__ import annotations
 
-import json
 import os
 import time
 from typing import Any, Dict, Optional
 
+from repro.obs.metrics import JsonlSink, Registry, get_registry
+
 
 class MetricsLogger:
     def __init__(self, out_dir: Optional[str] = None, name: str = "train",
-                 print_every: int = 1):
+                 print_every: int = 1,
+                 registry: Optional[Registry] = None):
         self.out_dir = out_dir
+        self.name = name
         self.print_every = print_every
-        self._file = None
         self._t0 = time.time()
+        self._sink: Optional[JsonlSink] = None
+        self._registry = registry
         if out_dir:
-            os.makedirs(out_dir, exist_ok=True)
-            self._file = open(os.path.join(out_dir, f"{name}.jsonl"), "a")
+            self._sink = JsonlSink(os.path.join(out_dir, f"{name}.jsonl"))
 
     def log(self, step: int, **metrics: Any) -> None:
         rec: Dict[str, Any] = {"step": step,
@@ -26,14 +37,18 @@ class MetricsLogger:
                 rec[k] = float(v)
             except (TypeError, ValueError):
                 rec[k] = str(v)
-        if self._file:
-            self._file.write(json.dumps(rec) + "\n")
-            self._file.flush()
+        reg = self._registry if self._registry is not None else get_registry()
+        reg.gauge(f"{self.name}.step").set(float(step))
+        for k, v in rec.items():
+            if k != "step" and isinstance(v, float):
+                reg.gauge(f"{self.name}.{k}").set(v)
+        if self._sink is not None:
+            self._sink.write(rec)
         if step % self.print_every == 0:
             kv = " ".join(f"{k}={v:.5g}" if isinstance(v, float) else f"{k}={v}"
                           for k, v in rec.items() if k != "step")
             print(f"[step {step:>6d}] {kv}", flush=True)
 
     def close(self) -> None:
-        if self._file:
-            self._file.close()
+        if self._sink is not None:
+            self._sink.close()
