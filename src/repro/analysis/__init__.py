@@ -1,0 +1,58 @@
+"""repro.analysis — the jax/Pallas contract linter (DESIGN.md §14).
+
+Static analysis over this repo's own bug classes: stdlib-``ast`` only
+(the same zero-dependency discipline as :mod:`repro.obs`), one checker
+per class of bug a past PR actually fixed:
+
+==================  ==================================================
+checker id          contract
+==================  ==================================================
+host-sync           no device→host sync in per-step hot paths
+host-aliasing       numpy buffers handed to jax must be snapshotted
+prng-reuse          a key is consumed once, then re-derived
+pallas-contract     BlockSpec/grid/index-map arity + VMEM budgets
+recompile-hazard    nothing retraces per iteration
+bit-accounting      wire costs come from core/, not local literals
+suppression         ignore-comments carry an id and a reason
+==================  ==================================================
+
+Run ``python -m repro.analysis src/`` (see ``--help``); suppress a
+deliberate site with ``# repro: ignore[checker-id] -- reason``; park
+accepted debt in ``analysis_baseline.json`` with a justification.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.analysis import _astutil, findings  # noqa: F401  (import order)
+from repro.analysis.engine import (ARTIFACT_VERSION, Checker, ModuleCtx,
+                                   RunResult, TOOL_NAME, run)
+from repro.analysis.findings import (Baseline, BaselineError, Finding,
+                                     SuppressionSet)
+from repro.analysis.bits_provenance import BitsProvenanceChecker
+from repro.analysis.host_aliasing import HostAliasingChecker
+from repro.analysis.host_sync import HostSyncChecker
+from repro.analysis.pallas_contract import PallasContractChecker
+from repro.analysis.prng_reuse import PrngReuseChecker
+from repro.analysis.recompile import RecompileChecker
+
+
+def default_checkers() -> List[Checker]:
+    """All registered checkers, in stable id order."""
+    return sorted([
+        BitsProvenanceChecker(),
+        HostAliasingChecker(),
+        HostSyncChecker(),
+        PallasContractChecker(),
+        PrngReuseChecker(),
+        RecompileChecker(),
+    ], key=lambda c: c.id)
+
+
+CHECKER_IDS = [c.id for c in default_checkers()]
+
+__all__ = [
+    "ARTIFACT_VERSION", "Baseline", "BaselineError", "CHECKER_IDS",
+    "Checker", "Finding", "ModuleCtx", "RunResult", "SuppressionSet",
+    "TOOL_NAME", "default_checkers", "run",
+]

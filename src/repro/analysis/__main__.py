@@ -1,0 +1,95 @@
+"""CLI: ``python -m repro.analysis [paths...]``.
+
+Exit codes: 0 clean (or everything suppressed/baselined), 1 open
+findings, 2 usage/baseline errors.  ``--json`` writes the findings
+artifact that ``python -m repro.obs.validate --analysis`` schema-checks
+and CI archives.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List, Optional
+
+from repro.analysis import (Baseline, BaselineError, default_checkers,
+                            run)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="jax/Pallas contract linter for this repo's own "
+                    "bug classes (see DESIGN.md §14)")
+    parser.add_argument("paths", nargs="*", default=["src"],
+                        help="files/directories to scan (default: src)")
+    parser.add_argument("--baseline", default="analysis_baseline.json",
+                        help="committed debt ledger (default: "
+                             "%(default)s; missing file = empty)")
+    parser.add_argument("--json", dest="json_out", metavar="FILE",
+                        help="write the findings artifact (use '-' for "
+                             "stdout)")
+    parser.add_argument("--update-baseline", action="store_true",
+                        help="write current open findings to the "
+                             "baseline as a skeleton (justifications "
+                             "must then be filled in by hand)")
+    parser.add_argument("--select", action="append", metavar="ID",
+                        help="run only this checker id (repeatable)")
+    parser.add_argument("--list", action="store_true",
+                        help="list checker ids and exit")
+    args = parser.parse_args(argv)
+
+    checkers = default_checkers()
+    if args.list:
+        for c in checkers:
+            print(f"{c.id:18s} [{c.severity}] {c.description}")
+        return 0
+
+    if args.select:
+        known = {c.id for c in checkers}
+        bad = [s for s in args.select if s not in known]
+        if bad:
+            print(f"unknown checker id(s): {', '.join(bad)}",
+                  file=sys.stderr)
+            return 2
+
+    try:
+        baseline = Baseline.load(args.baseline)
+    except BaselineError as e:
+        print(f"baseline error: {e}", file=sys.stderr)
+        return 2
+
+    try:
+        result = run(args.paths, checkers, baseline=baseline,
+                     select=args.select)
+    except FileNotFoundError as e:
+        print(f"no such path: {e}", file=sys.stderr)
+        return 2
+
+    if args.update_baseline:
+        Baseline.write(args.baseline, result.all_findings)
+        print(f"wrote {len(result.all_findings)} entr"
+              f"{'y' if len(result.all_findings) == 1 else 'ies'} to "
+              f"{args.baseline}; fill in each 'justification'")
+        return 0
+
+    if args.json_out:
+        doc = json.dumps(result.to_json(args.paths), indent=2)
+        if args.json_out == "-":
+            print(doc)
+        else:
+            with open(args.json_out, "w") as fh:
+                fh.write(doc + "\n")
+
+    for f in result.all_findings:
+        print(f.render())
+    s = result.to_json(args.paths)["summary"]
+    print(f"{s['files']} files: {s['open']} open "
+          f"({s['errors']} error / {s['warnings']} warn), "
+          f"{s['suppressed']} suppressed, {s['baselined']} baselined",
+          file=sys.stderr)
+    return 1 if result.all_findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

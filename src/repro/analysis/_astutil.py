@@ -1,0 +1,305 @@
+"""Shared AST machinery for the contract linter (DESIGN.md §14).
+
+Everything here is stdlib-``ast`` only, mirroring ``repro.obs``'s
+zero-dependency discipline.  Three layers:
+
+* :class:`ImportMap` — canonicalizes dotted references through the
+  module's import aliases, so a checker matches ``jax.numpy.asarray``
+  whether the file spelled it ``jnp.asarray``, ``jax.numpy.asarray``
+  or ``from jax import numpy``.  This is what lets the checkers be
+  written against *semantic* names instead of surface spellings.
+* :class:`FunctionIndex` + :func:`set_parents` — function/method
+  discovery with qualified names and upward links, the skeleton every
+  scope-based checker walks.
+* :func:`safe_eval` + :func:`module_constants` — a tiny static
+  evaluator for the constant arithmetic the ``pallas-contract``
+  checker needs (tile shapes like ``(block_rows, LANES)``, budgets
+  like ``4 << 20``).  Anything it cannot prove evaluates to
+  :data:`UNKNOWN` rather than guessing.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Any, Dict, Iterator, List, Optional, Tuple, Union
+
+FunctionNode = Union[ast.FunctionDef, ast.AsyncFunctionDef]
+
+
+class _Unknown:
+    """Sentinel for statically-unresolvable values (repr aids messages)."""
+
+    _instance: Optional["_Unknown"] = None
+
+    def __new__(cls):
+        if cls._instance is None:
+            cls._instance = super().__new__(cls)
+        return cls._instance
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return "<?>"
+
+
+UNKNOWN = _Unknown()
+
+
+def is_known(value: Any) -> bool:
+    return value is not UNKNOWN
+
+
+# ----------------------------------------------------------------------
+# Parent links
+# ----------------------------------------------------------------------
+
+def set_parents(tree: ast.AST) -> None:
+    """Attach ``._parent`` to every node (idempotent)."""
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            child._parent = node  # type: ignore[attr-defined]
+
+
+def parent(node: ast.AST) -> Optional[ast.AST]:
+    return getattr(node, "_parent", None)
+
+
+def ancestors(node: ast.AST) -> Iterator[ast.AST]:
+    cur = parent(node)
+    while cur is not None:
+        yield cur
+        cur = parent(cur)
+
+
+def enclosing_function(node: ast.AST) -> Optional[FunctionNode]:
+    for anc in ancestors(node):
+        if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return anc
+    return None
+
+
+def enclosing_loop(node: ast.AST,
+                   within: Optional[ast.AST] = None
+                   ) -> Optional[Union[ast.For, ast.While]]:
+    """Nearest For/While ancestor, stopping at ``within`` (exclusive) —
+    pass the enclosing function so loops outside it don't count."""
+    for anc in ancestors(node):
+        if anc is within:
+            return None
+        if isinstance(anc, (ast.For, ast.While)):
+            return anc
+        if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef,
+                            ast.Lambda)):
+            return None
+    return None
+
+
+# ----------------------------------------------------------------------
+# Import canonicalization
+# ----------------------------------------------------------------------
+
+class ImportMap:
+    """Maps local aliases to canonical dotted module paths."""
+
+    def __init__(self, tree: ast.Module):
+        self.aliases: Dict[str, str] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    local = a.asname or a.name.split(".")[0]
+                    target = a.name if a.asname else a.name.split(".")[0]
+                    self.aliases[local] = target
+            elif isinstance(node, ast.ImportFrom) and node.module \
+                    and node.level == 0:
+                for a in node.names:
+                    if a.name == "*":
+                        continue
+                    local = a.asname or a.name
+                    self.aliases[local] = f"{node.module}.{a.name}"
+
+    def dotted(self, node: ast.AST) -> Optional[str]:
+        """Raw dotted path of a Name/Attribute chain (no alias expansion);
+        ``self.foo`` stays ``self.foo``; anything else (calls, subscripts)
+        is None."""
+        parts: List[str] = []
+        cur = node
+        while isinstance(cur, ast.Attribute):
+            parts.append(cur.attr)
+            cur = cur.value
+        if isinstance(cur, ast.Name):
+            parts.append(cur.id)
+            return ".".join(reversed(parts))
+        return None
+
+    def canonical(self, node: ast.AST) -> Optional[str]:
+        """Alias-expanded dotted path: with ``import jax.numpy as jnp``,
+        ``jnp.asarray`` -> ``jax.numpy.asarray``."""
+        raw = self.dotted(node)
+        if raw is None:
+            return None
+        head, _, rest = raw.partition(".")
+        head = self.aliases.get(head, head)
+        return f"{head}.{rest}" if rest else head
+
+    def call_name(self, call: ast.Call) -> Optional[str]:
+        return self.canonical(call.func)
+
+
+# ----------------------------------------------------------------------
+# Function index
+# ----------------------------------------------------------------------
+
+class FunctionIndex:
+    """All functions/methods of a module with dotted qualnames
+    (``Class.method``, ``outer.<locals>.inner``)."""
+
+    def __init__(self, tree: ast.Module):
+        self.by_qualname: Dict[str, FunctionNode] = {}
+        self.qualname_of: Dict[FunctionNode, str] = {}
+        self.class_of: Dict[FunctionNode, Optional[str]] = {}
+        self._walk(tree.body, prefix="", cls=None)
+
+    def _walk(self, body: List[ast.stmt], prefix: str,
+              cls: Optional[str]) -> None:
+        for node in body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                qn = f"{prefix}{node.name}"
+                self.by_qualname[qn] = node
+                self.qualname_of[node] = qn
+                self.class_of[node] = cls
+                self._walk(node.body, prefix=f"{qn}.<locals>.", cls=cls)
+            elif isinstance(node, ast.ClassDef):
+                self._walk(node.body, prefix=f"{node.name}.",
+                           cls=node.name)
+
+    def functions(self) -> Iterator[Tuple[str, FunctionNode]]:
+        yield from self.by_qualname.items()
+
+    def methods_of(self, cls: str) -> Iterator[Tuple[str, FunctionNode]]:
+        for qn, fn in self.by_qualname.items():
+            if self.class_of.get(fn) == cls:
+                yield qn, fn
+
+
+# ----------------------------------------------------------------------
+# Static evaluation
+# ----------------------------------------------------------------------
+
+_BINOPS = {
+    ast.Add: lambda a, b: a + b,
+    ast.Sub: lambda a, b: a - b,
+    ast.Mult: lambda a, b: a * b,
+    ast.FloorDiv: lambda a, b: a // b,
+    ast.Div: lambda a, b: a / b,
+    ast.Mod: lambda a, b: a % b,
+    ast.Pow: lambda a, b: a ** b,
+    ast.LShift: lambda a, b: a << b,
+    ast.RShift: lambda a, b: a >> b,
+}
+
+
+def safe_eval(node: ast.AST, env: Dict[str, Any]) -> Any:
+    """Evaluate constant arithmetic / tuples against ``env``; returns
+    :data:`UNKNOWN` where any leaf is unresolvable.  Tuples/lists keep
+    their LENGTH even when elements are unknown — arity checks only
+    need structure, footprints need values."""
+    if isinstance(node, ast.Constant):
+        if isinstance(node.value, bool) or node.value is None:
+            return node.value
+        if isinstance(node.value, (int, float)):
+            return node.value
+        if isinstance(node.value, str):
+            return node.value
+        return UNKNOWN
+    if isinstance(node, ast.Name):
+        return env.get(node.id, UNKNOWN)
+    if isinstance(node, ast.Tuple):
+        return tuple(safe_eval(e, env) for e in node.elts)
+    if isinstance(node, ast.List):
+        return [safe_eval(e, env) for e in node.elts]
+    if isinstance(node, ast.BinOp) and type(node.op) in _BINOPS:
+        left = safe_eval(node.left, env)
+        right = safe_eval(node.right, env)
+        # list * N repeats structure even with unknown elements
+        if isinstance(node.op, ast.Mult):
+            if isinstance(left, list) and isinstance(right, int):
+                return left * right
+            if isinstance(right, list) and isinstance(left, int):
+                return right * left
+        if not is_known(left) or not is_known(right):
+            return UNKNOWN
+        try:
+            return _BINOPS[type(node.op)](left, right)
+        except Exception:
+            return UNKNOWN
+    if isinstance(node, ast.UnaryOp):
+        val = safe_eval(node.operand, env)
+        if not is_known(val):
+            return UNKNOWN
+        if isinstance(node.op, ast.USub):
+            return -val
+        if isinstance(node.op, ast.UAdd):
+            return +val
+        return UNKNOWN
+    if isinstance(node, ast.Call):
+        fn = node.func
+        if isinstance(fn, ast.Name) and fn.id in ("min", "max", "len"):
+            args = [safe_eval(a, env) for a in node.args]
+            if fn.id == "len" and len(args) == 1 \
+                    and isinstance(args[0], (tuple, list)):
+                return len(args[0])
+            if all(is_known(a) and not isinstance(a, (tuple, list))
+                   for a in args) and args:
+                try:
+                    return (min if fn.id == "min" else max)(args)
+                except Exception:
+                    return UNKNOWN
+        return UNKNOWN
+    return UNKNOWN
+
+
+def module_constants(tree: ast.Module) -> Dict[str, Any]:
+    """Top-level ``NAME = <const expr>`` bindings, evaluated in order."""
+    env: Dict[str, Any] = {}
+    for node in tree.body:
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name):
+            val = safe_eval(node.value, env)
+            if is_known(val):
+                env[node.targets[0].id] = val
+        elif isinstance(node, ast.AnnAssign) and node.value is not None \
+                and isinstance(node.target, ast.Name):
+            val = safe_eval(node.value, env)
+            if is_known(val):
+                env[node.target.id] = val
+    return env
+
+
+def param_names(fn: FunctionNode) -> List[str]:
+    args = fn.args
+    names = [a.arg for a in args.posonlyargs + args.args + args.kwonlyargs]
+    if args.vararg:
+        names.append(args.vararg.arg)
+    if args.kwarg:
+        names.append(args.kwarg.arg)
+    return names
+
+
+def param_defaults(fn: FunctionNode, env: Dict[str, Any]) -> Dict[str, Any]:
+    """Statically-evaluable parameter defaults (the pallas checker uses
+    these as the footprint's representative values)."""
+    out: Dict[str, Any] = {}
+    args = fn.args
+    pos = args.posonlyargs + args.args
+    for name_node, default in zip(pos[len(pos) - len(args.defaults):],
+                                  args.defaults):
+        val = safe_eval(default, env)
+        if is_known(val):
+            out[name_node.arg] = val
+    for name_node, default in zip(args.kwonlyargs, args.kw_defaults):
+        if default is not None:
+            val = safe_eval(default, env)
+            if is_known(val):
+                out[name_node.arg] = val
+    return out
+
+
+def keyword_map(call: ast.Call) -> Dict[str, ast.expr]:
+    return {kw.arg: kw.value for kw in call.keywords if kw.arg}

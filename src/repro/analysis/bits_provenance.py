@@ -1,0 +1,145 @@
+"""``bit-accounting`` — literal bit arithmetic outside ``core/``.
+
+The paper's headline claim is the communication-complexity curve, so
+every reported bit must trace to one place: the wire-format model in
+``repro.core``.  PR 6's fleet and PR 7's serving layer both grew local
+``32 * nnz``-style math that silently disagreed with the core model
+until reconciled; the rule now is *provenance* — modules outside
+``core/`` call the core helpers (``payload_bits``-style) instead of
+re-deriving widths.
+
+Fires on (a) arithmetic expressions that contain a bit-width literal
+(8/16/32/64) in a bits-flavored context — assigned to / augmenting a
+``*bits*`` name, passed to a ``*bits*`` parameter, or returned from a
+``*bits*`` function — and (b) bare width literals bound to ``*bits*``
+names (constants like ``GROUP_HEADER_BITS = 32.0`` or parameter
+defaults like ``value_bits=32.0``): a hard-coded width IS a local wire
+model, however small.  Pure core modules are exempt; so are
+shift-by-width index computations (``x << 5``) with no bits-named
+context.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Iterable, Optional
+
+from repro.analysis import _astutil
+from repro.analysis.engine import Checker, ModuleCtx
+from repro.analysis.findings import Finding
+
+BITS_RE = re.compile(r"(^|_)bits?($|_)", re.IGNORECASE)
+_WIDTH_LITERALS = {8, 16, 32, 64, 8.0, 16.0, 32.0, 64.0}
+
+
+def _has_width_literal(expr: ast.AST) -> bool:
+    for node in ast.walk(expr):
+        if isinstance(node, ast.Constant) \
+                and isinstance(node.value, (int, float)) \
+                and not isinstance(node.value, bool) \
+                and node.value in _WIDTH_LITERALS:
+            # a width literal used as a shift amount is indexing math,
+            # not bit accounting
+            p = _astutil.parent(node)
+            if isinstance(p, ast.BinOp) \
+                    and isinstance(p.op, (ast.LShift, ast.RShift)) \
+                    and p.right is node:
+                continue
+            return True
+    return False
+
+
+def _is_width_literal(expr: Optional[ast.AST]) -> bool:
+    return (isinstance(expr, ast.Constant)
+            and isinstance(expr.value, (int, float))
+            and not isinstance(expr.value, bool)
+            and expr.value in _WIDTH_LITERALS)
+
+
+def _is_arith(expr: ast.AST) -> bool:
+    return isinstance(expr, ast.BinOp) and isinstance(
+        expr.op, (ast.Add, ast.Sub, ast.Mult, ast.Div, ast.FloorDiv))
+
+
+class BitsProvenanceChecker(Checker):
+    id = "bit-accounting"
+    severity = "warn"
+    description = ("literal bit-width arithmetic outside core/ — wire "
+                   "costs must come from the core accounting helpers")
+
+    def check(self, mod: ModuleCtx) -> Iterable[Finding]:
+        if mod.in_core():
+            return
+        for node in ast.walk(mod.tree):
+            ctx = self._bits_context(mod, node)
+            if ctx is None:
+                continue
+            expr = self._value_expr(node)
+            if expr is None:
+                continue
+            if _is_arith(expr) and _has_width_literal(expr):
+                yield mod.finding(
+                    self.id, self.severity, expr,
+                    f"literal bit-width arithmetic {ctx} outside "
+                    "core/; derive wire costs from the core "
+                    "accounting helpers (repro.core) so the "
+                    "complexity curves stay single-sourced")
+            elif _is_width_literal(expr):
+                yield mod.finding(
+                    self.id, self.severity, expr,
+                    f"bit-width literal {ctx} outside core/; take the "
+                    "width from the core wire model (repro.core) "
+                    "instead of re-declaring it")
+        yield from self._check_param_defaults(mod)
+
+    def _check_param_defaults(self, mod: ModuleCtx) -> Iterable[Finding]:
+        for _qn, fn in mod.functions.functions():
+            args = fn.args
+            pos = args.posonlyargs + args.args
+            pairs = list(zip(pos[len(pos) - len(args.defaults):],
+                             args.defaults))
+            pairs += [(a, d) for a, d in zip(args.kwonlyargs,
+                                             args.kw_defaults)
+                      if d is not None]
+            for arg, default in pairs:
+                if BITS_RE.search(arg.arg) \
+                        and _is_width_literal(default):
+                    yield mod.finding(
+                        self.id, self.severity, default,
+                        f"bit-width literal default on parameter "
+                        f"'{arg.arg}' of '{fn.name}' outside core/; "
+                        "default it to the core wire model's width "
+                        "constant instead")
+
+    @staticmethod
+    def _value_expr(node: ast.AST) -> Optional[ast.expr]:
+        if isinstance(node, (ast.Assign, ast.AugAssign, ast.Return)):
+            return node.value
+        if isinstance(node, ast.AnnAssign):
+            return node.value
+        if isinstance(node, ast.keyword):
+            return node.value
+        return None
+
+    def _bits_context(self, mod: ModuleCtx,
+                      node: ast.AST) -> Optional[str]:
+        """A human-readable description of the bits-flavored context, or
+        None when the node is not one."""
+        if isinstance(node, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+            targets = (node.targets if isinstance(node, ast.Assign)
+                       else [node.target])
+            for tgt in targets:
+                dotted = mod.imports.dotted(tgt)
+                name = (dotted or "").rsplit(".", 1)[-1]
+                if BITS_RE.search(name):
+                    return f"assigned to '{dotted}'"
+            return None
+        if isinstance(node, ast.keyword) and node.arg \
+                and BITS_RE.search(node.arg):
+            return f"passed to parameter '{node.arg}'"
+        if isinstance(node, ast.Return):
+            fn = _astutil.enclosing_function(node)
+            if fn is not None and BITS_RE.search(fn.name):
+                return f"returned from '{fn.name}'"
+            return None
+        return None

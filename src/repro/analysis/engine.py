@@ -1,0 +1,194 @@
+"""Findings engine: file discovery, per-module context, checker runs.
+
+The engine parses each file once into a :class:`ModuleCtx` (AST with
+parent links, import canonicalization, module constants, function
+index) and hands it to every registered checker.  Suppressions and the
+baseline are applied *after* collection so the JSON artifact can
+report what was silenced and why-shaped metadata stays auditable.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import time
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from repro.analysis import _astutil
+from repro.analysis.findings import (Baseline, Finding, SuppressionSet)
+
+TOOL_NAME = "repro.analysis"
+ARTIFACT_VERSION = 1
+
+
+@dataclasses.dataclass
+class ModuleCtx:
+    """Everything a checker needs about one parsed file."""
+    path: str                      # filesystem path as given
+    relpath: str                   # repo-relative posix path (finding key)
+    source: str
+    lines: List[str]
+    tree: ast.Module
+    imports: _astutil.ImportMap
+    constants: Dict[str, object]
+    functions: _astutil.FunctionIndex
+
+    @classmethod
+    def parse(cls, path: str, relpath: str,
+              source: str) -> "ModuleCtx":
+        tree = ast.parse(source, filename=path)
+        _astutil.set_parents(tree)
+        return cls(path=path, relpath=relpath, source=source,
+                   lines=source.splitlines(), tree=tree,
+                   imports=_astutil.ImportMap(tree),
+                   constants=_astutil.module_constants(tree),
+                   functions=_astutil.FunctionIndex(tree))
+
+    def finding(self, checker: str, severity: str, node: ast.AST,
+                message: str) -> Finding:
+        return Finding(checker=checker, path=self.relpath,
+                       line=getattr(node, "lineno", 1),
+                       col=getattr(node, "col_offset", 0),
+                       severity=severity, message=message)
+
+    def in_core(self) -> bool:
+        return "/core/" in self.relpath or self.relpath.startswith("core/")
+
+
+class Checker:
+    """Base class: subclasses set ``id``/``severity`` and implement
+    :meth:`check` yielding findings for one module."""
+
+    id: str = ""
+    severity: str = "error"
+    description: str = ""
+
+    def check(self, mod: ModuleCtx) -> Iterable[Finding]:  # pragma: no cover
+        raise NotImplementedError
+
+
+def _repo_relpath(path: str, roots: Sequence[str]) -> str:
+    """Path relative to the repo root when recognizable (the component
+    before ``src``), else relative to cwd, posix separators."""
+    norm = os.path.normpath(os.path.abspath(path))
+    parts = norm.split(os.sep)
+    for anchor in ("src", "tests", "benchmarks", "examples"):
+        if anchor in parts:
+            idx = parts.index(anchor)
+            return "/".join(parts[idx:])
+    rel = os.path.relpath(norm)
+    return rel.replace(os.sep, "/")
+
+
+def discover_files(paths: Sequence[str]) -> List[str]:
+    out: List[str] = []
+    for p in paths:
+        if os.path.isfile(p):
+            out.append(p)
+        elif os.path.isdir(p):
+            for root, dirs, files in os.walk(p):
+                dirs[:] = sorted(d for d in dirs
+                                 if d != "__pycache__"
+                                 and not d.startswith("."))
+                for f in sorted(files):
+                    if f.endswith(".py"):
+                        out.append(os.path.join(root, f))
+        else:
+            raise FileNotFoundError(p)
+    return out
+
+
+@dataclasses.dataclass
+class RunResult:
+    findings: List[Finding]            # actionable (not suppressed/baselined)
+    suppressed: List[Finding]
+    baselined: List[Finding]
+    files: int
+    parse_errors: List[Finding]
+
+    @property
+    def all_findings(self) -> List[Finding]:
+        return self.findings + self.parse_errors
+
+    def to_json(self, paths: Sequence[str]) -> Dict[str, object]:
+        def dump(fs: List[Finding], status: str) -> List[dict]:
+            return [dict(f.to_json(), status=status) for f in fs]
+        findings = (dump(self.all_findings, "open")
+                    + dump(self.suppressed, "suppressed")
+                    + dump(self.baselined, "baselined"))
+        errors = sum(1 for f in self.all_findings
+                     if f.severity == "error")
+        return {
+            "ts": time.time(),
+            "tool": TOOL_NAME,
+            "version": ARTIFACT_VERSION,
+            "paths": list(paths),
+            "findings": findings,
+            "summary": {
+                "files": self.files,
+                "open": len(self.all_findings),
+                "errors": errors,
+                "warnings": len(self.all_findings) - errors,
+                "suppressed": len(self.suppressed),
+                "baselined": len(self.baselined),
+            },
+        }
+
+
+def run(paths: Sequence[str], checkers: Sequence[Checker],
+        baseline: Optional[Baseline] = None,
+        select: Optional[Sequence[str]] = None) -> RunResult:
+    baseline = baseline or Baseline([])
+    active = [c for c in checkers
+              if select is None or c.id in select]
+    known_ids = [c.id for c in checkers] + ["suppression"]
+
+    collected: List[Finding] = []
+    parse_errors: List[Finding] = []
+    sup_by_path: Dict[str, SuppressionSet] = {}
+    files = discover_files(paths)
+    for path in files:
+        relpath = _repo_relpath(path, paths)
+        try:
+            with open(path, encoding="utf-8") as f:
+                source = f.read()
+        except (OSError, UnicodeDecodeError) as e:
+            parse_errors.append(Finding(
+                "parse", relpath, 1, 0, "error", f"unreadable: {e}"))
+            continue
+        sups = SuppressionSet(source)
+        sup_by_path[relpath] = sups
+        for row, msg in sups.malformed:
+            collected.append(Finding("suppression", relpath, row, 0,
+                                     "error", msg))
+        for row, cid in sups.unknown_ids(known_ids):
+            collected.append(Finding(
+                "suppression", relpath, row, 0, "error",
+                f"unknown checker id {cid!r} in suppression"))
+        try:
+            mod = ModuleCtx.parse(path, relpath, source)
+        except SyntaxError as e:
+            parse_errors.append(Finding(
+                "parse", relpath, e.lineno or 1, 0, "error",
+                f"syntax error: {e.msg}"))
+            continue
+        for checker in active:
+            collected.extend(checker.check(mod))
+
+    open_f: List[Finding] = []
+    suppressed: List[Finding] = []
+    baselined: List[Finding] = []
+    for f in sorted(collected, key=lambda f: (f.path, f.line, f.col,
+                                              f.checker)):
+        sups = sup_by_path.get(f.path)
+        # suppression-hygiene findings cannot suppress themselves
+        if f.checker != "suppression" and sups is not None \
+                and sups.matches(f):
+            suppressed.append(f)
+        elif baseline.contains(f):
+            baselined.append(f)
+        else:
+            open_f.append(f)
+    return RunResult(findings=open_f, suppressed=suppressed,
+                     baselined=baselined, files=len(files),
+                     parse_errors=parse_errors)

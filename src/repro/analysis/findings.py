@@ -1,0 +1,184 @@
+"""Findings, inline suppressions, and the committed baseline.
+
+A finding is one violated contract at one site.  Two escape hatches,
+both requiring a *written justification*:
+
+* inline — ``# repro: ignore[checker-id] -- reason`` on the flagged
+  line (or on its own line directly above).  A suppression with no
+  ``-- reason`` tail, or naming an unknown checker, is itself a
+  finding (checker id ``suppression``): the syntax exists to record
+  intent, not to silence output.
+* baseline — entries in ``analysis_baseline.json`` keyed by
+  ``(checker, path, message)`` (line-agnostic, so unrelated edits
+  above a known finding don't churn the file).  Every entry must carry
+  a non-empty ``justification``; the loader refuses the file otherwise.
+"""
+from __future__ import annotations
+
+import dataclasses
+import io
+import json
+import re
+import tokenize
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+SEVERITIES = ("error", "warn")
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*repro:\s*ignore\[(?P<ids>[^\]]*)\]"
+    r"(?:\s*--\s*(?P<reason>.*\S))?")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    checker: str
+    path: str          # repo-relative, posix separators
+    line: int
+    col: int
+    severity: str      # "error" | "warn"
+    message: str
+
+    def key(self) -> Tuple[str, str, str]:
+        """Line-agnostic identity used by the baseline."""
+        return (self.checker, self.path, self.message)
+
+    def render(self) -> str:
+        return (f"{self.path}:{self.line}:{self.col}: "
+                f"{self.severity}[{self.checker}] {self.message}")
+
+    def to_json(self) -> Dict[str, object]:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class Suppression:
+    line: int          # first code line the suppression applies to
+    end_line: int      # last line (standalone form covers the whole
+                       # logical statement it precedes)
+    comment_line: int  # where the comment physically lives
+    checkers: Tuple[str, ...]
+    reason: Optional[str]
+
+
+class SuppressionSet:
+    """Per-file suppression index parsed from comments."""
+
+    def __init__(self, source: str):
+        self.suppressions: List[Suppression] = []
+        self.malformed: List[Tuple[int, str]] = []
+        comments: List[Tuple[int, bool, str]] = []  # (row, inline, text)
+        try:
+            tokens = list(tokenize.generate_tokens(
+                io.StringIO(source).readline))
+        except (tokenize.TokenError, IndentationError, SyntaxError):
+            return
+        # logical statement spans: rows of code tokens between NEWLINE
+        # tokens, so a standalone suppression covers a multi-line call
+        spans: List[Tuple[int, int]] = []
+        cur: List[int] = []
+        for tok in tokens:
+            if tok.type == tokenize.COMMENT:
+                inline = tok.start[1] > 0 and bool(
+                    source.splitlines()[tok.start[0] - 1]
+                    [:tok.start[1]].strip())
+                comments.append((tok.start[0], inline, tok.string))
+            elif tok.type == tokenize.NEWLINE:
+                if cur:
+                    spans.append((min(cur), max(cur)))
+                    cur = []
+            elif tok.type not in (tokenize.NL, tokenize.INDENT,
+                                  tokenize.DEDENT, tokenize.ENDMARKER):
+                cur.extend(range(tok.start[0], tok.end[0] + 1))
+        if cur:
+            spans.append((min(cur), max(cur)))
+        for row, inline, text in comments:
+            m = _SUPPRESS_RE.search(text)
+            if not m:
+                continue
+            ids = tuple(s.strip() for s in m.group("ids").split(",")
+                        if s.strip())
+            reason = m.group("reason")
+            if inline:
+                target = (row, row)
+            else:
+                target = next(((a, b) for a, b in spans if a > row),
+                              (row, row))
+            if not ids or reason is None or not reason.strip():
+                self.malformed.append(
+                    (row, "suppression needs [checker-id] and a "
+                          "'-- reason' justification"))
+                continue
+            self.suppressions.append(Suppression(
+                line=target[0], end_line=target[1], comment_line=row,
+                checkers=ids, reason=reason.strip()))
+
+    def matches(self, finding: Finding) -> bool:
+        for sup in self.suppressions:
+            if sup.line <= finding.line <= sup.end_line and (
+                    finding.checker in sup.checkers
+                    or "all" in sup.checkers):
+                return True
+        return False
+
+    def unknown_ids(self, known: Iterable[str]) -> List[Tuple[int, str]]:
+        known_set = set(known) | {"all"}
+        out = []
+        for sup in self.suppressions:
+            for cid in sup.checkers:
+                if cid not in known_set:
+                    out.append((sup.comment_line, cid))
+        return out
+
+
+class BaselineError(ValueError):
+    pass
+
+
+class Baseline:
+    """The committed debt ledger: known findings with justifications."""
+
+    def __init__(self, entries: Optional[List[dict]] = None):
+        self.entries = entries or []
+        self._keys: Set[Tuple[str, str, str]] = set()
+        for i, e in enumerate(self.entries):
+            for field in ("checker", "path", "message", "justification"):
+                if not isinstance(e.get(field), str):
+                    raise BaselineError(
+                        f"baseline entry {i}: missing/invalid "
+                        f"'{field}'")
+            if not e["justification"].strip():
+                raise BaselineError(
+                    f"baseline entry {i} ({e['checker']} at "
+                    f"{e['path']}): empty justification — every "
+                    "baselined finding must say WHY it is accepted")
+            self._keys.add((e["checker"], e["path"], e["message"]))
+
+    @classmethod
+    def load(cls, path: str) -> "Baseline":
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except FileNotFoundError:
+            return cls([])
+        except ValueError as e:
+            raise BaselineError(f"{path}: not valid JSON: {e}")
+        if isinstance(doc, dict):
+            doc = doc.get("entries", [])
+        if not isinstance(doc, list):
+            raise BaselineError(f"{path}: expected a list of entries")
+        return cls(doc)
+
+    def contains(self, finding: Finding) -> bool:
+        return finding.key() in self._keys
+
+    @staticmethod
+    def write(path: str, findings: List[Finding]) -> None:
+        """Emit a baseline skeleton for the given findings; the empty
+        justification fields are deliberate — the loader rejects them
+        until a human writes the reasons in."""
+        entries = [{"checker": f.checker, "path": f.path,
+                    "message": f.message, "justification": ""}
+                   for f in findings]
+        with open(path, "w") as fh:
+            json.dump(entries, fh, indent=2)
+            fh.write("\n")

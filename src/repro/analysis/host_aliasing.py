@@ -1,0 +1,192 @@
+"""``host-aliasing`` — zero-copy jax conversions of live numpy buffers.
+
+The PR 4/5 race class: ``jnp.asarray(buf)`` may alias ``buf``'s memory
+on the CPU backend, and the conversion happens as part of jax's *async*
+dispatch — mutating ``buf`` after handing it over corrupts the
+still-in-flight computation (observed as nondeterministic greedy
+decodes).  The repo-wide discipline is the synchronous-copy idiom:
+``jnp.asarray(buf.copy())`` (or ``np.array(buf)``) before the handoff.
+
+A conversion site fires when the buffer it captures is *provably live*:
+
+* a local that is subscript-mutated at a later statement in the same
+  function, or mutated anywhere inside the same loop body as the
+  conversion (the next iteration races with this dispatch);
+* a ``self.X`` attribute that any method of the class subscript-mutates
+  — cross-method ordering is unknowable statically, so attribute
+  buffers must be copied at the conversion site.
+
+Wrapping the argument in ``.copy()`` / ``np.array(...)`` /
+``np.ascontiguousarray(...)`` / ``.astype(...)`` exempts the site
+(each produces an owned buffer).  Conversions of call results
+(``jnp.asarray(store.gather(...))``) are fresh by construction and
+never fire.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from repro.analysis import _astutil
+from repro.analysis.engine import Checker, ModuleCtx
+from repro.analysis.findings import Finding
+
+CONVERTERS = {"jax.numpy.asarray"}
+COPY_CALLS = {"numpy.array", "numpy.ascontiguousarray", "numpy.copy"}
+COPY_METHODS = {"copy", "astype", "tolist"}
+INPLACE_METHODS = {"fill", "sort", "partition", "put", "resize",
+                   "setfield", "itemset"}
+
+
+def _buffer_of(mod: ModuleCtx, node: ast.AST) -> Optional[str]:
+    """The dotted base buffer a conversion argument aliases: a Name, a
+    ``self.X`` attribute, or a basic-slice view of either
+    (``buf[i]`` / ``self._table[:, :W]`` are views of the base)."""
+    while isinstance(node, ast.Subscript):
+        node = node.value
+    if isinstance(node, (ast.Name, ast.Attribute)):
+        return mod.imports.dotted(node)
+    return None
+
+
+def _is_copied(mod: ModuleCtx, arg: ast.AST) -> bool:
+    if isinstance(arg, ast.Call):
+        name = mod.imports.call_name(arg)
+        if name in COPY_CALLS:
+            return True
+        if isinstance(arg.func, ast.Attribute) \
+                and arg.func.attr in COPY_METHODS:
+            return True
+    return False
+
+
+class HostAliasingChecker(Checker):
+    id = "host-aliasing"
+    severity = "error"
+    description = ("jnp.asarray over a numpy buffer that is later "
+                   "mutated (async-dispatch aliasing race); require "
+                   "the synchronous-copy idiom")
+
+    def check(self, mod: ModuleCtx) -> Iterable[Finding]:
+        attr_mutations = self._attribute_mutations(mod)
+        for _qn, fn in mod.functions.functions():
+            yield from self._check_function(mod, fn, attr_mutations)
+
+    def _attribute_mutations(self, mod: ModuleCtx
+                             ) -> Dict[Optional[str], Set[str]]:
+        """Per class: the ``self.X`` buffers any method subscript-mutates
+        or mutates in place."""
+        out: Dict[Optional[str], Set[str]] = {}
+        for _qn, fn in mod.functions.functions():
+            cls = mod.functions.class_of.get(fn)
+            for target in self._mutations(mod, fn):
+                if target.startswith("self."):
+                    out.setdefault(cls, set()).add(target)
+        return out
+
+    def _mutations(self, mod: ModuleCtx,
+                   fn: _astutil.FunctionNode) -> List[str]:
+        out = []
+        for node, name in self._mutation_sites(mod, fn):
+            out.append(name)
+        return out
+
+    def _mutation_sites(self, mod: ModuleCtx, fn: _astutil.FunctionNode
+                        ) -> List[Tuple[ast.AST, str]]:
+        sites: List[Tuple[ast.AST, str]] = []
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and node is not fn:
+                continue
+            if isinstance(node, (ast.Assign, ast.AugAssign)):
+                targets = (node.targets if isinstance(node, ast.Assign)
+                           else [node.target])
+                for tgt in targets:
+                    leaves = tgt.elts if isinstance(
+                        tgt, (ast.Tuple, ast.List)) else [tgt]
+                    for leaf in leaves:
+                        if isinstance(leaf, ast.Subscript):
+                            base = _buffer_of(mod, leaf)
+                            if base is not None:
+                                sites.append((node, base))
+            elif isinstance(node, ast.Call) \
+                    and isinstance(node.func, ast.Attribute) \
+                    and node.func.attr in INPLACE_METHODS:
+                base = _buffer_of(mod, node.func.value)
+                if base is not None:
+                    sites.append((node, base))
+        return sites
+
+    def _check_function(self, mod: ModuleCtx, fn: _astutil.FunctionNode,
+                        attr_mutations: Dict[Optional[str], Set[str]]
+                        ) -> Iterable[Finding]:
+        cls = mod.functions.class_of.get(fn)
+        cls_mutated = attr_mutations.get(cls, set())
+        local_sites = self._mutation_sites(mod, fn)
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            name = mod.imports.call_name(node)
+            if name not in CONVERTERS or not node.args:
+                continue
+            arg = node.args[0]
+            if _is_copied(mod, arg):
+                continue
+            buf = _buffer_of(mod, arg)
+            if buf is None:
+                continue
+            conv_line = node.lineno
+            conv_loop = _astutil.enclosing_loop(node, within=fn)
+            # a buffer wholly rebound inside the loop (keep = np.zeros
+            # each iteration) is fresh per iteration: no cross-iteration
+            # race through the old storage
+            rebound_in_loop = (
+                conv_loop is not None
+                and self._rebound_inside(mod, conv_loop, buf))
+            # (a) local buffer mutated after the conversion dispatches
+            for site, base in local_sites:
+                if base != buf:
+                    continue
+                site_line = site.lineno
+                same_loop = (conv_loop is not None
+                             and not rebound_in_loop
+                             and self._inside(site, conv_loop))
+                if site_line > conv_line or same_loop:
+                    yield mod.finding(
+                        self.id, self.severity, node,
+                        f"jnp.asarray aliases '{buf}' which is mutated "
+                        f"at line {site_line} while the conversion may "
+                        "still be in flight; snapshot with a "
+                        "synchronous copy (.copy() / np.array) before "
+                        "the handoff")
+                    break
+            else:
+                # (b) attribute buffer mutated by some method of the
+                # class — ordering across methods is not static
+                if buf.startswith("self.") and buf in cls_mutated:
+                    yield mod.finding(
+                        self.id, self.severity, node,
+                        f"jnp.asarray aliases '{buf}', a buffer this "
+                        "class mutates in place; cross-method ordering "
+                        "with the async dispatch is not provable — "
+                        "snapshot with a synchronous copy (.copy() / "
+                        "np.array) at the conversion")
+
+    @staticmethod
+    def _inside(node: ast.AST, region: ast.AST) -> bool:
+        return any(a is region for a in _astutil.ancestors(node))
+
+    @staticmethod
+    def _rebound_inside(mod: ModuleCtx, loop: ast.AST,
+                        buf: str) -> bool:
+        for node in ast.walk(loop):
+            if not isinstance(node, ast.Assign):
+                continue
+            for tgt in node.targets:
+                leaves = tgt.elts if isinstance(
+                    tgt, (ast.Tuple, ast.List)) else [tgt]
+                for leaf in leaves:
+                    if not isinstance(leaf, ast.Subscript) \
+                            and mod.imports.dotted(leaf) == buf:
+                        return True
+        return False

@@ -1,0 +1,257 @@
+"""``host-sync`` — device→host synchronization in per-step hot paths.
+
+The bug class: PR 8 had to engineer per-step host syncs *out* of the
+training loop (bits/participants are accumulated as device scalars and
+summed once); a single ``.item()`` / ``np.asarray(device_value)`` /
+``float(jitted_result)`` inside a per-token or per-round body silently
+serializes the pipeline on every iteration.
+
+Hot regions:
+
+* **per-step functions** — names matching ``step``/``*_step`` /
+  ``commit``/``dispatch`` (+ ``_impl`` forms) / ``*_pass``: the entire
+  body is hot, and hotness propagates transitively through same-module
+  calls (``self.helper()`` and bare local functions).
+* **driver loops** — ``For``/``While`` bodies directly inside
+  ``train``/``train_async``/``run``/``_run_impl``/``serve``: only the
+  loop body's own statements are hot (admission/setup helpers called
+  from a serve loop do per-request work, which is not the bug class),
+  and only the *unambiguous* primitives fire there (``.item()``,
+  ``block_until_ready``, ``jax.device_get``) — the fl/ simulators are
+  event-driven host loops that legitimately build per-round metric
+  rows with ``float()``/``int()``, which is their design, not the
+  PR 8 pipeline-stall class.
+
+A site only fires when the value being synced is *device-tainted*:
+assigned from a ``jax.*`` call, from a ``self.method()`` call, or
+derived from such a value.  ``np.asarray`` over a fresh host list, or
+``int()`` over a numpy scalar, stays silent.  Where a sync is the
+algorithm (greedy decode must read the sampled token back), the site
+carries an inline ``# repro: ignore[host-sync] -- reason``.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from repro.analysis import _astutil
+from repro.analysis.engine import Checker, ModuleCtx
+from repro.analysis.findings import Finding
+
+PER_STEP_RE = re.compile(
+    r"((^|_)step(_impl)?$)|((^|_)(commit|dispatch)(_impl)?$)|(_pass$)")
+DRIVER_RE = re.compile(r"^(train|train_async|run|_run_impl|serve)$")
+
+SYNC_NUMPY = {"numpy.asarray", "numpy.array"}
+SYNC_ATTRS = {"item", "block_until_ready"}
+SYNC_JAX = {"jax.device_get", "jax.block_until_ready"}
+CAST_BUILTINS = {"float", "int", "bool"}
+
+# call prefixes whose RESULTS live on the host (assigning from them does
+# not taint) — numpy results are host arrays even when the call itself
+# synced a device input (that sync is flagged at the call site).
+_HOST_PREFIXES = ("numpy.", "time.", "math.", "os.", "collections.",
+                  "itertools.", "random.")
+_HOST_BUILTINS = {"len", "int", "float", "bool", "str", "sorted", "min",
+                  "max", "sum", "abs", "range", "enumerate", "zip",
+                  "list", "dict", "set", "tuple", "isinstance",
+                  "getattr", "print", "repr", "any", "all", "id"}
+_DEVICE_PREFIXES = ("jax.",)
+
+
+class HostSyncChecker(Checker):
+    id = "host-sync"
+    severity = "warn"
+    description = ("device→host sync (.item(), np.asarray(device), "
+                   "float(jitted), block_until_ready) in a per-step "
+                   "hot path")
+
+    # -- taint ---------------------------------------------------------
+
+    def _call_taint(self, call: ast.Call, mod: ModuleCtx,
+                    local_taint: Set[str],
+                    attr_taint: Set[str]) -> bool:
+        name = mod.imports.call_name(call)
+        if name is not None:
+            if name.startswith(_DEVICE_PREFIXES):
+                return True
+            if name.startswith(_HOST_PREFIXES) or name in _HOST_BUILTINS:
+                return False
+            if name.startswith("self."):
+                # a method on self may hand back device values (jitted
+                # attributes like self._step)
+                return True
+        # method call on a known-host local stays host (q_lens.sum())
+        if isinstance(call.func, ast.Attribute):
+            return self._expr_taint(call.func.value, mod, local_taint,
+                                    attr_taint)
+        return True     # unknown callables taint conservatively
+
+    def _expr_taint(self, node: ast.AST, mod: ModuleCtx,
+                    local_taint: Set[str],
+                    attr_taint: Set[str]) -> bool:
+        if isinstance(node, ast.Name):
+            return node.id in local_taint
+        if isinstance(node, ast.Attribute):
+            dotted = mod.imports.dotted(node)
+            if dotted is not None and dotted in attr_taint:
+                return True
+            if dotted is not None:
+                return False
+            return self._expr_taint(node.value, mod, local_taint,
+                                    attr_taint)
+        if isinstance(node, ast.Call):
+            return self._call_taint(node, mod, local_taint, attr_taint)
+        if isinstance(node, ast.Subscript):
+            return self._expr_taint(node.value, mod, local_taint,
+                                    attr_taint)
+        if isinstance(node, (ast.BinOp, ast.BoolOp, ast.Compare,
+                             ast.UnaryOp, ast.IfExp, ast.Starred)):
+            return any(self._expr_taint(c, mod, local_taint, attr_taint)
+                       for c in ast.iter_child_nodes(node)
+                       if isinstance(c, ast.expr))
+        return False
+
+    def _local_taint(self, fn: _astutil.FunctionNode, mod: ModuleCtx,
+                     attr_taint: Set[str]) -> Set[str]:
+        taint: Set[str] = set()
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and node is not fn:
+                continue
+            if isinstance(node, ast.Assign):
+                tainted = self._expr_taint(node.value, mod, taint,
+                                           attr_taint)
+                if tainted:
+                    for tgt in node.targets:
+                        for leaf in ast.walk(tgt):
+                            if isinstance(leaf, ast.Name):
+                                taint.add(leaf.id)
+        return taint
+
+    def _attr_taint(self, mod: ModuleCtx) -> Set[str]:
+        """Class-wide: ``self.X`` attributes assigned from tainted
+        expressions anywhere in their class."""
+        tainted: Set[str] = set()
+        for _qn, fn in mod.functions.functions():
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Assign):
+                    continue
+                if not self._expr_taint(node.value, mod, set(), tainted):
+                    continue
+                for tgt in node.targets:
+                    targets = tgt.elts if isinstance(
+                        tgt, (ast.Tuple, ast.List)) else [tgt]
+                    for t in targets:
+                        dotted = mod.imports.dotted(t)
+                        if dotted and dotted.startswith("self."):
+                            tainted.add(dotted)
+        return tainted
+
+    # -- hot-region discovery ------------------------------------------
+
+    def _callees(self, region: ast.AST, mod: ModuleCtx,
+                 cls: Optional[str]) -> List[_astutil.FunctionNode]:
+        out = []
+        for node in ast.walk(region):
+            if not isinstance(node, ast.Call):
+                continue
+            name = mod.imports.call_name(node)
+            if name is None:
+                continue
+            target: Optional[_astutil.FunctionNode] = None
+            if name.startswith("self.") and cls is not None:
+                target = mod.functions.by_qualname.get(
+                    f"{cls}.{name[5:]}")
+            elif "." not in name:
+                target = mod.functions.by_qualname.get(name)
+            if target is not None:
+                out.append(target)
+        return out
+
+    def _hot_regions(self, mod: ModuleCtx
+                     ) -> List[Tuple[_astutil.FunctionNode, ast.AST]]:
+        regions: List[Tuple[_astutil.FunctionNode, ast.AST]] = []
+        hot_fns: Set[_astutil.FunctionNode] = set()
+        work: List[_astutil.FunctionNode] = []
+        for _qn, fn in mod.functions.functions():
+            if PER_STEP_RE.search(fn.name):
+                if fn not in hot_fns:
+                    hot_fns.add(fn)
+                    work.append(fn)
+        while work:
+            fn = work.pop()
+            regions.append((fn, fn))
+            cls = mod.functions.class_of.get(fn)
+            for callee in self._callees(fn, mod, cls):
+                if callee not in hot_fns:
+                    hot_fns.add(callee)
+                    work.append(callee)
+        for _qn, fn in mod.functions.functions():
+            if fn in hot_fns or not DRIVER_RE.match(fn.name):
+                continue
+            for node in ast.walk(fn):
+                if isinstance(node, (ast.For, ast.While)) and \
+                        _astutil.enclosing_function(node) is fn:
+                    regions.append((fn, node))
+        return regions
+
+    # -- the check -----------------------------------------------------
+
+    def check(self, mod: ModuleCtx) -> Iterable[Finding]:
+        regions = self._hot_regions(mod)
+        if not regions:
+            return
+        attr_taint = self._attr_taint(mod)
+        taint_cache: Dict[_astutil.FunctionNode, Set[str]] = {}
+        seen: Set[int] = set()
+        for fn, region in regions:
+            if fn not in taint_cache:
+                taint_cache[fn] = self._local_taint(fn, mod, attr_taint)
+            local = taint_cache[fn]
+            strict = region is fn
+            for node in ast.walk(region):
+                if not isinstance(node, ast.Call) or id(node) in seen:
+                    continue
+                finding = self._check_call(node, mod, fn, local,
+                                           attr_taint, strict)
+                if finding is not None:
+                    seen.add(id(node))
+                    yield finding
+
+    def _check_call(self, call: ast.Call, mod: ModuleCtx,
+                    fn: _astutil.FunctionNode, local: Set[str],
+                    attrs: Set[str], strict: bool) -> Optional[Finding]:
+        where = f"in hot path '{fn.name}'"
+        name = mod.imports.call_name(call)
+        if isinstance(call.func, ast.Attribute) \
+                and call.func.attr in SYNC_ATTRS:
+            return mod.finding(
+                self.id, self.severity, call,
+                f".{call.func.attr}() forces a device sync {where}; "
+                "accumulate on device and read back once after the "
+                "loop")
+        if name in SYNC_JAX:
+            return mod.finding(
+                self.id, self.severity, call,
+                f"{name}() {where} blocks on the device every "
+                "iteration; hoist it out of the loop")
+        if not strict:
+            return None
+        if name in SYNC_NUMPY and any(
+                self._expr_taint(a, mod, local, attrs)
+                for a in call.args):
+            return mod.finding(
+                self.id, self.severity, call,
+                f"{name.split('.')[-1]}() over a device value {where} "
+                "synchronously materializes it on host each step")
+        if isinstance(call.func, ast.Name) \
+                and call.func.id in CAST_BUILTINS and call.args \
+                and self._expr_taint(call.args[0], mod, local, attrs):
+            return mod.finding(
+                self.id, self.severity, call,
+                f"{call.func.id}() of a device value {where} is a "
+                "hidden blocking transfer; keep it on device until "
+                "after the loop")
+        return None

@@ -1,0 +1,283 @@
+"""``prng-reuse`` — a PRNG key consumed twice without re-derivation.
+
+The bug class PR 4 fixed: resumed training replayed round-0 randomness
+because the same key reached the round sampler twice.  The paper's
+variance-reduction guarantees assume fresh randomness per round — round
+keys, the PAGE shared coin, and participation draws must never repeat
+(DESIGN.md §8's shared-randomness contract), so key reuse is a
+*correctness* bug here, not a style issue.
+
+Model: a small abstract interpreter runs over each function body
+tracking, per key variable, how many times it has been *consumed* —
+passed bare to any call that is not a derivation (``split`` /
+``fold_in`` / ``clone`` / ``*key(s)`` helpers like ``round_keys``).
+Reassigning the name (``key, sub = split(key)``) resets the count.
+
+* ``If``/``Try`` branches evaluate independently and merge by max —
+  one use in each arm of an if/else is one use.
+* Loop bodies evaluate **twice**: a key consumed in a loop without an
+  interleaved re-derivation is consumed again on the next iteration —
+  exactly the round-0 replay shape.
+* ``f(key, key)`` is two consumptions in one call.
+
+Key variables are parameters/locals whose name matches ``key``/``rng``
+conventions or whose value flows from a key-producing call.  Elements
+of key *arrays* (``keys[i]``) are not tracked — indexed fan-out is the
+correct idiom.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from repro.analysis import _astutil
+from repro.analysis.engine import Checker, ModuleCtx
+from repro.analysis.findings import Finding
+
+KEY_NAME_RE = re.compile(
+    r"(^|_)(key|keys|rng|prng)($|_)|(^|_)key[s]?$", re.IGNORECASE)
+
+# canonical producers: their results are key-typed
+PRODUCERS = {"jax.random.PRNGKey", "jax.random.key", "jax.random.split",
+             "jax.random.fold_in", "jax.random.clone",
+             "jax.random.wrap_key_data"}
+# derivations: consume-exempt uses (they mint fresh keys from the base)
+DERIVERS = {"jax.random.split", "jax.random.fold_in",
+            "jax.random.clone", "jax.random.key_data"}
+_DERIVER_TAIL_RE = re.compile(r"(^|_)keys?$")
+# host introspection — passing a key (or key array) here is not a
+# randomness consumption
+NONCONSUMING = {"len", "sorted", "list", "tuple", "set", "dict",
+                "enumerate", "zip", "reversed", "min", "max", "sum",
+                "any", "all", "isinstance", "print", "repr", "str",
+                "id", "type", "hash"}
+
+
+def _is_producer(name: Optional[str]) -> bool:
+    if name is None:
+        return False
+    if name in PRODUCERS:
+        return True
+    return bool(_DERIVER_TAIL_RE.search(name.rsplit(".", 1)[-1]))
+
+
+def _terminates(block: List[ast.stmt]) -> bool:
+    """The block always leaves the enclosing suite (so its state never
+    reaches the code after the ``if``)."""
+    if not block:
+        return False
+    last = block[-1]
+    return isinstance(last, (ast.Return, ast.Raise, ast.Break,
+                             ast.Continue))
+
+
+def _is_deriver(name: Optional[str]) -> bool:
+    if name is None:
+        return False
+    if name in DERIVERS:
+        return True
+    return bool(_DERIVER_TAIL_RE.search(name.rsplit(".", 1)[-1]))
+
+
+class _State:
+    """name -> (generation id, consumption count)."""
+
+    def __init__(self):
+        self.gen: Dict[str, int] = {}
+        self.count: Dict[str, int] = {}
+        self._next = 0
+
+    def fresh(self, name: str) -> None:
+        self._next += 1
+        self.gen[name] = self._next
+        self.count[name] = 0
+
+    def is_key(self, name: str) -> bool:
+        return name in self.gen
+
+    def copy(self) -> "_State":
+        st = _State()
+        st.gen = dict(self.gen)
+        st.count = dict(self.count)
+        st._next = self._next
+        return st
+
+    def merge_max(self, other: "_State") -> None:
+        for name in set(self.gen) | set(other.gen):
+            if name in self.gen and name in other.gen:
+                if self.gen[name] == other.gen[name]:
+                    self.count[name] = max(self.count[name],
+                                           other.count[name])
+                else:   # rebound in one branch: conservatively fresh
+                    self.count[name] = min(self.count[name],
+                                           other.count[name])
+            elif name in other.gen:
+                self.gen[name] = other.gen[name]
+                self.count[name] = other.count[name]
+        self._next = max(self._next, other._next)
+
+
+class PrngReuseChecker(Checker):
+    id = "prng-reuse"
+    severity = "error"
+    description = ("PRNG key consumed by >=2 random ops / passed twice "
+                   "without an interleaving split/fold_in")
+
+    def check(self, mod: ModuleCtx) -> Iterable[Finding]:
+        for _qn, fn in mod.functions.functions():
+            yield from self._check_function(mod, fn)
+
+    def _check_function(self, mod: ModuleCtx,
+                        fn: _astutil.FunctionNode) -> Iterable[Finding]:
+        state = _State()
+        for pname in _astutil.param_names(fn):
+            if KEY_NAME_RE.search(pname):
+                state.fresh(pname)
+        findings: List[Finding] = []
+        reported: Set[Tuple[str, int]] = set()
+        self._exec_block(fn.body, state, mod, findings, reported)
+        return findings
+
+    # -- statement interpretation --------------------------------------
+
+    def _exec_block(self, body: List[ast.stmt], state: _State,
+                    mod: ModuleCtx, findings: List[Finding],
+                    reported: Set[Tuple[str, int]]) -> None:
+        for stmt in body:
+            self._exec_stmt(stmt, state, mod, findings, reported)
+
+    def _exec_stmt(self, stmt: ast.stmt, state: _State, mod: ModuleCtx,
+                   findings: List[Finding],
+                   reported: Set[Tuple[str, int]]) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            return      # nested scopes analyzed separately
+        if isinstance(stmt, (ast.If,)):
+            self._eval_expr(stmt.test, state, mod, findings, reported)
+            b1 = state.copy()
+            self._exec_block(stmt.body, b1, mod, findings, reported)
+            b2 = state.copy()
+            self._exec_block(stmt.orelse, b2, mod, findings, reported)
+            # a branch that cannot fall through (trailing return/raise)
+            # contributes nothing to the post-if state
+            body_t = _terminates(stmt.body)
+            else_t = bool(stmt.orelse) and _terminates(stmt.orelse)
+            if body_t and not else_t:
+                b1 = b2
+            elif not (else_t and not body_t):
+                b1.merge_max(b2)
+            state.gen, state.count = b1.gen, b1.count
+            state._next = b1._next
+            return
+        if isinstance(stmt, (ast.For, ast.AsyncFor)):
+            self._eval_expr(stmt.iter, state, mod, findings, reported)
+            self._bind_target(stmt.target, None, state)
+            # two symbolic iterations: reuse across iterations surfaces
+            # on the second pass
+            self._exec_block(stmt.body, state, mod, findings, reported)
+            self._exec_block(stmt.body, state, mod, findings, reported)
+            self._exec_block(stmt.orelse, state, mod, findings, reported)
+            return
+        if isinstance(stmt, ast.While):
+            self._eval_expr(stmt.test, state, mod, findings, reported)
+            self._exec_block(stmt.body, state, mod, findings, reported)
+            self._exec_block(stmt.body, state, mod, findings, reported)
+            self._exec_block(stmt.orelse, state, mod, findings, reported)
+            return
+        if isinstance(stmt, ast.Try):
+            self._exec_block(stmt.body, state, mod, findings, reported)
+            for handler in stmt.handlers:
+                h = state.copy()
+                self._exec_block(handler.body, h, mod, findings,
+                                 reported)
+                state.merge_max(h)
+            self._exec_block(stmt.orelse, state, mod, findings, reported)
+            self._exec_block(stmt.finalbody, state, mod, findings,
+                             reported)
+            return
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            for item in stmt.items:
+                self._eval_expr(item.context_expr, state, mod, findings,
+                                reported)
+            self._exec_block(stmt.body, state, mod, findings, reported)
+            return
+        if isinstance(stmt, ast.Assign):
+            self._eval_expr(stmt.value, state, mod, findings, reported)
+            for tgt in stmt.targets:
+                self._bind_target(tgt, stmt.value, state, mod)
+            return
+        if isinstance(stmt, ast.AugAssign):
+            self._eval_expr(stmt.value, state, mod, findings, reported)
+            return
+        if isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            self._eval_expr(stmt.value, state, mod, findings, reported)
+            self._bind_target(stmt.target, stmt.value, state, mod)
+            return
+        if isinstance(stmt, (ast.Expr, ast.Return)) \
+                and stmt.value is not None:
+            self._eval_expr(stmt.value, state, mod, findings, reported)
+            return
+        # everything else: evaluate child expressions for consumptions
+        for child in ast.iter_child_nodes(stmt):
+            if isinstance(child, ast.expr):
+                self._eval_expr(child, state, mod, findings, reported)
+
+    def _bind_target(self, target: ast.expr, value: Optional[ast.expr],
+                     state: _State,
+                     mod: Optional[ModuleCtx] = None) -> None:
+        """(Re)binding a name makes it a fresh key when the RHS is
+        key-producing or the name follows key conventions; any rebind
+        of a tracked name resets its generation."""
+        if isinstance(target, (ast.Tuple, ast.List)):
+            for elt in target.elts:
+                self._bind_target(elt, value, state, mod)
+            return
+        if not isinstance(target, ast.Name):
+            return
+        name = target.id
+        produced = False
+        if value is not None and mod is not None \
+                and isinstance(value, ast.Call):
+            produced = _is_producer(mod.imports.call_name(value))
+        if produced or KEY_NAME_RE.search(name):
+            state.fresh(name)
+        elif state.is_key(name):
+            # overwritten with a non-key value: stop tracking
+            del state.gen[name]
+            del state.count[name]
+
+    # -- expression interpretation -------------------------------------
+
+    def _eval_expr(self, expr: ast.expr, state: _State, mod: ModuleCtx,
+                   findings: List[Finding],
+                   reported: Set[Tuple[str, int]]) -> None:
+        for node in ast.walk(expr):
+            if isinstance(node, ast.Call):
+                self._eval_call(node, state, mod, findings, reported)
+
+    def _eval_call(self, call: ast.Call, state: _State, mod: ModuleCtx,
+                   findings: List[Finding],
+                   reported: Set[Tuple[str, int]]) -> None:
+        name = mod.imports.call_name(call)
+        if _is_deriver(name) or name in NONCONSUMING:
+            return
+        args = list(call.args) + [kw.value for kw in call.keywords]
+        for arg in args:
+            if not isinstance(arg, ast.Name):
+                continue
+            if not state.is_key(arg.id):
+                continue
+            state.count[arg.id] = state.count.get(arg.id, 0) + 1
+            if state.count[arg.id] >= 2:
+                key = (arg.id, arg.lineno)
+                if key in reported:
+                    continue
+                reported.add(key)
+                callee = name or "<call>"
+                findings.append(mod.finding(
+                    self.id, self.severity, arg,
+                    f"key '{arg.id}' is consumed again by "
+                    f"'{callee}' without an interleaving "
+                    "split/fold_in — identical randomness will be "
+                    "replayed"))

@@ -1,0 +1,208 @@
+"""``recompile-hazard`` — patterns that retrace/recompile jitted code.
+
+XLA compiles once per (function, static-arg values, input shapes).  Two
+repo-relevant hazards:
+
+* **jit inside a loop / per-step function** — ``jax.jit(f)`` minted
+  fresh each iteration gets a fresh cache, so every call retraces.
+  The jit belongs at module scope or in ``__init__``.  (A one-shot
+  ``jit`` in a CLI ``main`` is fine and stays silent.)
+* **loop-varying static arguments** — a value that changes across loop
+  iterations passed as a ``static_argnames`` parameter of a
+  same-module jitted function compiles a new executable per distinct
+  value.  Loop *counters* (``for t in range(...)``) fed into a static
+  parameter are the canonical miss.
+* **mutable defaults in static position** — a list/dict default on a
+  static parameter is unhashable and fails at the first call; flag it
+  at the definition.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from repro.analysis import _astutil
+from repro.analysis.engine import Checker, ModuleCtx
+from repro.analysis.findings import Finding
+from repro.analysis.host_sync import PER_STEP_RE
+
+_JIT_NAMES = {"jax.jit", "jax.pjit", "jax.experimental.pjit.pjit"}
+
+
+def _is_jit_call(mod: ModuleCtx, call: ast.Call) -> bool:
+    return mod.imports.call_name(call) in _JIT_NAMES
+
+
+def _static_names_of(mod: ModuleCtx,
+                     call: ast.Call) -> Optional[List[str]]:
+    """static_argnames of a jit/partial(jit, ...) call, when literal."""
+    kwargs = _astutil.keyword_map(call)
+    node = kwargs.get("static_argnames")
+    if node is None:
+        return None
+    val = _astutil.safe_eval(node, {})
+    if isinstance(val, str):
+        return [val]
+    if isinstance(val, (tuple, list)) \
+            and all(isinstance(v, str) for v in val):
+        return list(val)
+    return None
+
+
+class RecompileChecker(Checker):
+    id = "recompile-hazard"
+    severity = "warn"
+    description = ("jax.jit in loops/per-step bodies, loop-varying "
+                   "values into static_argnames, mutable static "
+                   "defaults")
+
+    def check(self, mod: ModuleCtx) -> Iterable[Finding]:
+        static_params = self._jitted_static_params(mod)
+        yield from self._check_jit_placement(mod)
+        yield from self._check_static_args(mod, static_params)
+        yield from self._check_mutable_static_defaults(mod,
+                                                       static_params)
+
+    # -- jitted function discovery -------------------------------------
+
+    def _jitted_static_params(self, mod: ModuleCtx
+                              ) -> Dict[str, Set[str]]:
+        """function name -> its static parameter names, for same-module
+        functions decorated ``@jax.jit(...)`` or
+        ``@partial(jax.jit, static_argnames=...)``."""
+        out: Dict[str, Set[str]] = {}
+        for qn, fn in mod.functions.functions():
+            for deco in fn.decorator_list:
+                if not isinstance(deco, ast.Call):
+                    continue
+                deco_name = mod.imports.call_name(deco)
+                statics: Optional[List[str]] = None
+                if deco_name in _JIT_NAMES:
+                    statics = _static_names_of(mod, deco)
+                elif deco_name in ("functools.partial", "partial") \
+                        and deco.args:
+                    inner = mod.imports.canonical(deco.args[0])
+                    if inner in _JIT_NAMES:
+                        statics = _static_names_of(mod, deco)
+                if statics:
+                    out[fn.name] = set(statics)
+        return out
+
+    # -- hazard 1: jit construction in hot code ------------------------
+
+    def _check_jit_placement(self, mod: ModuleCtx) -> Iterable[Finding]:
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call) \
+                    or not _is_jit_call(mod, node):
+                continue
+            # decorator positions are fine
+            p = _astutil.parent(node)
+            if isinstance(p, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and node in p.decorator_list:
+                continue
+            fn = _astutil.enclosing_function(node)
+            loop = _astutil.enclosing_loop(node, within=fn)
+            if loop is not None:
+                yield mod.finding(
+                    self.id, "error", node,
+                    "jax.jit constructed inside a loop: each iteration "
+                    "mints a fresh compilation cache and retraces; "
+                    "hoist the jit out of the loop")
+            elif fn is not None and PER_STEP_RE.search(fn.name) \
+                    and not self._is_factory_use(node, fn):
+                yield mod.finding(
+                    self.id, self.severity, node,
+                    f"jax.jit constructed inside per-step function "
+                    f"'{fn.name}': the cache dies with each call; "
+                    "build it once in __init__ or at module scope")
+
+    @staticmethod
+    def _is_factory_use(node: ast.Call,
+                        fn: _astutil.FunctionNode) -> bool:
+        """The jit is the function's *product* (``return jax.jit(...)``
+        — builder methods like ``jit_train_step``), not a per-call
+        construction."""
+        for anc in _astutil.ancestors(node):
+            if anc is fn:
+                return False
+            if isinstance(anc, ast.Return):
+                return True
+        return False
+
+    # -- hazard 2: loop-varying value into a static parameter ----------
+
+    def _check_static_args(self, mod: ModuleCtx,
+                           static_params: Dict[str, Set[str]]
+                           ) -> Iterable[Finding]:
+        if not static_params:
+            return
+        for _qn, fn in mod.functions.functions():
+            loop_vars = self._loop_vars(fn)
+            if not loop_vars:
+                continue
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                name = mod.imports.call_name(node)
+                if name is None:
+                    continue
+                tail = name.rsplit(".", 1)[-1]
+                statics = static_params.get(tail)
+                if statics is None:
+                    continue
+                loop = _astutil.enclosing_loop(node, within=fn)
+                if loop is None:
+                    continue
+                for kw in node.keywords:
+                    if kw.arg in statics \
+                            and isinstance(kw.value, ast.Name) \
+                            and kw.value.id in loop_vars.get(id(loop),
+                                                             set()):
+                        yield mod.finding(
+                            self.id, self.severity, kw.value,
+                            f"loop variable '{kw.value.id}' feeds "
+                            f"static parameter '{kw.arg}' of jitted "
+                            f"'{tail}': every distinct value compiles "
+                            "a new executable; pass it as a traced "
+                            "argument or hoist it")
+
+    @staticmethod
+    def _loop_vars(fn: _astutil.FunctionNode) -> Dict[int, Set[str]]:
+        """Per-loop: names bound by the loop target (the values that
+        vary across iterations)."""
+        out: Dict[int, Set[str]] = {}
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.For, ast.AsyncFor)):
+                names = {leaf.id for leaf in ast.walk(node.target)
+                         if isinstance(leaf, ast.Name)}
+                out[id(node)] = names
+        return out
+
+    # -- hazard 3: mutable default on a static parameter ---------------
+
+    def _check_mutable_static_defaults(self, mod: ModuleCtx,
+                                       static_params: Dict[str, Set[str]]
+                                       ) -> Iterable[Finding]:
+        for _qn, fn in mod.functions.functions():
+            statics = static_params.get(fn.name)
+            if not statics:
+                continue
+            args = fn.args
+            pos = args.posonlyargs + args.args
+            pairs: List[Tuple[ast.arg, Optional[ast.expr]]] = list(
+                zip(pos[len(pos) - len(args.defaults):], args.defaults))
+            pairs += [(a, d) for a, d in zip(args.kwonlyargs,
+                                             args.kw_defaults)]
+            for arg, default in pairs:
+                if default is None or arg.arg not in statics:
+                    continue
+                if isinstance(default, (ast.List, ast.Dict, ast.Set)) \
+                        or (isinstance(default, ast.Call)
+                            and mod.imports.call_name(default)
+                            in ("list", "dict", "set")):
+                    yield mod.finding(
+                        self.id, "error", default,
+                        f"static parameter '{arg.arg}' of jitted "
+                        f"'{fn.name}' has an unhashable "
+                        f"{type(default).__name__.lower()} default; "
+                        "static args must be hashable (use a tuple)")

@@ -30,7 +30,7 @@ from repro.core.problems import (DistributedProblem, LogisticSigmoidProblem,
                                  make_synthetic_classification,
                                  sample_batch_indices)
 from repro.core.sync_mvr import DashaPPSyncMVR, SyncMVRConfig, dasha_pp_sync_mvr
-from repro.core import theory, variants
+from repro.core import theory, variants, wire
 from repro.core.variants import (BaselineRule, VariantRule, get_baseline,
                                  get_rule)
 
@@ -48,6 +48,6 @@ __all__ = [
     "dasha_pp_finite_mvr", "dasha_pp_mvr",
     "Marina", "MarinaConfig", "Frecon", "FreconConfig",
     "DashaPPSyncMVR", "SyncMVRConfig", "dasha_pp_sync_mvr",
-    "theory", "variants",
+    "theory", "variants", "wire",
     "VariantRule", "BaselineRule", "get_rule", "get_baseline",
 ]

@@ -28,17 +28,14 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import wire
 
 Array = jax.Array
 
-_FLOAT_BITS = 32
-
-
-def _index_bits(d: int) -> float:
-    """Bits per transmitted coordinate index: ceil(log2 d)."""
-    import math
-
-    return float(max(1, math.ceil(math.log2(max(d, 2)))))
+# the wire model lives in repro.core.wire; these are the module-local
+# spellings the compressor formulas use
+_FLOAT_BITS = int(wire.FLOAT_BITS)
+_index_bits = wire.index_bits
 
 
 class Compressor:

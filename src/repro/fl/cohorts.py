@@ -235,6 +235,11 @@ class CohortScheduler:
             placed = place_batch(batch, mesh, data_axes)
             with obs_trace.span("train.dispatch", track="train",
                                 round=t, cohort=int(eff.sum())):
+                # repro: ignore[prng-reuse] -- deliberate: both
+                # participation_mask (above) and dispatch_fn re-derive
+                # domain-separated streams from this round key via
+                # variants.round_keys; the mask preview must see the
+                # same k_part the dispatch draws internally
                 state, disp, mets = dispatch_fn(state, placed, key,
                                                 jnp.asarray(eff))
             members = np.nonzero(eff)[0]

@@ -56,7 +56,6 @@ generalization of the reference engine, through the same
 from __future__ import annotations
 
 import dataclasses
-import math
 from collections import Counter
 from typing import (Any, Dict, List, Mapping, NamedTuple, Optional,
                     Sequence, Tuple)
@@ -65,7 +64,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import variants
+from repro.core import variants, wire
 from repro.core.compressors import Compressor
 from repro.core.dasha_pp import DashaPP, DashaPPConfig, DashaPPState
 from repro.core.participation import ParticipationSampler
@@ -81,14 +80,11 @@ from repro.obs import trace as obs_trace
 Array = jax.Array
 
 ROOT = ("root",)            # pending-counter key for the root server
-GROUP_HEADER_BITS = 32.0    # per round-group: the dispatch-round id
 
-
-def payload_bits(nnz: int, d: int, value_bits: float = 32.0) -> float:
-    """Lossless sparse-or-dense wire size of one aggregated vector:
-    whichever of (value, index) pairs or the dense vector is smaller."""
-    index_bits = math.ceil(math.log2(max(d, 2)))
-    return float(min(nnz * (value_bits + index_bits), d * value_bits))
+# bit accounting is single-sourced in the core wire model; re-exported
+# here because the fleet public API grew up around these names
+GROUP_HEADER_BITS = wire.GROUP_HEADER_BITS
+payload_bits = wire.payload_bits
 
 
 # ----------------------------------------------------------------------
@@ -127,7 +123,7 @@ class FleetConfig:
     staleness_policy: str = "power"
     staleness_exponent: float = 0.5
     max_staleness: Optional[int] = None
-    value_bits: float = 32.0
+    value_bits: float = wire.FLOAT_BITS
 
     def __post_init__(self):
         if self.buffer_size is not None and self.buffer_size < 1:
@@ -361,6 +357,9 @@ class StreamedGradientWorkload(FleetWorkload):
         g_i = jnp.asarray(store.gather("g_i", idx_p))
         m, h_new = self._rows(k_comp, jnp.asarray(idx_p),
                               jnp.asarray(x_new), jnp.asarray(x), h, g_i)
+        # repro: ignore[host-sync] -- the fleet handoff IS host-side:
+        # contribution rows enter the event queue as numpy (one sync
+        # per dispatch, amortized over the whole cohort)
         return FleetDispatch(
             x_new=x_new, idx=idx,
             m_rows=np.asarray(m, np.float32)[:C],

@@ -1,6 +1,6 @@
 """Schema checker for obs artifacts (CI `obs-smoke` gate).
 
-Validates the two JSON artifact shapes this package emits:
+Validates the JSON artifact shapes this repo's tooling emits:
 
 - **Chrome trace** (``obs/trace.py::Tracer.export_chrome``): top-level
   object with a ``traceEvents`` list; every event needs ``ph``/``pid``/
@@ -10,10 +10,17 @@ Validates the two JSON artifact shapes this package emits:
 - **Metrics snapshot** (``obs/metrics.py::Registry.write_snapshot``):
   ``{"ts": ..., "metrics": {name: {"kind": ...}}}`` with per-kind
   required numeric fields.
+- **Analysis findings** (``python -m repro.analysis --json``): the
+  contract linter's artifact — ``tool == "repro.analysis"``, numeric
+  ``ts``, a findings list whose entries carry
+  ``checker``/``path``/``line``/``severity``/``message``/``status``,
+  and a summary consistent with the list.  Auto-detected via the
+  ``tool`` field, or forced with ``--analysis``.
 
 CLI (exit 1 on any invalid file)::
 
     python -m repro.obs.validate trace.json metrics.json ...
+    python -m repro.obs.validate --analysis findings.json
 """
 from __future__ import annotations
 
@@ -21,7 +28,8 @@ import json
 import sys
 from typing import Any, Dict, List, Tuple
 
-__all__ = ["validate_trace", "validate_metrics", "validate_file", "main"]
+__all__ = ["validate_trace", "validate_metrics", "validate_analysis",
+           "validate_file", "main"]
 
 _PHASES = {"X", "i", "I", "C", "M"}
 _META_NAMES = {"process_name", "thread_name", "process_sort_index",
@@ -102,26 +110,93 @@ def validate_metrics(doc: Any) -> List[str]:
     return errors
 
 
-def validate_file(path: str) -> Tuple[str, List[str]]:
-    """Auto-detect artifact kind; returns (kind, errors)."""
+_ANALYSIS_TOOL = "repro.analysis"
+_SEVERITIES = {"error", "warn"}
+_STATUSES = {"open", "suppressed", "baselined"}
+
+
+def validate_analysis(doc: Any) -> List[str]:
+    errors: List[str] = []
+    if not isinstance(doc, dict):
+        return ["analysis: top level must be an object"]
+    if doc.get("tool") != _ANALYSIS_TOOL:
+        errors.append(f"analysis: 'tool' must be {_ANALYSIS_TOOL!r}, "
+                      f"got {doc.get('tool')!r}")
+    if not _num(doc.get("ts")):
+        errors.append("analysis: missing numeric 'ts'")
+    if not isinstance(doc.get("version"), int):
+        errors.append("analysis: missing integer 'version'")
+    if not isinstance(doc.get("paths"), list):
+        errors.append("analysis: missing 'paths' list")
+    findings = doc.get("findings")
+    if not isinstance(findings, list):
+        return errors + ["analysis: missing 'findings' list"]
+    by_status = {s: 0 for s in _STATUSES}
+    for i, f in enumerate(findings):
+        where = f"findings[{i}]"
+        if not isinstance(f, dict):
+            errors.append(f"{where}: not an object")
+            continue
+        for field in ("checker", "path", "message"):
+            if not isinstance(f.get(field), str) or not f[field]:
+                errors.append(f"{where}: missing '{field}'")
+        if not isinstance(f.get("line"), int) or f["line"] < 1:
+            errors.append(f"{where}: bad line {f.get('line')!r}")
+        if f.get("severity") not in _SEVERITIES:
+            errors.append(f"{where}: bad severity {f.get('severity')!r}")
+        status = f.get("status")
+        if status not in _STATUSES:
+            errors.append(f"{where}: bad status {status!r}")
+        else:
+            by_status[status] += 1
+    summary = doc.get("summary")
+    if not isinstance(summary, dict):
+        errors.append("analysis: missing 'summary' object")
+    else:
+        for field in ("files", "open", "errors", "warnings",
+                      "suppressed", "baselined"):
+            if not isinstance(summary.get(field), int) \
+                    or summary[field] < 0:
+                errors.append(f"analysis: summary.{field} must be a "
+                              "non-negative integer")
+        if isinstance(summary.get("open"), int) \
+                and summary["open"] != by_status["open"]:
+            errors.append(
+                f"analysis: summary.open={summary['open']} but "
+                f"{by_status['open']} open finding(s) listed")
+    return errors
+
+
+def validate_file(path: str, kind: str = "auto"
+                  ) -> Tuple[str, List[str]]:
+    """Auto-detect artifact kind (or force one); returns
+    (kind, errors)."""
     try:
         with open(path) as f:
             doc = json.load(f)
     except (OSError, ValueError) as e:
         return "unknown", [f"{path}: unreadable: {e}"]
+    if kind == "analysis":
+        return "analysis", validate_analysis(doc)
     if isinstance(doc, dict) and "traceEvents" in doc:
         return "trace", validate_trace(doc)
+    if isinstance(doc, dict) and doc.get("tool") == _ANALYSIS_TOOL:
+        return "analysis", validate_analysis(doc)
     return "metrics", validate_metrics(doc)
 
 
 def main(argv: List[str]) -> int:
+    kind = "auto"
+    if "--analysis" in argv:
+        argv = [a for a in argv if a != "--analysis"]
+        kind = "analysis"
     if not argv:
-        print("usage: python -m repro.obs.validate FILE [FILE ...]",
-              file=sys.stderr)
+        print("usage: python -m repro.obs.validate [--analysis] "
+              "FILE [FILE ...]", file=sys.stderr)
         return 2
     failed = False
     for path in argv:
-        kind, errors = validate_file(path)
+        kind, errors = validate_file(path, kind)
         if errors:
             failed = True
             print(f"INVALID {kind} {path}")

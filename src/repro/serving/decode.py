@@ -152,6 +152,8 @@ class DecodeServer:
                 self.params, jnp.asarray(self._next_tok.copy()),
                 self.state,
                 jnp.asarray(active))  # synchronous host copy, see prefill
+            # repro: ignore[host-sync] -- greedy decode IS the sync
+            # point: the argmax token feeds the next step's inputs
             nxt = np.asarray(jnp.argmax(logits, axis=-1))
         self.decode_seconds += time.perf_counter() - t0
         for i, req in enumerate(self.slots):

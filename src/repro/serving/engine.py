@@ -466,7 +466,8 @@ class PagedEngine:
                 logits, dstate = self._prefill_fn(
                     self.params, {"tokens": jnp.asarray([padded], jnp.int32)})
             self._caches = self._write_fn(
-                self._caches, dstate.caches, jnp.asarray(self._table[slot]),
+                self._caches, dstate.caches,
+                jnp.asarray(self._table[slot].copy()),
                 jnp.asarray(shared_len), slot,
                 true_len=jnp.asarray(T, jnp.int32))
             self._next_tok[slot, 0] = int(np.argmax(np.asarray(logits[0])))
@@ -656,9 +657,13 @@ class PagedEngine:
                 tokens[i, :n] = self._pending[i][lo:lo + n]
 
         W = self._table_width()
-        state = PagedDecodeState(caches=self._caches,
-                                 page_table=jnp.asarray(self._table[:, :W]),
-                                 seq_lens=jnp.asarray(self._lens))
+        # snapshot the live numpy buffers: asarray may alias them while
+        # the dispatch is in flight, and _ensure_capacity / the per-slot
+        # length bumps below mutate both before it resolves
+        state = PagedDecodeState(
+            caches=self._caches,
+            page_table=jnp.asarray(self._table[:, :W].copy()),
+            seq_lens=jnp.asarray(self._lens.copy()))
         pure_decode = not any_prefill
         t0 = time.perf_counter() if pure_decode else 0.0
         # tokens is a fresh numpy buffer (no host-buffer race: nothing
@@ -666,6 +671,8 @@ class PagedEngine:
         logits, new_state = self._fused_fn(
             self.params, jnp.asarray(tokens), state, jnp.asarray(q_lens))
         self._caches = new_state.caches
+        # repro: ignore[host-sync] -- greedy decode IS the sync point:
+        # the sampled token must land on host to extend each sequence
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
         self.clock += 1
         if pure_decode:
@@ -680,6 +687,8 @@ class PagedEngine:
                           track="serve")
 
         if self._trace:
+            # repro: ignore[host-sync] -- opt-in trace mode only; full
+            # logits are materialized for logprob inspection by request
             logits_np = np.asarray(logits)
         for i in active_idx:
             n = int(q_lens[i])

@@ -299,6 +299,10 @@ class Trainer:
             state, batch, key)
 
         # (3) DASHA-PP node/aggregation update
+        # repro: ignore[prng-reuse] -- deliberate: the engine derives
+        # its own (k_part, k_oracle, k_comp) streams from the round key
+        # via variants.round_keys, domain-separated from the oracle
+        # draws _advance_and_grads consumed
         dasha_new, wire = self.engine.node_update(
             g_new, g_old, state.dasha, key, **node_kwargs)
 
@@ -331,6 +335,9 @@ class Trainer:
          g_new, g_old, node_kwargs) = self._advance_and_grads(
             state, batch, key)
 
+        # repro: ignore[prng-reuse] -- deliberate: same round_keys
+        # domain separation as node_update above; the dispatch's
+        # internal draw must match the scheduler's mask preview
         disp, wire = self.engine.dispatch(
             g_new, g_old, state.dasha, key,
             participation_mask=participation_mask, **node_kwargs)

@@ -1,0 +1,21 @@
+"""bit-accounting near-misses: core-sourced widths, non-bits math."""
+from repro.core import wire
+
+
+def group_cost(nnz, d):
+    bits = wire.GROUP_HEADER_BITS + wire.payload_bits(nnz, d)
+    return bits
+
+
+def payload_bits(nnz, d, value_bits=wire.FLOAT_BITS):
+    return nnz * (value_bits + wire.index_bits(d))
+
+
+def shifted_index(x):
+    page = x << 5           # shift amount, not bit accounting
+    return page
+
+
+def unrelated_math(n):
+    total = n * 32          # width-looking literal, no bits context
+    return total

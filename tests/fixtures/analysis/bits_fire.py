@@ -1,0 +1,20 @@
+"""bit-accounting positives: local wire models outside core/."""
+
+HEADER_BITS = 32            # FIRE: width literal on a *_BITS name
+
+
+def payload_bits(nnz, d, value_bits=32.0):   # FIRE: width default
+    return nnz * (value_bits + 9.0)
+
+
+def wire_cost(k, d):
+    bits = k * 32 + d       # FIRE: width arithmetic into a bits name
+    return bits
+
+
+def report(log, n):
+    log(total_bits=n * 64.0)    # FIRE: width arithmetic into *bits* kwarg
+
+
+def uplink_bits(k):
+    return k * 32 + 16      # FIRE: width arithmetic returned from *bits*

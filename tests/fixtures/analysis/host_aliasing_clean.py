@@ -1,0 +1,41 @@
+"""host-aliasing near-misses: the synchronous-copy idiom and fresh
+per-iteration buffers."""
+import jax.numpy as jnp
+import numpy as np
+
+
+def copied_before_handoff(n):
+    buf = np.zeros(n)
+    dev = jnp.asarray(buf.copy())           # snapshot: owned buffer
+    arr = jnp.asarray(np.array(buf))        # np.array also copies
+    buf[0] = 1.0
+    return dev, arr
+
+
+def fresh_each_iteration(n, rounds):
+    out = []
+    for _ in range(rounds):
+        keep = np.zeros(n, np.float32)      # rebound every iteration:
+        keep[:2] = 1.0                      # no cross-iteration race
+        out.append(jnp.asarray(keep))
+    return out
+
+
+class Engine:
+    def __init__(self, n):
+        self._table = np.zeros((n, 4), np.int32)
+        self._lens = np.zeros(n, np.int32)
+
+    def snapshot(self):
+        # the discipline the checker wants: copy at the conversion
+        return (jnp.asarray(self._table.copy()),
+                jnp.asarray(self._lens.copy()))
+
+    def bump(self, i):
+        self._lens[i] += 1
+        self._table[i, 0] = 7
+
+
+def call_results_are_fresh(store, idx):
+    # conversions of call results never fire (owned by construction)
+    return jnp.asarray(store.gather("h", idx))

@@ -1,0 +1,25 @@
+"""host-aliasing positive: live numpy buffers handed to jnp.asarray."""
+import jax.numpy as jnp
+import numpy as np
+
+
+def later_mutation(n):
+    buf = np.zeros(n)
+    dev = jnp.asarray(buf)                  # FIRE: buf mutated below
+    buf[0] = 1.0
+    return dev
+
+
+class Engine:
+    def __init__(self, n):
+        self._table = np.zeros((n, 4), np.int32)
+        self._lens = np.zeros(n, np.int32)
+
+    def snapshot(self):
+        # FIRE x2: this class mutates both buffers in place
+        return (jnp.asarray(self._table[:, :2]),
+                jnp.asarray(self._lens))
+
+    def bump(self, i):
+        self._lens[i] += 1
+        self._table[i, 0] = 7

@@ -1,0 +1,26 @@
+"""host-sync near-misses: host-only casts, post-loop reads, admission
+work outside driver loop bodies."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Loop:
+    def step(self, state):
+        # casts over host values: numpy results never taint
+        q_lens = np.asarray([1, 2, 3])
+        n = int(q_lens.sum())
+        frac = float(np.mean(q_lens))
+        fresh = np.asarray([n, n])          # asarray over a host list
+        return state, frac, fresh
+
+    def admit(self, req):
+        # not a hot name: per-request work may sync freely
+        return float(jnp.mean(req))
+
+
+def train(n):
+    total = jnp.zeros(())
+    for t in range(n):
+        total = total + jax.random.uniform(jax.random.PRNGKey(t))
+    return float(jax.device_get(total))     # after the loop: one sync

@@ -1,0 +1,30 @@
+"""host-sync positive: device syncs inside per-step and driver loops."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Loop:
+    def step(self, state):
+        logits = jax.nn.softmax(state)
+        tok = np.asarray(jnp.argmax(logits))        # FIRE: np.asarray(device)
+        loss = float(jnp.mean(logits))              # FIRE: float(device)
+        return tok, loss
+
+    def helper(self, x):
+        # transitively hot: called from step-family methods elsewhere
+        return x
+
+    def commit(self, contribs):
+        total = jnp.sum(jnp.stack(contribs))
+        return total.item()                         # FIRE: .item()
+
+
+def train(n):
+    metrics = []
+    for t in range(n):
+        val = jax.random.uniform(jax.random.PRNGKey(t))
+        val.block_until_ready()                     # FIRE: driver-loop block
+        out = jax.device_get(val)                   # FIRE: driver-loop get
+        metrics.append(out)
+    return metrics

@@ -1,0 +1,46 @@
+"""prng-reuse near-misses: the derivation idioms the repo uses."""
+import jax
+
+
+def split_between_uses(key):
+    k1, k2 = jax.random.split(key)
+    a = jax.random.normal(k1, (4,))
+    b = jax.random.uniform(k2, (4,))
+    return a + b
+
+
+def fold_per_round(run_key, n):
+    total = 0.0
+    for t in range(n):
+        key_t = jax.random.fold_in(run_key, t)   # fresh every iteration
+        total += jax.random.normal(key_t, ())
+    return total
+
+
+def branch_arms_are_exclusive(key, flag):
+    if flag:
+        return jax.random.normal(key, ())
+    return jax.random.uniform(key, ())           # other arm: one use
+
+
+def early_return(key, replace):
+    keys = jax.random.split(key, 4)
+    if replace:
+        return jax.vmap(lambda k: jax.random.normal(k, ()))(keys)
+    return jax.vmap(lambda k: jax.random.uniform(k, ()))(keys)
+
+
+def deriver_helpers(key_t):
+    # *_keys-named helpers are derivation boundaries, then one use
+    k_part, k_comp = round_keys(key_t)
+    return jax.random.bernoulli(k_part), jax.random.normal(k_comp, ())
+
+
+def round_keys(key):
+    keys = jax.random.split(key, 2)
+    return keys[0], keys[1]
+
+
+def host_introspection(cfg):
+    keys = cfg.keys()                            # dict keys, not PRNG
+    return sorted(keys), list(keys)

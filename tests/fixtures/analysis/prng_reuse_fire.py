@@ -1,0 +1,23 @@
+"""prng-reuse positive: keys consumed twice without re-derivation."""
+import jax
+
+
+def double_consumption(key):
+    a = jax.random.normal(key, (4,))
+    b = jax.random.uniform(key, (4,))       # FIRE: same key, second draw
+    return a + b
+
+
+def loop_replay(key, n):
+    total = 0.0
+    for _ in range(n):
+        # FIRE on the second symbolic iteration: no fold_in/split
+        # between iterations — every round replays round 0
+        total += jax.random.normal(key, ())
+    return total
+
+
+def two_consumers(key, model):
+    mask = jax.random.bernoulli(key, 0.5, (8,))
+    out = model.apply(key, mask)            # FIRE: second consumption
+    return out

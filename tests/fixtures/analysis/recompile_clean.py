@@ -1,0 +1,30 @@
+"""recompile-hazard near-misses: factories, module-scope jits,
+loop-invariant statics."""
+from functools import partial
+
+import jax
+
+
+@partial(jax.jit, static_argnames=("width",))
+def stepper(x, width=4):
+    return x * width
+
+
+DOUBLE = jax.jit(lambda v: v * 2)       # module scope: compiled once
+
+
+def jit_train_step(model):
+    """Factory (trainer idiom): the jit IS the product."""
+    return jax.jit(model.apply, donate_argnums=(0,))
+
+
+def sweep(xs, width):
+    outs = []
+    for x in xs:
+        outs.append(stepper(x, width=width))    # loop-invariant static
+    return outs
+
+
+def main():
+    f = jax.jit(lambda v: v + 1)    # one-shot CLI jit: not a hot path
+    return f(1.0)

@@ -1,0 +1,38 @@
+"""recompile-hazard positives: per-iteration jits, loop-varying
+statics, unhashable static defaults."""
+from functools import partial
+
+import jax
+
+
+@partial(jax.jit, static_argnames=("width",))
+def stepper(x, width=4):
+    return x * width
+
+
+@partial(jax.jit, static_argnames=("shape",))
+def alloc(x, shape=[4, 4]):     # FIRE: unhashable static default
+    return x.reshape(shape)
+
+
+def jit_in_loop(xs):
+    outs = []
+    for x in xs:
+        f = jax.jit(lambda v: v * 2)    # FIRE: fresh cache per iteration
+        outs.append(f(x))
+    return outs
+
+
+class Runner:
+    def step(self, x):
+        f = jax.jit(lambda v: v + 1)    # FIRE: cache dies with the call
+        return f(x)
+
+
+def sweep(xs):
+    outs = []
+    for w, x in enumerate(xs):
+        # FIRE: loop counter into a static parameter — one executable
+        # per distinct value
+        outs.append(stepper(x, width=w))
+    return outs

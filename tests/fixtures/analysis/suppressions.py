@@ -1,0 +1,33 @@
+"""Suppression-machinery fixture: one justified, one reason-less, one
+unknown id, one multi-line-statement standalone."""
+import jax
+
+
+def justified(key):
+    a = jax.random.normal(key, ())
+    # repro: ignore[prng-reuse] -- fixture: deliberate reuse, the
+    # callee derives domain-separated streams internally
+    b = jax.random.uniform(key, ())
+    return a + b
+
+
+def missing_reason(key):
+    a = jax.random.normal(key, ())
+    b = jax.random.uniform(key, ())  # repro: ignore[prng-reuse]
+    return a + b
+
+
+def unknown_id(key):
+    a = jax.random.normal(key, ())
+    # repro: ignore[no-such-checker] -- typo'd checker id
+    b = jax.random.uniform(key, ())
+    return a + b
+
+
+def multiline_statement(key, model):
+    mask = jax.random.bernoulli(key, 0.5, (8,))
+    # repro: ignore[prng-reuse] -- covers the whole call even though
+    # the key sits on the second physical line
+    out = model.apply(mask,
+                      key)
+    return out
