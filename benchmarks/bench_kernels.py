@@ -20,6 +20,8 @@ reports ``speedup = t_unfused / t_fused``.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
@@ -40,6 +42,11 @@ from repro.kernels.paged_attention import (paged_attention_batched_ref,
                                            paged_mla_attention_ref)
 
 SPEEDUP_TARGET = 1.2   # acceptance: fused >= 1.2x on the update phase
+
+# Append-per-run trajectory file (same format as results/BENCH_*.json;
+# benchmarks/README.md).  Self-managed: benchmarks/run.py must NOT dump
+# its generic per-suite json over this path.
+RESULTS_PATH = "results/bench/kernels.json"
 
 
 def hlo_bytes(fn, *args) -> float:
@@ -296,6 +303,45 @@ def run(d: int = 1 << 20, n: int = 8, quick: bool = False):
     return rows
 
 
+def _load_trajectory(path: str = RESULTS_PATH) -> list:
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        data = json.load(f)
+    if data and isinstance(data, list) and \
+            not (isinstance(data[0], dict) and "cells" in data[0]):
+        # pre-trajectory format (a bare — possibly nested — row list):
+        # absorb it as one entry so history survives the conversion
+        flat = []
+        stack = list(data)
+        while stack:
+            item = stack.pop(0)
+            if isinstance(item, list):
+                stack = list(item) + stack
+            elif isinstance(item, dict):
+                flat.append(item)
+        return [{"mode": "legacy", "cells": flat}]
+    return data
+
+
+def _append_trajectory(rows: list, mode: str, path: str = RESULTS_PATH):
+    from repro.obs import provenance
+
+    entry = {
+        "ts": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "mode": mode,
+        "backend": jax.default_backend(),
+        "provenance": provenance.collect(),
+        "cells": rows,
+    }
+    traj = _load_trajectory(path)
+    traj.append(entry)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(traj, f, indent=1, default=str)
+    print(f"  trajectory: appended '{mode}' entry #{len(traj)} to {path}")
+
+
 def main(quick: bool = True):
     rows = run(quick=quick)
     print("# kernel layer: HBM traffic of the control-variate update")
@@ -317,6 +363,7 @@ def main(quick: bool = True):
         print(line)
     if not ok:
         print(f"  WARNING: fused speedup below {SPEEDUP_TARGET}x target")
+    _append_trajectory(rows, mode="smoke" if quick else "full")
     yield rows
 
 

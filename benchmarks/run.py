@@ -46,6 +46,9 @@ def main() -> None:
         "obs": bench_obs.main,
         "roofline": roofline.main,
     }
+    # suites that append to their own trajectory file under results/;
+    # the generic per-suite dump below must not clobber it
+    self_managed = {"kernels"}
     if args.only:
         suites = {k: v for k, v in suites.items() if k == args.only}
     os.makedirs(args.out, exist_ok=True)
@@ -55,8 +58,9 @@ def main() -> None:
         t0 = time.time()
         try:
             results = list(fn(quick=quick))
-            with open(os.path.join(args.out, f"{name}.json"), "w") as f:
-                json.dump(results, f, indent=1, default=str)
+            if name not in self_managed:
+                with open(os.path.join(args.out, f"{name}.json"), "w") as f:
+                    json.dump(results, f, indent=1, default=str)
             print(f"===== {name} done in {time.time()-t0:.1f}s =====",
                   flush=True)
         except Exception:

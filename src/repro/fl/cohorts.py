@@ -205,6 +205,8 @@ class CohortScheduler:
             stale, clients = [], 0
             for ev in arrivals:
                 r, disp, members = jobs.pop(ev.client)
+                obs_trace.flow_end("train.cohort", ev.client,
+                                   track="train")
                 idle[members] = True
                 bits_total += len(members) * wire_per_node
                 s = round_now - r
@@ -242,38 +244,46 @@ class CohortScheduler:
                 # same k_part the dispatch draws internally
                 state, disp, mets = dispatch_fn(state, placed, key,
                                                 jnp.asarray(eff))
-            members = np.nonzero(eff)[0]
-            kept = members
-            if len(members):
-                timings = [self.latency.job(int(i), t, wire_per_node)
-                           for i in members]
-                idle[members] = False
-                # Mid-flight dropout: the gang's lockstep compute
-                # synchronizes over the FULL cohort, then dropped
-                # members vanish in the uplink — their increments are
-                # excised from the dispatch, they rejoin the idle pool
-                # after their compute + rejoin delay, and only the
-                # surviving uplinks race to the arrival time.
-                drop_flags = np.asarray([tm.dropped for tm in timings])
-                kept = members[~drop_flags]
-                compute_max = max(tm.compute_s for tm in timings)
-                for i, tm in zip(members, timings):
-                    if tm.dropped:
-                        dropped_members += 1
-                        q.push(now + tm.compute_s + tm.rejoin_s, REJOIN,
-                               client=int(i), round_idx=t)
-                if len(kept):
-                    if drop_flags.any():
-                        keep = np.zeros(n, np.float32)
-                        keep[kept] = 1.0
-                        disp = self._exclude(disp, jnp.asarray(keep))
-                    net_max = max(tm.network_s
-                                  for tm, dr in zip(timings, drop_flags)
-                                  if not dr)
-                    jobs[t] = (t, disp, kept)
-                    q.push(now + compute_max + net_max, ARRIVAL,
-                           client=t, round_idx=t)
-                    outstanding += 1
+                members = np.nonzero(eff)[0]
+                kept = members
+                if len(members):
+                    timings = [self.latency.job(int(i), t, wire_per_node)
+                               for i in members]
+                    idle[members] = False
+                    # Mid-flight dropout: the gang's lockstep compute
+                    # synchronizes over the FULL cohort, then dropped
+                    # members vanish in the uplink — their increments are
+                    # excised from the dispatch, they rejoin the idle pool
+                    # after their compute + rejoin delay, and only the
+                    # surviving uplinks race to the arrival time.
+                    drop_flags = np.asarray([tm.dropped for tm in timings])
+                    kept = members[~drop_flags]
+                    compute_max = max(tm.compute_s for tm in timings)
+                    for i, tm in zip(members, timings):
+                        if tm.dropped:
+                            dropped_members += 1
+                            q.push(now + tm.compute_s + tm.rejoin_s,
+                                   REJOIN, client=int(i), round_idx=t)
+                    if len(kept):
+                        if drop_flags.any():
+                            keep = np.zeros(n, np.float32)
+                            keep[kept] = 1.0
+                            disp = self._exclude(disp, jnp.asarray(keep))
+                        net_max = max(tm.network_s
+                                      for tm, dr in zip(timings,
+                                                        drop_flags)
+                                      if not dr)
+                        jobs[t] = (t, disp, kept)
+                        q.push(now + compute_max + net_max, ARRIVAL,
+                               client=t, round_idx=t, flow_id=t)
+                        outstanding += 1
+                        # One flow per cohort: the gang is the unit of
+                        # causality here (flow id = dispatch round).
+                        obs_trace.flow_start(
+                            "train.cohort", t, track="train",
+                            round=t, members=len(kept),
+                            compute_s=compute_max, network_s=net_max,
+                            bits=len(kept) * wire_per_node)
             if not len(kept) and outstanding == 0:
                 if len(q):
                     # only rejoins can be on the heap: advance to the
@@ -309,7 +319,10 @@ class CohortScheduler:
             if target > 0:
                 arrivals = collect(target)
                 with obs_trace.span("train.commit", track="train",
-                                    round=t, cohorts=target) as sp:
+                                    round=t, cohorts=target,
+                                    unit_ids=[int(ev.flow_id)
+                                              for ev in arrivals
+                                              if ev.flow_id >= 0]) as sp:
                     stale, clients = commit(arrivals, t)
                     sp.set(clients=clients)
             rows.append(dict(
@@ -333,7 +346,10 @@ class CohortScheduler:
             chunk = outstanding if K is None else 1
             arrivals = collect(chunk)
             with obs_trace.span("train.commit", track="train",
-                                round=t_eff, cohorts=chunk) as sp:
+                                round=t_eff, cohorts=chunk,
+                                unit_ids=[int(ev.flow_id)
+                                          for ev in arrivals
+                                          if ev.flow_id >= 0]) as sp:
                 stale, clients = commit(arrivals, t_eff)
                 sp.set(clients=clients)
             t_eff += 1
@@ -367,6 +383,7 @@ class CohortScheduler:
         reg.gauge("train.bits_sent").set(float(bits_total))
         reg.gauge("train.committed").set(float(result.committed.sum()))
         reg.gauge("train.virtual_time").set(float(now))
+        obs_trace.clear_virtual_time()
         return state, result
 
 

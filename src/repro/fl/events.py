@@ -36,6 +36,11 @@ class Event:
     kind: str = dataclasses.field(compare=False)
     client: int = dataclasses.field(compare=False)
     round_idx: int = dataclasses.field(compare=False)
+    # Trace-context propagation (DESIGN.md §15): the flow id of the
+    # contribution/message this event carries, or -1 when the event is
+    # not part of a causal chain (rejoins, drops, untraced runs).  Not
+    # part of the replay-determinism ordering or the log_tuples record.
+    flow_id: int = dataclasses.field(compare=False, default=-1)
 
 
 class EventQueue:
@@ -48,9 +53,9 @@ class EventQueue:
         self.log: List[Event] = []
 
     def push(self, time: float, kind: str, client: int,
-             round_idx: int) -> Event:
+             round_idx: int, flow_id: int = -1) -> Event:
         ev = Event(time=float(time), seq=self._seq, kind=kind,
-                   client=client, round_idx=round_idx)
+                   client=client, round_idx=round_idx, flow_id=flow_id)
         self._seq += 1
         heapq.heappush(self._heap, ev)
         return ev

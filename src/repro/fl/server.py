@@ -80,6 +80,7 @@ class _Job(NamedTuple):
     m: np.ndarray          # (d,) compressed message
     h: np.ndarray          # (d,) tracker row after the client's update
     hij: Optional[np.ndarray]   # (m, d) component-tracker delta
+    fid: int = -1          # trace flow id (dispatch -> commit arrow)
 
 
 @dataclasses.dataclass
@@ -168,6 +169,7 @@ class AsyncDashaServer:
         obs_trace.set_virtual_time(now)
         idle = np.ones(n, bool)
         jobs: Dict[int, _Job] = {}
+        next_fid = 0                  # trace flow ids (one per job)
         outstanding = 0               # undelivered ARRIVAL events
         # (client, start, duration) busy windows — clipped to the final
         # virtual clock at the end, so utilization stays in [0, 1] even
@@ -206,6 +208,9 @@ class AsyncDashaServer:
             stale = []
             for slot, ev in enumerate(arrivals):
                 job = jobs.pop(ev.client)
+                if job.fid >= 0:
+                    obs_trace.flow_end("async.contrib", job.fid,
+                                       track="async")
                 idle[ev.client] = True
                 bits_total += wire_bits
                 s = round_now - job.round_idx
@@ -246,25 +251,34 @@ class AsyncDashaServer:
             with obs_trace.span("fleet.dispatch", track="async",
                                 round=t, cohort=int(eff.sum())):
                 out = self._dispatch(key_t, state, jnp.asarray(eff))
-            m_np = np.asarray(out.m_i, np.float32)
-            h_np = np.asarray(out.h_new, np.float32)
-            hij_np = (np.asarray(out.h_ij_delta, np.float32)
-                      if has_hij else None)
-            for i in np.nonzero(eff)[0]:
-                timing = self.latency.job(int(i), t, wire_bits)
-                idle[i] = False
-                if timing.dropped:
-                    dropped += 1
-                    busy.append((int(i), now, timing.compute_s))
-                    q.push(now + timing.compute_s + timing.rejoin_s,
-                           REJOIN, int(i), t)
-                else:
-                    dur = timing.compute_s + timing.network_s
-                    busy.append((int(i), now, dur))
-                    jobs[int(i)] = _Job(t, m_np[i], h_np[i],
-                                        hij_np[i] if has_hij else None)
-                    q.push(now + dur, ARRIVAL, int(i), t)
-                    outstanding += 1
+                m_np = np.asarray(out.m_i, np.float32)
+                h_np = np.asarray(out.h_new, np.float32)
+                hij_np = (np.asarray(out.h_ij_delta, np.float32)
+                          if has_hij else None)
+                for i in np.nonzero(eff)[0]:
+                    timing = self.latency.job(int(i), t, wire_bits)
+                    idle[i] = False
+                    if timing.dropped:
+                        dropped += 1
+                        busy.append((int(i), now, timing.compute_s))
+                        q.push(now + timing.compute_s + timing.rejoin_s,
+                               REJOIN, int(i), t)
+                    else:
+                        dur = timing.compute_s + timing.network_s
+                        busy.append((int(i), now, dur))
+                        fid = next_fid
+                        next_fid += 1
+                        jobs[int(i)] = _Job(t, m_np[i], h_np[i],
+                                            hij_np[i] if has_hij else None,
+                                            fid=fid)
+                        q.push(now + dur, ARRIVAL, int(i), t,
+                               flow_id=fid)
+                        outstanding += 1
+                        obs_trace.flow_start(
+                            "async.contrib", fid, track="async",
+                            client=int(i), round=t,
+                            compute_s=timing.compute_s,
+                            network_s=timing.network_s, bits=wire_bits)
             state = state._replace(x=out.x_new, step=state.step + 1)
 
             target = outstanding if K is None else min(K, outstanding)
@@ -289,7 +303,10 @@ class AsyncDashaServer:
             elif target > 0:
                 arrivals = collect(target)
                 with obs_trace.span("fleet.commit", track="async",
-                                    round=t, units=target) as sp:
+                                    round=t, units=target,
+                                    unit_ids=[int(ev.flow_id)
+                                              for ev in arrivals
+                                              if ev.flow_id >= 0]) as sp:
                     state, stale = commit(arrivals, t)
                     sp.set(committed=len(stale))
             loss, gnsq = self._measure(state.x)
@@ -312,7 +329,10 @@ class AsyncDashaServer:
             chunk = outstanding if K is None else min(K, outstanding)
             arrivals = collect(chunk)
             with obs_trace.span("fleet.commit", track="async",
-                                round=t_eff, units=chunk) as sp:
+                                round=t_eff, units=chunk,
+                                unit_ids=[int(ev.flow_id)
+                                          for ev in arrivals
+                                          if ev.flow_id >= 0]) as sp:
                 state, stale = commit(arrivals, t_eff)
                 sp.set(committed=len(stale))
             t_eff += 1
@@ -350,4 +370,5 @@ class AsyncDashaServer:
             float(result.committed.sum()))
         reg.gauge("fleet.async.dropped").set(float(dropped))
         reg.gauge("fleet.async.virtual_time").set(float(now))
+        obs_trace.clear_virtual_time()
         return state, result

@@ -616,9 +616,11 @@ class HierarchicalFleet:
                        for vec, _ in groups.values())
             if tier.latency is not None:
                 timing = tier.latency.job(j, flush_seq[(k, j)], bits)
-                delay = timing.compute_s + timing.network_s
+                link_compute_s = timing.compute_s
+                link_network_s = timing.network_s
             else:
-                delay = 0.0
+                link_compute_s = link_network_s = 0.0
+            delay = link_compute_s + link_network_s
             flush_seq[(k, j)] += 1
             if forced:
                 forced_flushes += 1
@@ -626,10 +628,21 @@ class HierarchicalFleet:
             next_id += 1
             msgs[mid] = _Msg(src_tier=k, src_agg=j, groups=groups,
                              bits=bits, n_members=len(members))
-            q.push(now + delay, TIER_ARRIVAL, mid, round_now)
-            obs_trace.instant("fleet.flush", track="fleet", tier=k, agg=j,
-                              members=len(members), bits=bits,
-                              forced=forced)
+            q.push(now + delay, TIER_ARRIVAL, mid, round_now,
+                   flow_id=mid)
+            # Span (not instant) so the flow arrows have a slice to bind
+            # to; args carry the causal edge set (inputs -> mid) and the
+            # link pricing the critical-path engine re-walks.
+            with obs_trace.span("fleet.flush", track="fleet", tier=k,
+                                agg=j, mid=mid,
+                                inputs=[int(i) for i in items],
+                                members=len(members), bits=bits,
+                                forced=forced,
+                                link_compute_s=link_compute_s,
+                                link_network_s=link_network_s):
+                for cid in members:
+                    obs_trace.flow_step("fleet.contrib", cid,
+                                        track="fleet")
             message_log.append(MessageRecord(
                 tier=k, agg=j, round_idx=round_now, bits=bits,
                 n_groups=len(groups), n_members=len(members),
@@ -725,7 +738,9 @@ class HierarchicalFleet:
 
         def commit_traced(ncommit: int) -> Tuple[List[int], int]:
             with obs_trace.span("fleet.commit", track="fleet",
-                                round=round_now, units=ncommit) as sp:
+                                round=round_now, units=ncommit,
+                                unit_ids=[int(i) for i in
+                                          root_buffer[:ncommit]]) as sp:
                 stale, nmsgs = commit(ncommit)
                 sp.set(committed=len(stale))
             obs_trace.counter("fleet.bits_cum", float(hop_bits.sum()),
@@ -764,6 +779,8 @@ class HierarchicalFleet:
                         policy.observe(s)
                     g = g + (w / n) * vec
                     for cid in cids:
+                        obs_trace.flow_end("fleet.contrib", cid,
+                                           track="fleet")
                         c = contribs.pop(cid)
                         hop_list = hops.pop(cid, [])
                         idle[c.client] = True
@@ -820,28 +837,36 @@ class HierarchicalFleet:
             with obs_trace.span("fleet.dispatch", track="fleet",
                                 round=t, cohort=int(eff.sum())):
                 disp = wl.dispatch(key_t, t, x, g, store, eff)
-            x = disp.x_new
-            for row_i, client in enumerate(disp.idx):
-                client = int(client)
-                timing = self.latency.job(client, t, wl.wire_bits)
-                idle[client] = False
-                arrival_t = now + timing.compute_s + timing.network_s
-                for agg in self._path(client):
-                    pending[agg] += 1
-                pending[ROOT] += 1
-                if timing.dropped:
-                    q.push(arrival_t, DROP, client, t)
-                else:
-                    cid = next_id
-                    next_id += 1
-                    contribs[cid] = _Contrib(
-                        client=client, round_idx=t, m=disp.m_rows[row_i],
-                        h=disp.h_rows[row_i],
-                        hij=(disp.hij_rows[row_i]
-                             if disp.hij_rows is not None else None))
-                    hops[cid] = []
-                    client_cid[client] = cid
-                    q.push(arrival_t, ARRIVAL, client, t)
+                x = disp.x_new
+                for row_i, client in enumerate(disp.idx):
+                    client = int(client)
+                    timing = self.latency.job(client, t, wl.wire_bits)
+                    idle[client] = False
+                    arrival_t = now + timing.compute_s + timing.network_s
+                    for agg in self._path(client):
+                        pending[agg] += 1
+                    pending[ROOT] += 1
+                    if timing.dropped:
+                        q.push(arrival_t, DROP, client, t)
+                    else:
+                        cid = next_id
+                        next_id += 1
+                        contribs[cid] = _Contrib(
+                            client=client, round_idx=t,
+                            m=disp.m_rows[row_i],
+                            h=disp.h_rows[row_i],
+                            hij=(disp.hij_rows[row_i]
+                                 if disp.hij_rows is not None else None))
+                        hops[cid] = []
+                        client_cid[client] = cid
+                        q.push(arrival_t, ARRIVAL, client, t,
+                               flow_id=cid)
+                        obs_trace.flow_start(
+                            "fleet.contrib", cid, track="fleet",
+                            client=client, round=t,
+                            compute_s=timing.compute_s,
+                            network_s=timing.network_s,
+                            bits=wl.wire_bits)
 
             stale: List[int] = []
             nmsgs = 0
@@ -892,4 +917,7 @@ class HierarchicalFleet:
         obs_metrics.publish_fleet(result)
         if obs_trace.active():
             obs_monitors.run_fleet_monitors(result)
+        # Drop the simulated clock so a later run on the same tracer
+        # cannot emit virtual twins against this run's final time.
+        obs_trace.clear_virtual_time()
         return FleetState(x=x, g=g, store=store), result

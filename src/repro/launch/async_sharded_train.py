@@ -137,7 +137,8 @@ def main():
                              "arch": args.arch})
     logger = MetricsLogger(args.log, name="async_sharded_train",
                            print_every=max(1, args.rounds // 10))
-    with use_mesh(mesh):
+    from repro.obs import profiler_trace
+    with use_mesh(mesh), profiler_trace(args.profile_dir):
         state, res = train_async(trainer, state, batches(), args.rounds,
                                  latency, config=ccfg, availability=avail,
                                  logger=logger,

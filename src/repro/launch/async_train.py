@@ -94,8 +94,10 @@ def main():
                     use_pallas=args.use_pallas),
         latency)
 
-    state, res = srv.run(jax.random.key(args.seed + 1),
-                         jnp.zeros(args.d), args.rounds)
+    from repro.obs import profiler_trace
+    with profiler_trace(args.profile_dir):
+        state, res = srv.run(jax.random.key(args.seed + 1),
+                             jnp.zeros(args.d), args.rounds)
 
     logger = MetricsLogger(args.log, name="async_train",
                            print_every=max(1, len(res.time) // 20))

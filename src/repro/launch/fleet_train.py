@@ -124,7 +124,7 @@ def main():
         lat_kw.update(sigma=args.sigma, client_sigma=args.sigma)
     latency = make_latency(args.latency, **lat_kw)
 
-    from repro.obs import start_run
+    from repro.obs import profiler_trace, start_run
     obsrun = start_run(trace_out=args.trace_out,
                        metrics_out=args.metrics_out,
                        meta={"cli": "fleet_train",
@@ -132,8 +132,9 @@ def main():
     fleet = HierarchicalFleet(wl, fcfg, latency,
                               store_backend=args.store,
                               store_dir=args.store_dir)
-    fs, res = fleet.run(jax.random.key(args.seed + 1),
-                        np.zeros(args.d, np.float32), args.rounds)
+    with profiler_trace(args.profile_dir):
+        fs, res = fleet.run(jax.random.key(args.seed + 1),
+                            np.zeros(args.d, np.float32), args.rounds)
 
     logger = MetricsLogger(args.log, name="fleet_train",
                            print_every=max(1, len(res.time) // 20))

@@ -122,8 +122,11 @@ def main():
                     max_new_tokens=args.new_tokens)
             for i in range(args.requests)]
     import time
+
+    from repro.obs import profiler_trace
     t0 = time.time()
-    done = server.run(reqs)
+    with profiler_trace(args.profile_dir):
+        done = server.run(reqs)
     dt = time.time() - t0
     tot = sum(len(r.generated) for r in done)
     print(f"served {len(done)} requests, {tot} tokens, "

@@ -117,7 +117,8 @@ def main():
                        metrics_out=args.metrics_out,
                        meta={"cli": "train", "arch": args.arch,
                              "variant": args.variant})
-    with use_mesh(mesh):
+    from repro.obs import profiler_trace
+    with use_mesh(mesh), profiler_trace(args.profile_dir):
         train(trainer, state, batches(), num_steps=args.steps,
               logger=MetricsLogger(args.log, print_every=10),
               checkpoint_dir=args.ckpt,

@@ -30,7 +30,7 @@ __all__ = [
     "Counter", "Gauge", "Histogram", "JsonlSink", "Registry",
     "get_registry", "MonitorResult", "ObsWarning", "Tracer", "active",
     "counter", "instant", "kernel_scope", "set_virtual_time", "span",
-    "traced", "ObsRun", "start_run", "add_cli_flags",
+    "traced", "ObsRun", "start_run", "add_cli_flags", "profiler_trace",
 ]
 
 
@@ -88,9 +88,28 @@ def start_run(trace_out: Optional[str] = None,
 
 
 def add_cli_flags(ap) -> None:
-    """Attach the standard ``--trace-out`` / ``--metrics-out`` flags."""
+    """Attach the standard ``--trace-out`` / ``--metrics-out`` /
+    ``--profile-dir`` flags."""
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="write a Chrome trace-event JSON (open in "
                          "https://ui.perfetto.dev)")
     ap.add_argument("--metrics-out", default=None, metavar="PATH",
                     help="write a metrics registry snapshot JSON")
+    ap.add_argument("--profile-dir", default=None, metavar="DIR",
+                    help="capture the hot section with jax.profiler "
+                         "(TensorBoard/Perfetto-loadable; the "
+                         "repro.kernel.* named scopes appear in the "
+                         "device trace)")
+
+
+def profiler_trace(profile_dir: Optional[str]):
+    """``jax.profiler.trace(profile_dir)`` as a context manager, or a
+    no-op context when ``profile_dir`` is None (or jax is absent — the
+    obs core stays stdlib-only).  The launch CLIs wrap their hot
+    section in this so ``--profile-dir`` captures the 14
+    ``kernel_scope`` names in a real device profile alongside our
+    spans."""
+    if not profile_dir:
+        return trace._NULL_SPAN
+    import jax
+    return jax.profiler.trace(profile_dir)

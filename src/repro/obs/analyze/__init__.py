@@ -1,0 +1,33 @@
+"""Trace analytics over the obs artifacts (DESIGN.md §15).
+
+Three engines, one per artifact family:
+
+- :mod:`critical_path` — walks a fleet/async trace's flow links
+  backward from each committed round and decomposes the bounding chain
+  into compute / network / buffer-wait / forced-flush / root-wait
+  segments, with exact per-hop bit reconciliation against the
+  ``fleet.tier_bits`` metrics ledger.
+- :mod:`rollup` — flamegraph-style span-tree aggregation (self-time vs
+  child-time per span name) for any Chrome trace, serving traces
+  included.
+- :mod:`trajectory` — drift/changepoint detection across *all* entries
+  of the append-per-run ``results/BENCH_*.json`` trajectory files (CI's
+  pairwise baseline gate only sees the last committed entry).
+
+Surfaced by ``python -m repro.obs.report``; artifact schema checked by
+``repro.obs.validate`` (``tool == "repro.obs.report"``).
+"""
+from repro.obs.analyze.critical_path import (   # noqa: F401
+    CriticalPathResult, RoundPath, analyze_critical_path,
+    reconcile_bits,
+)
+from repro.obs.analyze.rollup import span_rollup        # noqa: F401
+from repro.obs.analyze.trajectory import (      # noqa: F401
+    TrajectoryFinding, analyze_trajectory,
+)
+
+__all__ = [
+    "CriticalPathResult", "RoundPath", "analyze_critical_path",
+    "reconcile_bits", "span_rollup", "TrajectoryFinding",
+    "analyze_trajectory",
+]

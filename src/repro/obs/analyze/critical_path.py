@@ -1,0 +1,232 @@
+"""Per-round critical-path attribution over the fleet trace flow graph.
+
+The fleet runtime (``fl/tree.py``) emits, on the virtual-clock pid:
+
+- ``fleet.contrib`` flow starts (ph "s") at dispatch, whose args carry
+  the latency-model pricing of that client's leg (``compute_s``,
+  ``network_s``) and its uplink ``bits``;
+- ``fleet.flush`` spans whose args carry the causal edge set
+  (``inputs`` — the cids/mids merged — and the created ``mid``) plus
+  the link pricing (``link_compute_s``/``link_network_s``) and the
+  merged message ``bits``;
+- ``fleet.commit`` spans whose args carry ``unit_ids`` — the root-buffer
+  items the commit consumed.
+
+That is a complete event graph: every committed unit can be walked back
+to the client dispatch that originated its bounding chain, and because
+each edge is priced by the same latency models the simulator ran, the
+walk decomposes the round's virtual time *exactly* (telescoping sum)
+into
+
+    client compute + network (uplink + per-hop links)
+    + buffer wait (time a contribution sat in an under-full buffer)
+    + forced-flush wait (same, when the flush was the timeout path)
+    + root wait (arrival at the root buffer -> commit instant)
+
+On a zero-jitter barrier run every wait is zero and each round's total
+collapses to the slowest participating client's compute + uplink chain
+— the paper's per-round cost model, now machine-checked
+(tests/test_trace_analytics.py).
+
+Bit reconciliation: summing ``bits`` over the contrib flow starts
+(hop 0) and over the flush spans of tier k (hop k+1) must reproduce the
+``fleet.tier_bits.hop<k>`` gauges of the metrics snapshot *exactly* —
+the trace and the ledger are two exports of the same accounting.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Mapping, Optional
+
+from repro.obs.trace import VIRTUAL_PID
+
+__all__ = ["RoundPath", "CriticalPathResult", "analyze_critical_path",
+           "reconcile_bits"]
+
+_S = 1e6    # seconds -> trace microseconds
+
+
+@dataclasses.dataclass
+class RoundPath:
+    """The bounding chain of one committed round."""
+    round_idx: int
+    commit_ts_us: float
+    dispatch_ts_us: float
+    total_us: float
+    bound_client: int
+    bound_dispatch_round: int
+    # unit ids along the chain, client contribution first
+    chain: List[int]
+    compute_us: float
+    network_us: float
+    buffer_wait_us: float
+    forced_flush_us: float
+    root_wait_us: float
+    path_bits: float
+    units: int
+
+    def segments(self) -> Dict[str, float]:
+        return {"compute_us": self.compute_us,
+                "network_us": self.network_us,
+                "buffer_wait_us": self.buffer_wait_us,
+                "forced_flush_us": self.forced_flush_us,
+                "root_wait_us": self.root_wait_us}
+
+    def residual_us(self) -> float:
+        """Decomposition error (fp rounding only; ~0 by construction)."""
+        return self.total_us - sum(self.segments().values())
+
+
+@dataclasses.dataclass
+class CriticalPathResult:
+    rounds: List[RoundPath]
+    bits_by_hop: Dict[int, float]       # hop index -> total bits seen
+    flow_name: str                      # "fleet.contrib" etc.
+
+    def totals(self) -> Dict[str, float]:
+        keys = ("compute_us", "network_us", "buffer_wait_us",
+                "forced_flush_us", "root_wait_us")
+        return {k: sum(getattr(r, k) for r in self.rounds) for k in keys}
+
+
+def _virtual_events(doc: Mapping[str, Any]) -> List[Dict[str, Any]]:
+    evs = doc.get("traceEvents", [])
+    return [e for e in evs if e.get("pid") == VIRTUAL_PID]
+
+
+def analyze_critical_path(doc: Mapping[str, Any],
+                          flow_name: str = "fleet.contrib",
+                          span_prefix: str = "fleet"
+                          ) -> Optional[CriticalPathResult]:
+    """Attribute each committed round of a fleet trace to its bounding
+    chain.  Returns ``None`` when the trace carries no virtual-clock
+    flow graph (serving traces, untraced runs)."""
+    vevs = _virtual_events(doc)
+    contribs: Dict[int, Dict[str, Any]] = {}
+    flushes: Dict[int, Dict[str, Any]] = {}     # keyed by created mid
+    commits: List[Dict[str, Any]] = []
+    for e in vevs:
+        name = e.get("name")
+        if e.get("ph") == "s" and name == flow_name:
+            contribs[e["id"]] = e
+        elif e.get("ph") == "X" and name == f"{span_prefix}.flush":
+            args = e.get("args", {})
+            if "mid" in args:
+                flushes[args["mid"]] = e
+        elif e.get("ph") == "X" and name == f"{span_prefix}.commit":
+            commits.append(e)
+    if not contribs:
+        return None
+
+    def arrival_us(uid: int) -> float:
+        """Virtual instant unit ``uid`` reached its parent buffer."""
+        if uid in flushes:
+            f = flushes[uid]
+            a = f.get("args", {})
+            return f["ts"] + (a.get("link_compute_s", 0.0)
+                              + a.get("link_network_s", 0.0)) * _S
+        c = contribs[uid]
+        a = c.get("args", {})
+        return c["ts"] + (a.get("compute_s", 0.0)
+                          + a.get("network_s", 0.0)) * _S
+
+    def known(uid: int) -> bool:
+        return uid in flushes or uid in contribs
+
+    rounds: List[RoundPath] = []
+    for ce in commits:
+        cargs = ce.get("args", {})
+        units = [u for u in cargs.get("unit_ids", []) if known(u)]
+        if not units:
+            continue
+        commit_ts = ce["ts"]
+        bound = max(units, key=arrival_us)
+        chain: List[int] = []
+        comp = net = bwait = fwait = 0.0
+        path_bits = 0.0
+        uid = bound
+        # walk down: message -> bounding input -> ... -> contribution
+        while uid in flushes:
+            f = flushes[uid]
+            fa = f.get("args", {})
+            chain.append(uid)
+            comp += fa.get("link_compute_s", 0.0) * _S
+            net += fa.get("link_network_s", 0.0) * _S
+            path_bits += fa.get("bits", 0.0)
+            inputs = [i for i in fa.get("inputs", []) if known(i)]
+            if not inputs:
+                break
+            binput = max(inputs, key=arrival_us)
+            wait = max(f["ts"] - arrival_us(binput), 0.0)
+            if fa.get("forced"):
+                fwait += wait
+            else:
+                bwait += wait
+            uid = binput
+        if uid not in contribs:
+            continue     # chain truncated (dropped buffer prefix)
+        chain.append(uid)
+        ca = contribs[uid].get("args", {})
+        comp += ca.get("compute_s", 0.0) * _S
+        net += ca.get("network_s", 0.0) * _S
+        path_bits += ca.get("bits", 0.0)
+        dispatch_ts = contribs[uid]["ts"]
+        total = commit_ts - dispatch_ts
+        root_wait = max(commit_ts - arrival_us(bound), 0.0)
+        rounds.append(RoundPath(
+            round_idx=int(cargs.get("round", -1)),
+            commit_ts_us=commit_ts, dispatch_ts_us=dispatch_ts,
+            total_us=total,
+            bound_client=int(ca.get("client", -1)),
+            bound_dispatch_round=int(ca.get("round", -1)),
+            chain=list(reversed(chain)),
+            compute_us=comp, network_us=net, buffer_wait_us=bwait,
+            forced_flush_us=fwait, root_wait_us=root_wait,
+            path_bits=path_bits, units=len(units)))
+
+    bits_by_hop: Dict[int, float] = {0: 0.0}
+    for c in contribs.values():
+        bits_by_hop[0] += c.get("args", {}).get("bits", 0.0)
+    for f in flushes.values():
+        fa = f.get("args", {})
+        hop = int(fa.get("tier", 0)) + 1
+        bits_by_hop[hop] = bits_by_hop.get(hop, 0.0) \
+            + fa.get("bits", 0.0)
+    return CriticalPathResult(rounds=rounds, bits_by_hop=bits_by_hop,
+                              flow_name=flow_name)
+
+
+def reconcile_bits(cp: CriticalPathResult,
+                   metrics_doc: Mapping[str, Any],
+                   atol: float = 0.0) -> Dict[str, Any]:
+    """Check the trace-derived per-hop bit totals against the
+    ``fleet.tier_bits.hop<k>`` gauges of a metrics snapshot.  Exact by
+    default (``atol=0``): both sides are sums of the same per-message
+    floats."""
+    metrics = metrics_doc.get("metrics", {})
+    hops: Dict[str, Dict[str, Any]] = {}
+    ok = True
+    found_any = False
+    for k in sorted(cp.bits_by_hop):
+        gauge = metrics.get(f"fleet.tier_bits.hop{k}")
+        if gauge is None:
+            hops[str(k)] = {"trace_bits": cp.bits_by_hop[k],
+                            "ledger_bits": None, "match": None}
+            continue
+        found_any = True
+        ledger = float(gauge.get("value", float("nan")))
+        match = abs(cp.bits_by_hop[k] - ledger) <= atol
+        ok = ok and match
+        hops[str(k)] = {"trace_bits": cp.bits_by_hop[k],
+                        "ledger_bits": ledger, "match": match}
+    total_gauge = metrics.get("fleet.tier_bits")
+    if total_gauge is not None:
+        found_any = True
+        ledger_total = float(total_gauge.get("value", float("nan")))
+        trace_total = sum(cp.bits_by_hop.values())
+        match = abs(trace_total - ledger_total) <= atol
+        ok = ok and match
+        hops["total"] = {"trace_bits": trace_total,
+                         "ledger_bits": ledger_total, "match": match}
+    return {"ledger_ok": bool(ok and found_any), "hops": hops,
+            "ledger_found": found_any}

@@ -1,0 +1,53 @@
+"""Flamegraph-style span-tree rollups for Chrome traces.
+
+Nesting is recovered per (pid, tid) lane from interval containment —
+the exporter writes complete events (ph "X"), so after sorting a lane
+by (start, -duration) a span's direct parent is the innermost still-open
+interval that contains it.  Self time is a span's duration minus that
+of its direct children; aggregating (count, total, self) by span name
+yields the flamegraph view of where a trace's time actually went
+(serve passes vs admission vs prefill, commit vs dispatch, ...).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Mapping, Optional, Tuple
+
+from repro.obs.trace import WALL_PID
+
+__all__ = ["span_rollup"]
+
+
+def span_rollup(doc: Mapping[str, Any], pid: Optional[int] = WALL_PID
+                ) -> List[Dict[str, Any]]:
+    """Aggregate ph-"X" spans by name: per-name call count, inclusive
+    (total), exclusive (self) and direct-child time in microseconds,
+    sorted by self time descending.  ``pid=None`` rolls up every
+    process."""
+    by_lane: Dict[Tuple[Any, Any], List[Dict[str, Any]]] = {}
+    for e in doc.get("traceEvents", []):
+        if e.get("ph") == "X" and (pid is None or e.get("pid") == pid):
+            by_lane.setdefault((e.get("pid"), e.get("tid")),
+                               []).append(e)
+    agg: Dict[str, Dict[str, Any]] = {}
+    for lane in by_lane.values():
+        # parents sort before their children: earlier start, then
+        # longer duration (events are appended at finish time, so the
+        # raw order is close-order, not open-order)
+        lane.sort(key=lambda e: (e["ts"], -float(e.get("dur", 0.0))))
+        stack: List[Tuple[float, Dict[str, Any]]] = []  # (end, name row)
+        for e in lane:
+            ts, dur = float(e["ts"]), float(e.get("dur", 0.0))
+            while stack and ts >= stack[-1][0]:
+                stack.pop()
+            row = agg.setdefault(e["name"], {"name": e["name"],
+                                             "count": 0,
+                                             "total_us": 0.0,
+                                             "child_us": 0.0})
+            row["count"] += 1
+            row["total_us"] += dur
+            if stack:
+                stack[-1][1]["child_us"] += dur
+            stack.append((ts + dur, row))
+    for row in agg.values():
+        row["self_us"] = row["total_us"] - row["child_us"]
+    return sorted(agg.values(), key=lambda r: -r["self_us"])

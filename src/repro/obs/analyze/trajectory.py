@@ -1,0 +1,203 @@
+"""Drift / changepoint detection over bench trajectory files.
+
+The bench suites append one provenance-stamped entry per run to
+``results/BENCH_serving.json`` / ``results/BENCH_fleet.json`` /
+``results/bench/kernels.json``.  CI's ``--check-baseline`` gate is
+pairwise — latest run vs the last committed same-mode entry — so a slow
+regression that stays inside the pairwise noise band every run walks
+the baseline down unchallenged.  This analyzer reads *all* entries.
+
+Series extraction.  Every entry contributes its ``cells`` (plus
+``decode`` cells for the serving bench).  Within a cell, int/str/bool
+items are the cell *identity* (dims: ``n``, ``name``, ``mode``, ...)
+and float items are *metrics*; one series per
+(mode, cell-identity, metric), in timestamp order, restricted to the
+same backend family as the latest entry.
+
+Detectors, per series:
+
+- **Drift**: latest value vs the median of all prior values.  The
+  threshold is direction- and class-aware: wall-clock-ish metrics
+  (tok/s, wall seconds, microseconds, speedups) are noisy — the flag
+  fires when the latest is worse than ``NOISY_RATIO`` (0.6, matching
+  the serving bench's ``DECODE_RATIO_NOISE``) of baseline — while
+  deterministic counters (bytes, bits, byte ratios) must not move at
+  all (``EXACT_RTOL``).  A drift in the *good* direction is reported as
+  an ``improvement`` (informational, never counted as a failure);
+  metrics with unknown direction flag symmetrically as ``changepoint``.
+- **Level shift**: for series of >= 4 points, the best split into a
+  left/right half (>= 2 points each) whose medians differ beyond the
+  class threshold — catches a sustained step that predates the latest
+  run, which the pairwise gate has long since accepted.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from statistics import median
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
+
+__all__ = ["TrajectoryFinding", "analyze_trajectory",
+           "load_trajectory_entries", "NOISY_RATIO", "EXACT_RTOL"]
+
+# Worse-than ratio that flags a noisy (wall-clock) metric; matches the
+# serving bench's pairwise DECODE_RATIO_NOISE so the two gates agree on
+# what "noise" is.  A 2x slowdown (ratio 0.5) always fires.
+NOISY_RATIO = 0.6
+# Deterministic counters (byte/bit accounting) must reproduce exactly
+# modulo fp printing; anything beyond this is a real change.
+EXACT_RTOL = 1e-6
+
+# Metric-name direction/class table.  Substring match, first hit wins.
+# (+1: higher is better, -1: lower is better, 0: unknown direction.)
+_NOISY = [("tok_s", +1), ("speedup", +1), ("decode_ratio", +1),
+          ("wall_s", -1), ("_us", -1), ("us_", -1), ("latency", -1),
+          ("ttft", -1), ("p50", -1), ("p95", -1), ("time", -1)]
+_EXACT = [("bytes", -1), ("bits", -1), ("ratio", -1), ("max_err", -1),
+          ("count", 0), ("pages", -1)]
+
+
+def _classify(metric: str) -> Tuple[str, int]:
+    low = metric.lower()
+    for sub, direction in _NOISY:
+        if sub in low:
+            return "noisy", direction
+    for sub, direction in _EXACT:
+        if sub in low:
+            return "exact", direction
+    return "unknown", 0
+
+
+@dataclasses.dataclass
+class TrajectoryFinding:
+    kind: str          # "regression" | "improvement" | "changepoint"
+    detector: str      # "drift" | "level_shift"
+    mode: str
+    cell: str          # rendered cell identity
+    metric: str
+    baseline: float
+    latest: float
+    ratio: float       # latest / baseline
+    n_points: int
+
+    def as_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+def load_trajectory_entries(path: str) -> List[Dict[str, Any]]:
+    """Read a trajectory file; a legacy bare list of cells is absorbed
+    as a single ``mode="legacy"`` entry (same rule as the benches)."""
+    with open(path) as f:
+        doc = json.load(f)
+    if not isinstance(doc, list):
+        raise ValueError(f"{path}: trajectory must be a JSON list")
+    if doc and not (isinstance(doc[0], dict) and "cells" in doc[0]):
+        return [{"ts": 0.0, "mode": "legacy", "cells": _flatten(doc)}]
+    return doc
+
+
+def _flatten(rows: Any) -> List[Dict[str, Any]]:
+    out: List[Dict[str, Any]] = []
+    for r in rows:
+        if isinstance(r, list):
+            out.extend(_flatten(r))
+        elif isinstance(r, dict):
+            out.append(r)
+    return out
+
+
+def _cells(entry: Mapping[str, Any]) -> List[Dict[str, Any]]:
+    cells = list(entry.get("cells") or [])
+    cells.extend(entry.get("decode") or [])
+    return [c for c in cells if isinstance(c, dict)]
+
+
+def _cell_key(cell: Mapping[str, Any]) -> str:
+    dims = {k: v for k, v in cell.items()
+            if isinstance(v, (str, bool)) or
+            (isinstance(v, int) and not isinstance(v, bool))}
+    return json.dumps(dims, sort_keys=True)
+
+
+def _series(entries: Sequence[Mapping[str, Any]]
+            ) -> Dict[Tuple[str, str, str], List[float]]:
+    out: Dict[Tuple[str, str, str], List[float]] = {}
+    # ts is a strftime string on real entries and a 0.0/absent sentinel
+    # on absorbed legacy ones; stringified, sentinels sort first
+    for entry in sorted(entries, key=lambda e: str(e.get("ts", ""))):
+        mode = str(entry.get("mode", "unknown"))
+        for cell in _cells(entry):
+            ck = _cell_key(cell)
+            for k, v in cell.items():
+                if isinstance(v, float) and not isinstance(v, bool):
+                    out.setdefault((mode, ck, k), []).append(v)
+    return out
+
+
+def _ratio(latest: float, base: float) -> float:
+    if base == 0.0:
+        return float("inf") if latest != 0.0 else 1.0
+    return latest / base
+
+
+def _is_bad(ratio: float, direction: int, klass: str) -> Optional[str]:
+    """None = within noise; else the finding kind."""
+    if klass == "noisy":
+        worse = ratio < NOISY_RATIO if direction >= 0 \
+            else ratio > 1.0 / NOISY_RATIO
+        better = ratio > 1.0 / NOISY_RATIO if direction >= 0 \
+            else ratio < NOISY_RATIO
+        if direction == 0:
+            return "changepoint" if (worse or better) else None
+        if worse:
+            return "regression"
+        if better:
+            return "improvement"
+        return None
+    rtol = EXACT_RTOL
+    if abs(ratio - 1.0) <= rtol:
+        return None
+    if direction == 0:
+        return "changepoint"
+    bad = ratio < 1.0 if direction > 0 else ratio > 1.0
+    return "regression" if bad else "improvement"
+
+
+def analyze_trajectory(entries: Sequence[Mapping[str, Any]]
+                       ) -> List[TrajectoryFinding]:
+    findings: List[TrajectoryFinding] = []
+    for (mode, cell, metric), vals in _series(entries).items():
+        if len(vals) < 2:
+            continue
+        klass, direction = _classify(metric)
+        if klass == "unknown":
+            # no safe threshold for an unknown metric: treat like a
+            # noisy symmetric changepoint detector
+            klass, direction = "noisy", 0
+        # -- drift: latest vs median of priors ----------------------
+        base = median(vals[:-1])
+        latest = vals[-1]
+        r = _ratio(latest, base)
+        kind = _is_bad(r, direction, klass)
+        if kind is not None:
+            findings.append(TrajectoryFinding(
+                kind=kind, detector="drift", mode=mode, cell=cell,
+                metric=metric, baseline=float(base),
+                latest=float(latest), ratio=float(r),
+                n_points=len(vals)))
+            continue   # one finding per series is enough signal
+        # -- level shift across the whole series --------------------
+        if len(vals) >= 4:
+            for split in range(2, len(vals) - 1):
+                left = median(vals[:split])
+                right = median(vals[split:])
+                r = _ratio(right, left)
+                kind = _is_bad(r, direction, klass)
+                if kind is not None:
+                    findings.append(TrajectoryFinding(
+                        kind=kind, detector="level_shift", mode=mode,
+                        cell=cell, metric=metric, baseline=float(left),
+                        latest=float(right), ratio=float(r),
+                        n_points=len(vals)))
+                    break
+    return findings

@@ -1,0 +1,310 @@
+"""Trace-analytics report CLI (DESIGN.md §15).
+
+Turns the obs artifacts into answers: which client/hop bounded each
+fleet round and where its virtual time and bits went (critical path),
+where a trace's wall time went (span rollup), and whether the bench
+trajectories drifted (all-entries regression detection).  Emits a
+markdown summary (stdout or ``--md``) plus a JSON artifact
+(``--json``) whose schema ``repro.obs.validate`` checks
+(``tool == "repro.obs.report"``).
+
+Usage::
+
+    python -m repro.obs.report \
+        --trace results/traces/fleet.trace.json \
+        --metrics results/traces/fleet.metrics.json \
+        --trajectory results/BENCH_serving.json \
+        --json results/traces/report.json
+
+    python -m repro.obs.report --self-test   # analyzer self-check
+
+Exit codes: 0 clean; 1 when any trajectory regression/changepoint is
+found or the critical-path bits fail to reconcile with the metrics
+ledger; 2 on usage errors.  ``--self-test`` injects a synthetic 2x
+decode slowdown and exits 0 only if the analyzer flags it (CI runs
+this so a silently-broken analyzer cannot keep gating green).
+"""
+from __future__ import annotations
+
+import argparse
+import copy
+import json
+import os
+import sys
+import time
+from typing import Any, Dict, List, Optional
+
+from repro.obs.analyze import (analyze_critical_path, analyze_trajectory,
+                               reconcile_bits, span_rollup)
+from repro.obs.analyze.trajectory import load_trajectory_entries
+
+__all__ = ["build_report", "render_markdown", "self_test", "main"]
+
+REPORT_VERSION = 1
+
+
+def _load(path: str) -> Any:
+    with open(path) as f:
+        return json.load(f)
+
+
+def build_report(traces: List[str], metrics: List[str],
+                 trajectories: List[str]) -> Dict[str, Any]:
+    """Analyze the given artifacts into the report JSON document."""
+    report: Dict[str, Any] = {
+        "tool": "repro.obs.report",
+        "version": REPORT_VERSION,
+        "ts": time.time(),
+        "inputs": {"traces": traces, "metrics": metrics,
+                   "trajectories": trajectories},
+    }
+    rollup_rows: List[Dict[str, Any]] = []
+    cp_out: Optional[Dict[str, Any]] = None
+    metric_docs = [(p, _load(p)) for p in metrics]
+    for path in traces:
+        doc = _load(path)
+        for row in span_rollup(doc):
+            row = dict(row)
+            row["trace"] = os.path.basename(path)
+            rollup_rows.append(row)
+        for flow_name, prefix in (("fleet.contrib", "fleet"),
+                                  ("async.contrib", "fleet"),
+                                  ("train.cohort", "train")):
+            cp = analyze_critical_path(doc, flow_name=flow_name,
+                                       span_prefix=prefix)
+            if cp is None or not cp.rounds:
+                continue
+            if cp_out is not None:
+                break    # first flow-bearing trace wins
+            rec = None
+            for mpath, mdoc in metric_docs:
+                r = reconcile_bits(cp, mdoc)
+                if r["ledger_found"]:
+                    rec = {"ledger_ok": r["ledger_ok"],
+                           "hops": r["hops"], "metrics": mpath}
+                    break
+            cp_out = {
+                "trace": os.path.basename(path),
+                "flow": cp.flow_name,
+                "rounds": [{
+                    "round": rp.round_idx,
+                    "commit_ts_us": rp.commit_ts_us,
+                    "total_us": rp.total_us,
+                    "bound_client": rp.bound_client,
+                    "bound_dispatch_round": rp.bound_dispatch_round,
+                    "chain": rp.chain,
+                    "units": rp.units,
+                    "path_bits": rp.path_bits,
+                    "residual_us": rp.residual_us(),
+                    "segments": rp.segments(),
+                } for rp in cp.rounds],
+                "totals": cp.totals(),
+                "bits_by_hop": {str(k): v
+                                for k, v in sorted(cp.bits_by_hop.items())},
+            }
+            if rec is not None:
+                cp_out["reconciliation"] = rec
+            break
+    if cp_out is not None:
+        report["critical_path"] = cp_out
+    report["span_rollup"] = rollup_rows
+
+    traj_out: List[Dict[str, Any]] = []
+    n_flagged = 0
+    for path in trajectories:
+        entries = load_trajectory_entries(path)
+        findings = analyze_trajectory(entries)
+        rows = [f.as_dict() for f in findings]
+        n_flagged += sum(1 for f in findings
+                         if f.kind != "improvement")
+        traj_out.append({"path": path, "entries": len(entries),
+                         "findings": rows})
+    if trajectories:
+        report["trajectory"] = {"files": traj_out}
+
+    rec_ok = True
+    if cp_out is not None and "reconciliation" in cp_out:
+        rec_ok = cp_out["reconciliation"]["ledger_ok"]
+    report["summary"] = {
+        "regressions": n_flagged,
+        "rounds": len(cp_out["rounds"]) if cp_out else 0,
+        "reconciled": bool(rec_ok),
+    }
+    return report
+
+
+def _us(v: float) -> str:
+    return f"{v / 1e6:.4f}s" if abs(v) >= 1e6 else f"{v:.1f}us"
+
+
+def render_markdown(report: Dict[str, Any]) -> str:
+    out: List[str] = ["# obs report", ""]
+    s = report["summary"]
+    out.append(f"- regressions/changepoints: **{s['regressions']}**")
+    out.append(f"- fleet rounds analyzed: {s['rounds']}")
+    out.append(f"- bits ledger reconciled: {s['reconciled']}")
+    out.append("")
+    cp = report.get("critical_path")
+    if cp:
+        out.append(f"## Critical path — `{cp['trace']}` "
+                   f"({cp['flow']})")
+        out.append("")
+        out.append("| round | total | bound client | compute | network "
+                   "| buffer wait | forced flush | root wait | "
+                   "path bits |")
+        out.append("|---|---|---|---|---|---|---|---|---|")
+        for rp in cp["rounds"]:
+            seg = rp["segments"]
+            out.append(
+                f"| {rp['round']} | {_us(rp['total_us'])} "
+                f"| {rp['bound_client']} "
+                f"| {_us(seg['compute_us'])} "
+                f"| {_us(seg['network_us'])} "
+                f"| {_us(seg['buffer_wait_us'])} "
+                f"| {_us(seg['forced_flush_us'])} "
+                f"| {_us(seg['root_wait_us'])} "
+                f"| {rp['path_bits']:.0f} |")
+        out.append("")
+        tot = cp["totals"]
+        denom = sum(tot.values()) or 1.0
+        out.append("Aggregate attribution: " + ", ".join(
+            f"{k[:-3]} {100.0 * v / denom:.1f}%"
+            for k, v in tot.items()))
+        out.append("")
+        rec = cp.get("reconciliation")
+        if rec:
+            verdict = "exact" if rec["ledger_ok"] else "**MISMATCH**"
+            out.append(f"Per-hop bits vs `fleet.tier_bits` ledger "
+                       f"(`{rec['metrics']}`): {verdict}")
+            out.append("")
+            out.append("| hop | trace bits | ledger bits | match |")
+            out.append("|---|---|---|---|")
+            for hop, row in rec["hops"].items():
+                out.append(f"| {hop} | {row['trace_bits']:.0f} | "
+                           f"{row['ledger_bits']} | {row['match']} |")
+            out.append("")
+    rollup = report.get("span_rollup") or []
+    if rollup:
+        out.append("## Span rollup (wall clock, self-time order)")
+        out.append("")
+        out.append("| span | trace | count | total | self | child |")
+        out.append("|---|---|---|---|---|---|")
+        for row in rollup[:20]:
+            out.append(f"| {row['name']} | {row.get('trace', '-')} "
+                       f"| {row['count']} | {_us(row['total_us'])} "
+                       f"| {_us(row['self_us'])} "
+                       f"| {_us(row['child_us'])} |")
+        out.append("")
+    traj = report.get("trajectory")
+    if traj:
+        out.append("## Bench trajectories")
+        out.append("")
+        for f in traj["files"]:
+            out.append(f"- `{f['path']}`: {f['entries']} entries, "
+                       f"{len(f['findings'])} finding(s)")
+            for fd in f["findings"]:
+                out.append(
+                    f"  - {fd['kind']} ({fd['detector']}): "
+                    f"[{fd['mode']}] {fd['metric']} "
+                    f"{fd['baseline']:.4g} -> {fd['latest']:.4g} "
+                    f"(x{fd['ratio']:.3f}) cell={fd['cell']}")
+        out.append("")
+    return "\n".join(out)
+
+
+def self_test() -> int:
+    """Analyzer self-check: inject a synthetic 2x decode-tok/s slowdown
+    into a fabricated serving trajectory and require the analyzer to
+    flag it, and a clean copy to stay quiet."""
+    base_entry = {
+        "ts": 1.0, "mode": "smoke", "backend": "cpu",
+        "cells": [],
+        "decode": [{"n": 4, "max_seq": 64,
+                    "paged_decode_tok_s": 6000.0,
+                    "dense_decode_tok_s": 3600.0,
+                    "decode_ratio": 1.66}],
+    }
+    clean = []
+    for i in range(4):
+        e = copy.deepcopy(base_entry)
+        e["ts"] = float(i + 1)
+        # realistic ~10% run-to-run noise, inside the 0.6 band
+        jitter = 1.0 + 0.1 * ((-1) ** i)
+        e["decode"][0]["paged_decode_tok_s"] *= jitter
+        e["decode"][0]["dense_decode_tok_s"] *= jitter
+        clean.append(e)
+    quiet = analyze_trajectory(clean)
+    bad_quiet = [f for f in quiet if f.kind != "improvement"]
+    if bad_quiet:
+        print("SELF-TEST FAIL: analyzer flagged a clean trajectory:",
+              [f.as_dict() for f in bad_quiet])
+        return 1
+    regressed = copy.deepcopy(clean)
+    last = copy.deepcopy(base_entry)
+    last["ts"] = 5.0
+    last["decode"][0]["paged_decode_tok_s"] = 3000.0   # 2x slowdown
+    last["decode"][0]["decode_ratio"] = 0.83
+    regressed.append(last)
+    findings = analyze_trajectory(regressed)
+    hits = [f for f in findings
+            if f.kind == "regression"
+            and f.metric == "paged_decode_tok_s"]
+    if not hits:
+        print("SELF-TEST FAIL: 2x decode slowdown not flagged; got:",
+              [f.as_dict() for f in findings])
+        return 1
+    print("self-test ok: clean trajectory quiet, 2x decode slowdown "
+          f"flagged (ratio x{hits[0].ratio:.3f})")
+    return 0
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs.report",
+        description="analytics report over obs trace/metrics/trajectory "
+                    "artifacts")
+    ap.add_argument("--trace", action="append", default=[],
+                    help="Chrome trace JSON (repeatable)")
+    ap.add_argument("--metrics", action="append", default=[],
+                    help="metrics snapshot JSON (repeatable)")
+    ap.add_argument("--trajectory", action="append", default=[],
+                    help="bench trajectory JSON (repeatable)")
+    ap.add_argument("--json", dest="json_out",
+                    help="write the report artifact here")
+    ap.add_argument("--md", dest="md_out",
+                    help="write the markdown summary here "
+                         "(default: stdout)")
+    ap.add_argument("--self-test", action="store_true",
+                    help="run the analyzer's injected-regression "
+                         "self-check and exit")
+    args = ap.parse_args(argv)
+    if args.self_test:
+        return self_test()
+    if not (args.trace or args.metrics or args.trajectory):
+        ap.print_usage(sys.stderr)
+        print("error: nothing to analyze (pass --trace/--metrics/"
+              "--trajectory or --self-test)", file=sys.stderr)
+        return 2
+    report = build_report(args.trace, args.metrics, args.trajectory)
+    md = render_markdown(report)
+    if args.json_out:
+        d = os.path.dirname(args.json_out)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(args.json_out, "w") as f:
+            json.dump(report, f, indent=1)
+    if args.md_out:
+        d = os.path.dirname(args.md_out)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(args.md_out, "w") as f:
+            f.write(md + "\n")
+    else:
+        print(md)
+    bad = report["summary"]["regressions"] > 0 \
+        or not report["summary"]["reconciled"]
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

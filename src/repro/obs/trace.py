@@ -13,14 +13,29 @@ Design (DESIGN.md §13):
   ``ts = virtual_seconds * 1e6``.  Virtual-clock events are
   replay-deterministic: the same seed produces byte-identical virtual
   tracks, whatever the host machine is doing.
+- **Flow links.**  :func:`flow_start` / :func:`flow_step` /
+  :func:`flow_end` emit Chrome flow events (``ph`` s/t/f sharing an
+  ``id``), which Perfetto renders as causality arrows between the
+  enclosing slices.  The FL runtimes thread a flow id per contribution
+  (client dispatch → edge flush → root commit) so a committed round can
+  be walked back to the exact client/hop chain that bounded it — the
+  input the critical-path engine in ``obs/analyze`` consumes.
 - **Disabled fast path.**  With no tracer installed the module-level
   helpers return a shared no-op span / return immediately — no
   allocation, no branching beyond one global load — so instrumentation
   can stay unconditional on hot paths (benchmarks/bench_obs.py asserts
   the cost is < 3% of a fused serve pass).
+- **Bounded memory.**  The event buffer is capped (``max_events``,
+  default 1e6).  Once full, *new* events are dropped — drop-newest, so
+  the retained prefix stays a consistent trace with no dangling flow
+  arrows into the void of evicted history — and counted in
+  ``Tracer.dropped``, mirrored to the ``obs.dropped_events`` registry
+  counter and the export metadata.  Multi-hour fleet runs therefore
+  plateau at the cap instead of growing without bound.
 - **Export** is the Chrome trace-event JSON format (``"traceEvents"``
-  list of ``ph`` X/i/C/M events, microsecond timestamps), loadable in
-  Perfetto (https://ui.perfetto.dev) or ``chrome://tracing``.
+  list of ``ph`` X/i/C/M/s/t/f events, microsecond timestamps),
+  loadable in Perfetto (https://ui.perfetto.dev) or
+  ``chrome://tracing``.
 
 The module is stdlib-only.  :func:`kernel_scope` lazily imports jax to
 wrap Pallas kernel launch sites in ``jax.named_scope`` so kernels show
@@ -40,11 +55,17 @@ from typing import Any, Dict, List, Optional
 __all__ = [
     "Tracer", "configure", "install", "uninstall", "get_tracer",
     "active", "span", "instant", "counter", "set_virtual_time",
+    "clear_virtual_time", "flow_start", "flow_step", "flow_end",
     "traced", "kernel_scope", "export",
 ]
 
 WALL_PID = 1      # wall-clock process in the exported trace
 VIRTUAL_PID = 2   # virtual-clock (simulator) process
+
+# Event-buffer cap (satellite: bounded tracer memory).  Generous — a
+# traced fleet smoke is ~1e3 events — but finite: at ~200 bytes/event
+# the worst case is ~200 MB, not an unbounded multi-hour leak.
+DEFAULT_MAX_EVENTS = 1_000_000
 
 
 class _NullSpan:
@@ -95,11 +116,15 @@ class Span:
 class Tracer:
     """Collects trace events; export with :meth:`export_chrome`."""
 
-    def __init__(self, meta: Optional[Dict[str, Any]] = None):
+    def __init__(self, meta: Optional[Dict[str, Any]] = None,
+                 max_events: int = DEFAULT_MAX_EVENTS):
         self._origin = time.perf_counter()
         self.virtual_now: Optional[float] = None
         self.events: List[Dict[str, Any]] = []
         self.meta: Dict[str, Any] = dict(meta or {})
+        self.max_events = int(max_events)
+        self.dropped = 0
+        self._drop_counter: Optional[Any] = None
         self._tids: Dict[str, int] = {}
 
     # -- clocks -----------------------------------------------------
@@ -108,6 +133,13 @@ class Tracer:
 
     def set_virtual_time(self, t: float) -> None:
         self.virtual_now = float(t)
+
+    def clear_virtual_time(self) -> None:
+        """Forget the virtual clock: subsequent events (and spans that
+        *close* after this) emit on the wall pid only.  Runtimes call
+        this on exit so a later run on the same tracer cannot inherit a
+        stale simulated clock."""
+        self.virtual_now = None
 
     # -- tracks -----------------------------------------------------
     def _tid(self, track: Optional[str]) -> int:
@@ -119,6 +151,18 @@ class Tracer:
         return tid
 
     # -- emit -------------------------------------------------------
+    def _emit(self, ev: Dict[str, Any]) -> None:
+        """Append one event, honoring the buffer cap (drop-newest)."""
+        if len(self.events) >= self.max_events:
+            if self.dropped == 0:
+                # lazy: keep the hot no-drop path free of the import
+                from repro.obs import metrics as _metrics
+                self._drop_counter = _metrics.counter("obs.dropped_events")
+            self.dropped += 1
+            self._drop_counter.inc()
+            return
+        self.events.append(ev)
+
     def span(self, name: str, cat: str = "", track: Optional[str] = None,
              **args) -> Span:
         return Span(self, name, cat, track, args)
@@ -134,7 +178,7 @@ class Tracer:
             ev["cat"] = sp.cat
         if sp.args:
             ev["args"] = sp.args
-        self.events.append(ev)
+        self._emit(ev)
         if sp._v0 is not None and self.virtual_now is not None:
             vts = sp._v0 * 1e6
             # clamp: zero-width virtual spans would be invisible
@@ -143,7 +187,7 @@ class Tracer:
             vev["pid"] = VIRTUAL_PID
             vev["ts"] = vts
             vev["dur"] = vdur
-            self.events.append(vev)
+            self._emit(vev)
 
     def instant(self, name: str, track: Optional[str] = None, **args):
         tid = self._tid(track)
@@ -151,24 +195,56 @@ class Tracer:
                               "name": name, "ts": self.wall_us(), "s": "t"}
         if args:
             ev["args"] = args
-        self.events.append(ev)
+        self._emit(ev)
         if self.virtual_now is not None:
             vev = dict(ev)
             vev["pid"] = VIRTUAL_PID
             vev["ts"] = self.virtual_now * 1e6
-            self.events.append(vev)
+            self._emit(vev)
 
     def counter(self, name: str, value: float, track: Optional[str] = None):
         ev: Dict[str, Any] = {"ph": "C", "pid": WALL_PID,
                               "tid": self._tid(track), "name": name,
                               "ts": self.wall_us(),
                               "args": {"value": float(value)}}
-        self.events.append(ev)
+        self._emit(ev)
         if self.virtual_now is not None:
             vev = dict(ev)
             vev["pid"] = VIRTUAL_PID
             vev["ts"] = self.virtual_now * 1e6
-            self.events.append(vev)
+            self._emit(vev)
+
+    def _flow(self, ph: str, name: str, flow_id: int,
+              track: Optional[str], args: Dict[str, Any]) -> None:
+        tid = self._tid(track)
+        ev: Dict[str, Any] = {"ph": ph, "pid": WALL_PID, "tid": tid,
+                              "name": name, "cat": "flow",
+                              "id": int(flow_id), "ts": self.wall_us()}
+        if ph == "f":
+            ev["bp"] = "e"   # bind to enclosing slice, not the next one
+        if args:
+            ev["args"] = args
+        self._emit(ev)
+        if self.virtual_now is not None:
+            vev = dict(ev)
+            vev["pid"] = VIRTUAL_PID
+            vev["ts"] = self.virtual_now * 1e6
+            self._emit(vev)
+
+    def flow_start(self, name: str, flow_id: int,
+                   track: Optional[str] = None, **args) -> None:
+        """Open a flow arrow (ph "s") anchored at the current clocks."""
+        self._flow("s", name, flow_id, track, args)
+
+    def flow_step(self, name: str, flow_id: int,
+                  track: Optional[str] = None, **args) -> None:
+        """Continue a flow (ph "t") through an intermediate hop."""
+        self._flow("t", name, flow_id, track, args)
+
+    def flow_end(self, name: str, flow_id: int,
+                 track: Optional[str] = None, **args) -> None:
+        """Terminate a flow (ph "f", bp "e") at its consuming slice."""
+        self._flow("f", name, flow_id, track, args)
 
     # -- export -----------------------------------------------------
     def _metadata_events(self) -> List[Dict[str, Any]]:
@@ -185,9 +261,12 @@ class Tracer:
         return evs
 
     def to_chrome(self) -> Dict[str, Any]:
+        meta = dict(self.meta)
+        if self.dropped:
+            meta["dropped_events"] = self.dropped
         return {"traceEvents": self._metadata_events() + self.events,
                 "displayTimeUnit": "ms",
-                "metadata": self.meta}
+                "metadata": meta}
 
     def export_chrome(self, path: str) -> str:
         d = os.path.dirname(path)
@@ -216,9 +295,10 @@ def uninstall() -> Optional[Tracer]:
     return t
 
 
-def configure(meta: Optional[Dict[str, Any]] = None) -> Tracer:
+def configure(meta: Optional[Dict[str, Any]] = None,
+              max_events: int = DEFAULT_MAX_EVENTS) -> Tracer:
     """Create and install a fresh global tracer."""
-    return install(Tracer(meta=meta))
+    return install(Tracer(meta=meta, max_events=max_events))
 
 
 def get_tracer() -> Optional[Tracer]:
@@ -253,6 +333,33 @@ def set_virtual_time(t_virtual: float) -> None:
     t = _tracer
     if t is not None:
         t.set_virtual_time(t_virtual)
+
+
+def clear_virtual_time() -> None:
+    t = _tracer
+    if t is not None:
+        t.clear_virtual_time()
+
+
+def flow_start(name: str, flow_id: int, track: Optional[str] = None,
+               **args) -> None:
+    t = _tracer
+    if t is not None:
+        t.flow_start(name, flow_id, track, **args)
+
+
+def flow_step(name: str, flow_id: int, track: Optional[str] = None,
+              **args) -> None:
+    t = _tracer
+    if t is not None:
+        t.flow_step(name, flow_id, track, **args)
+
+
+def flow_end(name: str, flow_id: int, track: Optional[str] = None,
+             **args) -> None:
+    t = _tracer
+    if t is not None:
+        t.flow_end(name, flow_id, track, **args)
 
 
 def traced(name: Optional[str] = None, cat: str = "",

@@ -16,6 +16,11 @@ Validates the JSON artifact shapes this repo's tooling emits:
   ``checker``/``path``/``line``/``severity``/``message``/``status``,
   and a summary consistent with the list.  Auto-detected via the
   ``tool`` field, or forced with ``--analysis``.
+- **Analytics report** (``python -m repro.obs.report --json``):
+  ``tool == "repro.obs.report"`` — per-round critical-path
+  decompositions (numeric segment times, exact bits reconciliation
+  verdict), span-tree rollups, and trajectory findings, with a summary
+  consistent with the sections.  Auto-detected via the ``tool`` field.
 
 CLI (exit 1 on any invalid file)::
 
@@ -29,9 +34,11 @@ import sys
 from typing import Any, Dict, List, Tuple
 
 __all__ = ["validate_trace", "validate_metrics", "validate_analysis",
-           "validate_file", "main"]
+           "validate_report", "validate_file", "main"]
 
-_PHASES = {"X", "i", "I", "C", "M"}
+# s/t/f are Chrome flow events (causality arrows between slices).
+_PHASES = {"X", "i", "I", "C", "M", "s", "t", "f"}
+_FLOW_PHASES = {"s", "t", "f"}
 _META_NAMES = {"process_name", "thread_name", "process_sort_index",
                "thread_sort_index", "process_labels"}
 _KINDS = {"counter", "gauge", "histogram"}
@@ -73,6 +80,11 @@ def validate_trace(doc: Any) -> List[str]:
             errors.append(f"{where}: bad ts {ev.get('ts')!r}")
         if ph == "X" and (not _num(ev.get("dur")) or ev["dur"] < 0):
             errors.append(f"{where}: bad dur {ev.get('dur')!r}")
+        if ph in _FLOW_PHASES:
+            if not isinstance(ev.get("id"), int):
+                errors.append(f"{where}: flow event needs integer 'id'")
+            if ph == "f" and ev.get("bp") not in (None, "e"):
+                errors.append(f"{where}: bad bp {ev.get('bp')!r}")
         if ph == "C":
             args = ev.get("args")
             if (not isinstance(args, dict) or not args
@@ -167,6 +179,110 @@ def validate_analysis(doc: Any) -> List[str]:
     return errors
 
 
+_REPORT_TOOL = "repro.obs.report"
+_SEGMENTS = ("compute_us", "network_us", "buffer_wait_us",
+             "forced_flush_us", "root_wait_us")
+_FINDING_KINDS = {"regression", "improvement", "changepoint"}
+
+
+def validate_report(doc: Any) -> List[str]:
+    errors: List[str] = []
+    if not isinstance(doc, dict):
+        return ["report: top level must be an object"]
+    if doc.get("tool") != _REPORT_TOOL:
+        errors.append(f"report: 'tool' must be {_REPORT_TOOL!r}, "
+                      f"got {doc.get('tool')!r}")
+    if not _num(doc.get("ts")):
+        errors.append("report: missing numeric 'ts'")
+    if not isinstance(doc.get("version"), int):
+        errors.append("report: missing integer 'version'")
+    cp = doc.get("critical_path")
+    if cp is not None:
+        if not isinstance(cp, dict) \
+                or not isinstance(cp.get("rounds"), list):
+            errors.append("report: critical_path needs a 'rounds' list")
+        else:
+            for i, r in enumerate(cp["rounds"]):
+                where = f"critical_path.rounds[{i}]"
+                if not isinstance(r, dict):
+                    errors.append(f"{where}: not an object")
+                    continue
+                if not isinstance(r.get("round"), int):
+                    errors.append(f"{where}: missing integer 'round'")
+                if not _num(r.get("total_us")) or r["total_us"] < 0:
+                    errors.append(f"{where}: bad total_us")
+                segs = r.get("segments")
+                if not isinstance(segs, dict) \
+                        or not all(_num(segs.get(k)) for k in _SEGMENTS):
+                    errors.append(
+                        f"{where}: segments must carry numeric "
+                        + "/".join(_SEGMENTS))
+            rec = cp.get("reconciliation")
+            if rec is not None and (not isinstance(rec, dict)
+                                    or not isinstance(
+                                        rec.get("ledger_ok"), bool)):
+                errors.append("report: reconciliation needs boolean "
+                              "'ledger_ok'")
+    rollup = doc.get("span_rollup")
+    if rollup is not None:
+        if not isinstance(rollup, list):
+            errors.append("report: span_rollup must be a list")
+        else:
+            for i, row in enumerate(rollup):
+                where = f"span_rollup[{i}]"
+                if not isinstance(row, dict) \
+                        or not isinstance(row.get("name"), str) \
+                        or not isinstance(row.get("count"), int) \
+                        or not _num(row.get("total_us")) \
+                        or not _num(row.get("self_us")):
+                    errors.append(f"{where}: needs name/count/total_us/"
+                                  "self_us")
+    traj = doc.get("trajectory")
+    n_findings = 0
+    if traj is not None:
+        if not isinstance(traj, dict) \
+                or not isinstance(traj.get("files"), list):
+            errors.append("report: trajectory needs a 'files' list")
+        else:
+            for i, f in enumerate(traj["files"]):
+                where = f"trajectory.files[{i}]"
+                if not isinstance(f, dict) \
+                        or not isinstance(f.get("path"), str) \
+                        or not isinstance(f.get("entries"), int):
+                    errors.append(f"{where}: needs path/entries")
+                    continue
+                findings = f.get("findings")
+                if not isinstance(findings, list):
+                    errors.append(f"{where}: missing 'findings' list")
+                    continue
+                for j, fd in enumerate(findings):
+                    fwhere = f"{where}.findings[{j}]"
+                    if not isinstance(fd, dict) \
+                            or fd.get("kind") not in _FINDING_KINDS \
+                            or not isinstance(fd.get("metric"), str) \
+                            or not _num(fd.get("ratio")):
+                        errors.append(f"{fwhere}: needs kind/metric/ratio")
+                        continue
+                    if fd["kind"] != "improvement":
+                        n_findings += 1
+    summary = doc.get("summary")
+    if not isinstance(summary, dict):
+        errors.append("report: missing 'summary' object")
+    else:
+        if not isinstance(summary.get("regressions"), int) \
+                or summary["regressions"] < 0:
+            errors.append("report: summary.regressions must be a "
+                          "non-negative integer")
+        elif traj is not None and isinstance(traj, dict) \
+                and isinstance(traj.get("files"), list) \
+                and summary["regressions"] != n_findings:
+            errors.append(
+                f"report: summary.regressions={summary['regressions']} "
+                f"but {n_findings} regression/changepoint finding(s) "
+                "listed")
+    return errors
+
+
 def validate_file(path: str, kind: str = "auto"
                   ) -> Tuple[str, List[str]]:
     """Auto-detect artifact kind (or force one); returns
@@ -182,6 +298,8 @@ def validate_file(path: str, kind: str = "auto"
         return "trace", validate_trace(doc)
     if isinstance(doc, dict) and doc.get("tool") == _ANALYSIS_TOOL:
         return "analysis", validate_analysis(doc)
+    if isinstance(doc, dict) and doc.get("tool") == _REPORT_TOOL:
+        return "report", validate_report(doc)
     return "metrics", validate_metrics(doc)
 
 

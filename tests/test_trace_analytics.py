@@ -1,0 +1,395 @@
+"""PR 10 trace analytics (repro/obs/analyze/, DESIGN.md §15): causal
+flow links through the fleet runtimes, per-round critical-path
+attribution priced by the latency models, exact trace-vs-ledger bit
+reconciliation, span-tree rollups, bench-trajectory drift detection,
+and the tracer's bounded-memory drop policy.
+
+The acceptance anchor: on a ZERO-JITTER BARRIER fleet run the critical
+path of every committed round collapses to the slowest participating
+client's compute + uplink chain — all wait segments are zero and the
+decomposition telescopes exactly."""
+import json
+import os
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.obs import validate as obs_validate
+from repro.obs.analyze import (analyze_critical_path, analyze_trajectory,
+                               reconcile_bits, span_rollup)
+from repro.obs.analyze.trajectory import load_trajectory_entries
+from repro.obs.metrics import Registry
+from repro.obs.monitors import ObsWarning
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture
+def registry():
+    old = obs_metrics.get_registry()
+    reg = obs_metrics.set_registry(Registry())
+    yield reg
+    obs_metrics.set_registry(old)
+
+
+def _run_barrier_fleet(registry, rounds=4):
+    """A fully deterministic (zero-jitter) barrier fleet: 8 clients in
+    2 edges, persistent per-client speed spread, no per-dispatch
+    randomness, identical edge->root links."""
+    from repro.core import RandK
+    from repro.core.participation import EdgeSNice
+    from repro.fl import (ConstantLatency, FleetConfig, HierarchicalFleet,
+                          LognormalLatency, StreamedGradientWorkload,
+                          TierConfig)
+
+    n, d = 8, 16
+    samp = EdgeSNice(bounds=(0, 4, 8), s=4)  # every client, every round
+    wl = StreamedGradientWorkload(sampler=samp, d=d, compressor=RandK(k=4),
+                                  gamma=0.02, a=0.1, b=0.3,
+                                  m_per_client=2, data_seed=0)
+    # sigma=0: per-dispatch jitter multiplier is exactly 1, leaving only
+    # the persistent per-client lognormal spread -> deterministic,
+    # heterogeneous, round-independent job pricing
+    lat = LognormalLatency(compute_s=0.5, sigma=0.0, client_sigma=0.8,
+                           bandwidth_bps=2e4, seed=3)
+    link = ConstantLatency(compute_s=0.05)   # same for both edges
+    fcfg = FleetConfig(tiers=(TierConfig(aggregators=2, latency=link),),
+                       buffer_size=None)     # barrier root
+    fleet = HierarchicalFleet(wl, fcfg, lat)
+    tracer = obs_trace.configure()
+    try:
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", ObsWarning)
+            fs, res = fleet.run(jax.random.key(1), np.zeros(d, np.float32),
+                                rounds)
+    finally:
+        obs_trace.uninstall()
+    return tracer.to_chrome(), res, wl, lat
+
+
+# ----------------------------------------------------------------------
+# critical path: the zero-jitter barrier acceptance
+# ----------------------------------------------------------------------
+
+def test_zero_jitter_barrier_round_is_bound_by_slowest_client(registry):
+    """On a zero-jitter barrier run each round's critical path is
+    entirely the slowest participating client's compute + uplink chain:
+    every wait segment is zero, the segment decomposition telescopes to
+    the commit-minus-dispatch total, and the bounding client is the
+    argmax of the latency model's own per-client pricing."""
+    rounds = 4
+    doc, res, wl, lat = _run_barrier_fleet(registry, rounds=rounds)
+    cp = analyze_critical_path(doc)
+    assert cp is not None and len(cp.rounds) == rounds
+
+    # participants per dispatch round, straight from the flow graph
+    contribs = [e for e in doc["traceEvents"]
+                if e.get("ph") == "s" and e["name"] == "fleet.contrib"
+                and e["pid"] == obs_trace.VIRTUAL_PID]
+    by_round = {}
+    for c in contribs:
+        by_round.setdefault(c["args"]["round"], []).append(c["args"])
+
+    for rp in cp.rounds:
+        # 1) all wait segments are zero (barrier + zero jitter)
+        assert rp.buffer_wait_us == pytest.approx(0.0, abs=1e-6)
+        assert rp.forced_flush_us == pytest.approx(0.0, abs=1e-6)
+        assert rp.root_wait_us == pytest.approx(0.0, abs=1e-6)
+        # 2) the decomposition telescopes exactly (fp rounding only)
+        assert abs(rp.residual_us()) < 1e-6 * max(rp.total_us, 1.0)
+        assert rp.compute_us + rp.network_us == \
+            pytest.approx(rp.total_us, rel=1e-9)
+        # 3) the bound client is the latency model's own slowest chain,
+        #    recomputed independently of the trace
+        parts = by_round[rp.bound_dispatch_round]
+        assert len(parts) == 8     # s=4 per edge x 2 edges
+        expect = max(
+            parts, key=lambda a: (lambda t: t.compute_s + t.network_s)(
+                lat.job(a["client"], rp.bound_dispatch_round,
+                        wl.wire_bits)))
+        assert rp.bound_client == expect["client"]
+        # chain = client contribution -> edge flush message
+        assert len(rp.chain) == 2
+
+    # links priced identically for both edges: the 0.05 s edge->root leg
+    # is on every round's path
+    for rp in cp.rounds:
+        t = lat.job(rp.bound_client, rp.bound_dispatch_round, wl.wire_bits)
+        assert rp.compute_us == pytest.approx((t.compute_s + 0.05) * 1e6)
+        assert rp.network_us == pytest.approx(t.network_s * 1e6)
+
+
+def test_barrier_fleet_bits_reconcile_exactly_with_ledger(registry):
+    """Summing ``bits`` over the trace's contrib flow-starts (hop 0)
+    and flush spans (hop k+1) reproduces the ``fleet.tier_bits.hop<k>``
+    gauges EXACTLY (atol=0): trace and ledger are two exports of the
+    same accounting."""
+    doc, res, wl, lat = _run_barrier_fleet(registry)
+    cp = analyze_critical_path(doc)
+    rec = reconcile_bits(cp, registry.snapshot(), atol=0.0)
+    assert rec["ledger_found"] and rec["ledger_ok"]
+    assert all(h["match"] for h in rec["hops"].values())
+    assert set(cp.bits_by_hop) == {0, 1}
+    assert cp.bits_by_hop[0] == float(
+        registry.gauge("fleet.tier_bits.hop0").value)
+    assert sum(cp.bits_by_hop.values()) == float(
+        registry.gauge("fleet.tier_bits").value) == float(res.bits_cum[-1])
+
+
+def test_critical_path_returns_none_without_flow_graph():
+    doc = {"traceEvents": [{"ph": "X", "pid": obs_trace.WALL_PID,
+                            "tid": 1, "name": "serve.step", "ts": 0.0,
+                            "dur": 5.0}]}
+    assert analyze_critical_path(doc) is None
+
+
+# ----------------------------------------------------------------------
+# flow events: emission + validator round-trip
+# ----------------------------------------------------------------------
+
+def test_flow_events_roundtrip_through_validator(tmp_path):
+    t = obs_trace.configure()
+    try:
+        with obs_trace.span("dispatch", track="fleet"):
+            obs_trace.flow_start("fleet.contrib", 7, track="fleet",
+                                 client=3, bits=64.0)
+        with obs_trace.span("flush", track="fleet"):
+            obs_trace.flow_step("fleet.contrib", 7, track="fleet")
+        with obs_trace.span("commit", track="fleet"):
+            obs_trace.flow_end("fleet.contrib", 7, track="fleet")
+    finally:
+        obs_trace.uninstall()
+    phases = [e["ph"] for e in t.events if e.get("cat") == "flow"]
+    assert phases == ["s", "t", "f"]
+    ends = [e for e in t.events if e.get("ph") == "f"]
+    assert ends[0]["bp"] == "e" and ends[0]["id"] == 7
+    path = os.path.join(tmp_path, "flow.trace.json")
+    t.export_chrome(path)
+    kind, errors = obs_validate.validate_file(path)
+    assert (kind, errors) == ("trace", [])
+
+
+def test_validator_rejects_malformed_flow_events():
+    base = {"ph": "s", "pid": 1, "tid": 1, "name": "f", "cat": "flow",
+            "ts": 0.0}
+    assert obs_validate.validate_trace(
+        {"traceEvents": [dict(base, id=1)]}) == []
+    # flow events need an integer id
+    assert obs_validate.validate_trace({"traceEvents": [base]})
+    assert obs_validate.validate_trace(
+        {"traceEvents": [dict(base, id="seven")]})
+    # binding point on "f" must be "e" (or absent)
+    bad = dict(base, ph="f", id=1, bp="x")
+    assert obs_validate.validate_trace({"traceEvents": [bad]})
+
+
+# ----------------------------------------------------------------------
+# dual-clock export edge cases (never published / cleared mid-run)
+# ----------------------------------------------------------------------
+
+def test_never_published_virtual_clock_exports_wall_only(tmp_path):
+    t = obs_trace.configure()
+    try:
+        with obs_trace.span("fleet.dispatch", track="fleet"):
+            obs_trace.flow_start("fleet.contrib", 1, track="fleet")
+        obs_trace.instant("fleet.flush", track="fleet")
+    finally:
+        obs_trace.uninstall()
+    doc = t.to_chrome()
+    data = [e for e in doc["traceEvents"] if e.get("ph") != "M"]
+    assert data and {e["pid"] for e in data} == {obs_trace.WALL_PID}
+    path = os.path.join(tmp_path, "wall.trace.json")
+    t.export_chrome(path)
+    assert obs_validate.validate_file(path) == ("trace", [])
+
+
+def test_virtual_clock_cleared_mid_run_truncates_cleanly(tmp_path):
+    """A runtime that publishes the virtual clock then finishes (run 1)
+    must not leak virtual-clock twins into a later untraced-virtual
+    phase (run 2) — the exact bleed ``clear_virtual_time`` exists to
+    prevent.  Spans OPEN at clear time lose their twin (no mixed-clock
+    span: a twin priced on a clock that died mid-span would lie)."""
+    t = obs_trace.configure()
+    try:
+        obs_trace.set_virtual_time(1.0)
+        with obs_trace.span("run1.step", track="sim"):
+            pass
+        # span open across the clear: no virtual twin may be emitted
+        with obs_trace.span("run1.tail", track="sim"):
+            obs_trace.clear_virtual_time()
+        with obs_trace.span("run2.step", track="sim"):
+            pass
+    finally:
+        obs_trace.uninstall()
+    virt = [e for e in t.events if e["pid"] == obs_trace.VIRTUAL_PID]
+    assert {e["name"] for e in virt} == {"run1.step"}
+    path = os.path.join(tmp_path, "cleared.trace.json")
+    t.export_chrome(path)
+    assert obs_validate.validate_file(path) == ("trace", [])
+
+
+# ----------------------------------------------------------------------
+# tracer memory bound + drop counter
+# ----------------------------------------------------------------------
+
+def test_tracer_drops_newest_beyond_cap_and_counts(registry, tmp_path):
+    t = obs_trace.configure(max_events=5)
+    try:
+        for i in range(9):
+            obs_trace.instant(f"e{i}", track="x")
+    finally:
+        obs_trace.uninstall()
+    assert len(t.events) == 5 and t.dropped == 4
+    # retained prefix is the OLDEST events (drop-newest keeps the trace
+    # causally consistent: no arrows into the void)
+    assert [e["name"] for e in t.events] == [f"e{i}" for i in range(5)]
+    assert registry.counter("obs.dropped_events").value == 4.0
+    doc = t.to_chrome()
+    assert doc["metadata"]["dropped_events"] == 4
+    path = os.path.join(tmp_path, "capped.trace.json")
+    t.export_chrome(path)
+    assert obs_validate.validate_file(path) == ("trace", [])
+
+
+# ----------------------------------------------------------------------
+# span rollup
+# ----------------------------------------------------------------------
+
+def test_span_rollup_self_vs_child_time():
+    doc = {"traceEvents": [
+        {"ph": "X", "pid": 1, "tid": 1, "name": "outer", "ts": 0.0,
+         "dur": 100.0},
+        {"ph": "X", "pid": 1, "tid": 1, "name": "inner", "ts": 10.0,
+         "dur": 30.0},
+        {"ph": "X", "pid": 1, "tid": 1, "name": "inner", "ts": 50.0,
+         "dur": 20.0},
+        # other lane: must not nest under the tid-1 stack
+        {"ph": "X", "pid": 1, "tid": 2, "name": "other", "ts": 0.0,
+         "dur": 7.0},
+    ]}
+    rows = {r["name"]: r for r in span_rollup(doc)}
+    assert rows["outer"]["count"] == 1
+    assert rows["outer"]["total_us"] == pytest.approx(100.0)
+    assert rows["outer"]["child_us"] == pytest.approx(50.0)
+    assert rows["outer"]["self_us"] == pytest.approx(50.0)
+    assert rows["inner"]["count"] == 2
+    assert rows["inner"]["self_us"] == pytest.approx(50.0)
+    assert rows["other"]["self_us"] == pytest.approx(7.0)
+
+
+# ----------------------------------------------------------------------
+# trajectory analyzer
+# ----------------------------------------------------------------------
+
+def _serving_entry(ts, tok_s):
+    return {"ts": ts, "mode": "smoke", "backend": "cpu", "cells": [],
+            "decode": [{"batch": 8, "max_seq": 64,
+                        "paged_decode_tok_s": float(tok_s)}]}
+
+
+def test_trajectory_flags_injected_2x_decode_slowdown():
+    entries = [_serving_entry(f"2026-08-0{i+1}T00:00:00", v)
+               for i, v in enumerate([6000.0, 6600.0, 5700.0])]
+    assert analyze_trajectory(entries) == []     # ±10% jitter: quiet
+    entries.append(_serving_entry("2026-08-04T00:00:00", 3000.0))
+    findings = analyze_trajectory(entries)
+    assert [f.kind for f in findings] == ["regression"]
+    f = findings[0]
+    assert f.metric == "paged_decode_tok_s" and f.detector == "drift"
+    assert f.ratio == pytest.approx(0.5, rel=0.01)
+
+
+def test_trajectory_reports_improvement_not_regression():
+    entries = [_serving_entry(f"2026-08-0{i+1}T00:00:00", v)
+               for i, v in enumerate([6000.0, 6100.0, 5900.0, 12000.0])]
+    findings = analyze_trajectory(entries)
+    assert [f.kind for f in findings] == ["improvement"]
+
+
+def test_trajectory_exact_counter_must_not_move():
+    def entry(ts, bits):
+        return {"ts": ts, "mode": "smoke", "cells": [
+            {"n": 64, "total_mbits": float(bits)}]}
+    quiet = [entry("a", 14.044), entry("b", 14.044)]
+    assert analyze_trajectory(quiet) == []
+    moved = quiet + [entry("c", 14.046)]
+    findings = analyze_trajectory(moved)
+    assert len(findings) == 1 and findings[0].kind == "regression"
+
+
+def test_trajectory_level_shift_catches_walked_down_baseline():
+    """A sustained step that predates the latest run: drift (latest vs
+    prior median) stays quiet once the step dominates the median, but
+    the level-shift split still finds it."""
+    vals = [6000.0, 6100.0, 2900.0, 3000.0, 3100.0, 2950.0]
+    entries = [_serving_entry(f"2026-08-0{i+1}T00:00:00", v)
+               for i, v in enumerate(vals)]
+    findings = analyze_trajectory(entries)
+    assert [f.detector for f in findings] == ["level_shift"]
+    assert findings[0].kind == "regression"
+
+
+def test_committed_trajectories_are_quiet():
+    """The analyzer must not cry wolf on the repo's own committed bench
+    history (serving, fleet, and the converted kernels trajectory)."""
+    for rel in ("results/BENCH_serving.json", "results/BENCH_fleet.json",
+                "results/bench/kernels.json"):
+        path = os.path.join(REPO, rel)
+        entries = load_trajectory_entries(path)
+        assert entries, rel
+        bad = [f for f in analyze_trajectory(entries)
+               if f.kind != "improvement"]
+        assert bad == [], (rel, [f.as_dict() for f in bad])
+
+
+def test_legacy_bare_list_absorbed_as_one_entry(tmp_path):
+    p = os.path.join(tmp_path, "legacy.json")
+    with open(p, "w") as f:
+        json.dump([[{"name": "k", "us_unfused": 1.0}],
+                   [{"name": "k2", "us_unfused": 2.0}]], f)
+    entries = load_trajectory_entries(p)
+    assert len(entries) == 1 and entries[0]["mode"] == "legacy"
+    assert [c["name"] for c in entries[0]["cells"]] == ["k", "k2"]
+
+
+# ----------------------------------------------------------------------
+# report CLI + schema
+# ----------------------------------------------------------------------
+
+def test_report_end_to_end_over_traced_fleet(registry, tmp_path):
+    from repro.obs import report as obs_report
+
+    doc, res, wl, lat = _run_barrier_fleet(registry)
+    trace_path = os.path.join(tmp_path, "fleet.trace.json")
+    with open(trace_path, "w") as f:
+        json.dump(doc, f)
+    metrics_path = os.path.join(tmp_path, "fleet.metrics.json")
+    registry.write_snapshot(metrics_path)
+    json_out = os.path.join(tmp_path, "report.json")
+    md_out = os.path.join(tmp_path, "report.md")
+    rc = obs_report.main(["--trace", trace_path,
+                          "--metrics", metrics_path,
+                          "--trajectory",
+                          os.path.join(REPO, "results/BENCH_fleet.json"),
+                          "--json", json_out, "--md", md_out])
+    assert rc == 0
+    with open(json_out) as f:
+        rep = json.load(f)
+    assert obs_validate.validate_report(rep) == []
+    assert obs_validate.validate_file(json_out) == ("report", [])
+    assert rep["summary"]["reconciled"] is True
+    assert rep["summary"]["regressions"] == 0
+    assert rep["critical_path"]["rounds"]
+    with open(md_out) as f:
+        md = f.read()
+    assert "Critical path" in md and "reconcil" in md.lower()
+
+
+def test_report_self_test_catches_injected_regression():
+    from repro.obs import report as obs_report
+    assert obs_report.self_test() == 0
